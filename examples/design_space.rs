@@ -1,0 +1,119 @@
+//! Design-space exploration: the accuracy/area/speed/power trade-off
+//! surface around the paper's chosen configuration — the study a
+//! hardware team would run before taping out.
+//!
+//! Sweeps sampling period (k), basis-bus width, and t-unit variant;
+//! reports error, gates, fmax and power per point and marks the Pareto
+//! frontier on (max error, gates).
+//!
+//! ```sh
+//! cargo run --release --example design_space
+//! ```
+
+use crspline::analysis::metrics::sweep_full;
+use crspline::approx::{Boundary, CatmullRom, TanhApprox};
+use crspline::hw::area::{catmull_rom_resources, catmull_rom_tlut_resources};
+use crspline::hw::datapath::TVariant;
+use crspline::hw::power::{estimate, measure_activity, trace_uniform};
+use crspline::hw::timing::{cr_poly_timing, cr_tlut_timing};
+use crspline::util::render_table;
+
+struct Point {
+    name: String,
+    max_err: f64,
+    rms: f64,
+    gates: u64,
+    fmax: f64,
+    power_uw: f64,
+}
+
+fn main() {
+    let mut points = Vec::new();
+    let trace = trace_uniform(8192, 1);
+
+    for k in 1..=4u32 {
+        let tbits = 13 - k;
+        for bf in [12u32, 16, 3 * tbits] {
+            let bf = bf.min(3 * tbits);
+            for tlut in [false, true] {
+                let cr = if bf == 3 * tbits {
+                    CatmullRom::new(k, Boundary::Extend)
+                } else {
+                    CatmullRom::new(k, Boundary::Extend).with_basis_frac(bf)
+                };
+                let stats = sweep_full(&cr);
+                let (res, timing) = if tlut {
+                    (catmull_rom_tlut_resources(cr.stored_entries(), tbits, bf.min(16)),
+                     cr_tlut_timing(tbits, bf.min(16)))
+                } else {
+                    (catmull_rom_resources(cr.stored_entries(), tbits, bf.min(16)),
+                     cr_poly_timing(tbits, bf.min(16)))
+                };
+                let variant = if tlut { TVariant::Lut { addr_bits: 8 } } else { TVariant::Poly };
+                let act = measure_activity(k, variant, &trace);
+                let fmax = timing.fmax_mhz();
+                let p = estimate(&res, &act, fmax.min(500.0));
+                points.push(Point {
+                    name: format!(
+                        "k{k}/d{}/b{bf}{}",
+                        1 << (k + 2),
+                        if tlut { "/tlut" } else { "" }
+                    ),
+                    max_err: stats.max,
+                    rms: stats.rms,
+                    gates: res.gates(),
+                    fmax,
+                    power_uw: p.total_uw(),
+                });
+            }
+        }
+    }
+
+    // Pareto frontier on (max_err, gates): a point is dominated if some
+    // other point is at least as good on both axes and better on one.
+    let pareto: Vec<bool> = points
+        .iter()
+        .map(|p| {
+            !points.iter().any(|q| {
+                (q.max_err < p.max_err && q.gates <= p.gates)
+                    || (q.max_err <= p.max_err && q.gates < p.gates)
+            })
+        })
+        .collect();
+
+    let rows: Vec<Vec<String>> = points
+        .iter()
+        .zip(&pareto)
+        .map(|(p, &front)| {
+            vec![
+                p.name.clone(),
+                format!("{:.6}", p.max_err),
+                format!("{:.6}", p.rms),
+                p.gates.to_string(),
+                format!("{:.0}", p.fmax),
+                format!("{:.0}", p.power_uw),
+                if front { "*".into() } else { "".into() },
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        render_table(
+            &["config", "max err", "rms", "gates", "fmax MHz", "power uW", "pareto"],
+            &rows
+        )
+    );
+
+    let chosen = points.iter().position(|p| p.name == "k3/d32/b16").unwrap();
+    println!(
+        "\npaper's configuration (k3/d32, 16-bit basis bus): {} gates, max err {:.6}{}",
+        points[chosen].gates,
+        points[chosen].max_err,
+        if pareto[chosen] { " — ON the Pareto frontier" } else { "" }
+    );
+    println!(
+        "reading: below d32 the error budget (1-bit RMS) is missed; above it\n\
+         the LUT doubles for <2x accuracy — §IV's \"sampling period of 0.125\n\
+         is good enough\" is visible as the knee of the frontier."
+    );
+}

@@ -1,0 +1,41 @@
+//! Emit the Fig. 1 series (tanh + its coarse PWL approximation, plus the
+//! CR spline at the same LUT depth) as CSV for plotting.
+//!
+//! ```sh
+//! cargo run --release --example figure1 -- --out figure1.csv
+//! ```
+
+use crspline::analysis::figures;
+use crspline::util::cli::{Args, Spec};
+
+fn main() -> anyhow::Result<()> {
+    const SPECS: &[Spec] = &[
+        Spec::opt("out", "output path (default: stdout)"),
+        Spec::opt("points", "sample count (default 512)"),
+    ];
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv, SPECS).map_err(|e| anyhow::anyhow!(e))?;
+    let points = args.get_usize("points", 512).map_err(|e| anyhow::anyhow!(e))?;
+    let csv = figures::figure1_csv(points);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &csv)?;
+            println!("wrote {points} samples to {path}");
+            // quick text rendering of the figure's point
+            let mut max_pwl: f64 = 0.0;
+            let mut max_cr: f64 = 0.0;
+            for line in csv.lines().skip(1) {
+                let f: Vec<f64> = line.split(',').map(|v| v.parse().unwrap()).collect();
+                max_pwl = max_pwl.max(f[4].abs());
+                max_cr = max_cr.max(f[5].abs());
+            }
+            println!(
+                "at h=0.5: max |pwl err| = {max_pwl:.4}, max |cr err| = {max_cr:.4} \
+                 ({:.1}x tighter)",
+                max_pwl / max_cr
+            );
+        }
+        None => print!("{csv}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,52 @@
+//! Network-level impact of activation accuracy (the paper's §I / ref [3]
+//! motivation): run the same MLP and LSTM with every activation method
+//! and measure drift vs exact tanh.
+//!
+//! ```sh
+//! cargo run --release --example nn_accuracy
+//! ```
+
+use crspline::approx::{self};
+use crspline::nn::{data, lstm, mlp};
+use crspline::util::render_table;
+use crspline::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(2020);
+    let net = mlp::Mlp::new(&[8, 32, 32, 4], &mut rng);
+    let (xs, _) = data::gaussian_blobs(500, 8, 4, &mut rng);
+    let cell = lstm::Lstm::new(4, 24, &mut rng);
+    let seq = data::sine_sequence(128, 4, &mut rng);
+
+    println!(
+        "MLP 8-32-32-4 on 4-class blobs (500 samples); LSTM-24 on a 128-step\n\
+         noisy multi-sine. Reference: f64 tanh. Hardware path: Q2.13 weights\n\
+         and activations, tanh/sigmoid through each method's datapath.\n"
+    );
+
+    let mut rows = Vec::new();
+    for m in approx::all_methods() {
+        let me = mlp::evaluate_mlp(&net, &xs, m.as_ref());
+        let le = lstm::evaluate_lstm(&cell, &seq, m.as_ref());
+        rows.push(vec![
+            m.name(),
+            format!("{:.1}%", me.agreement * 100.0),
+            format!("{:.2e}", me.mean_output_l2),
+            format!("{:.2e}", le.final_h_l2),
+            format!("{:.2e}", le.max_traj_diff),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &["method", "mlp decisions kept", "mlp out drift", "lstm final-h L2", "lstm max drift"],
+            &rows
+        )
+    );
+    println!(
+        "reading: the CR spline (cr-k3) keeps classification decisions intact\n\
+         and its recurrent drift sits at the Q2.13 quantization floor, while\n\
+         coarse methods (region/ralut/lut) visibly perturb the network — the\n\
+         accuracy-matters argument behind Table III."
+    );
+}

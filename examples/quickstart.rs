@@ -1,0 +1,50 @@
+//! Quickstart: evaluate the Catmull-Rom tanh block and see the error.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use crspline::approx::{CatmullRom, Pwl, TanhApprox};
+use crspline::fixed::{q13, q13_to_f64};
+
+fn main() {
+    // The paper's implemented configuration: h = 0.125, 32-entry LUT,
+    // Q2.13 I/O (16-bit signed, 13 fraction bits).
+    let cr = CatmullRom::paper_default();
+    let pwl = Pwl::paper_default();
+
+    println!("Catmull-Rom spline tanh (Q2.13, h = 0.125, 32-entry LUT)\n");
+    println!(
+        "{:>8} {:>12} {:>12} {:>12} {:>12}",
+        "x", "tanh(x)", "cr(x)", "cr err", "pwl err"
+    );
+    for &x in &[0.0f64, 0.1, 0.5, 0.7615, 1.0, 1.5, 2.0, 3.0, 3.9, -0.5, -2.2] {
+        let exact = x.tanh();
+        let y_cr = cr.eval_f64(x);
+        let y_pwl = pwl.eval_f64(x);
+        println!(
+            "{x:>8.4} {exact:>12.6} {y_cr:>12.6} {:>12.2e} {:>12.2e}",
+            y_cr - exact,
+            y_pwl - exact
+        );
+    }
+
+    // The bit-accurate interface, as hardware sees it: raw Q2.13 in/out.
+    let x_raw = q13(1.0); // 8192
+    let y_raw = cr.eval_q13(x_raw);
+    println!(
+        "\nraw interface: tanh(0x{x_raw:04X}) = 0x{y_raw:04X}  ({} -> {})",
+        q13_to_f64(x_raw),
+        q13_to_f64(y_raw)
+    );
+
+    // Headline numbers (Table I/II row h=0.125).
+    let stats = crspline::analysis::metrics::sweep_full(&cr);
+    println!(
+        "\nfull 2^16-point sweep: rms={:.6} max={:.6}  (paper: 0.000052 / 0.000152)",
+        stats.rms, stats.max
+    );
+    assert!((stats.rms - 0.000052).abs() < 1e-5);
+    assert!((stats.max - 0.000152).abs() < 1e-5);
+    println!("matches the paper. done.");
+}

@@ -1,0 +1,113 @@
+//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//!
+//! Loads every AOT artifact (L1 Pallas kernels lowered inside L2 JAX
+//! models, compiled by `make artifacts`), starts the L3 coordinator
+//! (router + dynamic batcher + PJRT worker pool), fires batched traffic
+//! from concurrent clients against the tanh / MLP / LSTM families, and
+//! reports per-family latency/throughput plus CR-vs-exact accuracy parity
+//! — the numbers recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_inference
+//! ```
+
+use crspline::approx::{CatmullRom, TanhApprox};
+use crspline::coordinator::{BatchPolicy, ModelKey, PjrtBackend, Router, Server, ServerConfig};
+use crspline::runtime::Manifest;
+use crspline::util::rng::Rng;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn main() -> anyhow::Result<()> {
+    let dir = crspline::runtime::artifacts::default_dir();
+    let manifest = Manifest::load(&dir)
+        .map_err(|e| anyhow::anyhow!("{e:#}\nrun `make artifacts` first"))?;
+    println!(
+        "loaded manifest: {} artifacts across tanh/mlp/lstm families",
+        manifest.artifacts.len()
+    );
+    let router = Router::from_manifest(&manifest);
+
+    let mut cfg = ServerConfig::new(router.clone(), PjrtBackend::factory(dir));
+    cfg.workers = 2;
+    cfg.policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(1500) };
+    let server = Arc::new(Server::start(cfg)?);
+    println!("coordinator up: 2 PJRT workers, max_batch=32, deadline=1.5ms\n");
+
+    // ---- phase 1: accuracy parity, CR vs exact artifacts ----
+    println!("phase 1 — CR-vs-exact parity through the serving path");
+    let cr = CatmullRom::paper_default();
+    let mut rng = Rng::new(1);
+    let payload: Vec<f32> = (0..256).map(|_| rng.f64_range(-4.0, 4.0) as f32).collect();
+    let y_cr = server
+        .submit_wait(ModelKey::new("tanh", "cr"), payload.clone())?
+        .output()?
+        .to_vec();
+    let y_ex = server
+        .submit_wait(ModelKey::new("tanh", "exact"), payload.clone())?
+        .output()?
+        .to_vec();
+    let mut max_vs_rust = 0.0f32;
+    let mut max_vs_exact = 0.0f32;
+    for i in 0..256 {
+        max_vs_rust = max_vs_rust.max((y_cr[i] - cr.eval_f64(payload[i] as f64) as f32).abs());
+        max_vs_exact = max_vs_exact.max((y_cr[i] - y_ex[i]).abs());
+    }
+    println!("  tanh: max |served CR - rust CR| = {max_vs_rust:.2e} (must be 0)");
+    println!("  tanh: max |CR - exact|         = {max_vs_exact:.2e} (paper bound 1.52e-4 + quant)");
+    assert_eq!(max_vs_rust, 0.0);
+
+    let mlp_in: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+    let m_cr = server.submit_wait(ModelKey::new("mlp", "cr"), mlp_in.clone())?.output()?.to_vec();
+    let m_ex = server.submit_wait(ModelKey::new("mlp", "exact"), mlp_in)?.output()?.to_vec();
+    let mlp_drift = m_cr.iter().zip(&m_ex).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    println!("  mlp:  max logit drift          = {mlp_drift:.2e}");
+
+    let lstm_in: Vec<f32> = (0..32 * 16).map(|_| rng.normal() as f32).collect();
+    let l_cr = server.submit_wait(ModelKey::new("lstm", "cr"), lstm_in.clone())?.output()?.to_vec();
+    let l_ex = server.submit_wait(ModelKey::new("lstm", "exact"), lstm_in)?.output()?.to_vec();
+    let lstm_drift = l_cr.iter().zip(&l_ex).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+    println!("  lstm: max hidden drift (T=32)  = {lstm_drift:.2e}\n");
+
+    // ---- phase 2: batched throughput per family ----
+    println!("phase 2 — batched serving (8 clients x 64 requests per family)");
+    for (family, sample_in) in [("tanh", 256usize), ("mlp", 64), ("lstm", 512)] {
+        let key = ModelKey::new(family, "cr");
+        let t0 = Instant::now();
+        let clients: Vec<_> = (0..8)
+            .map(|c| {
+                let server = Arc::clone(&server);
+                let key = key.clone();
+                std::thread::spawn(move || {
+                    let mut rng = Rng::new(c + 10);
+                    for _ in 0..64 {
+                        let payload: Vec<f32> =
+                            (0..sample_in).map(|_| rng.f64_range(-2.0, 2.0) as f32).collect();
+                        server
+                            .submit_wait(key.clone(), payload)
+                            .expect("submit")
+                            .output()
+                            .expect("ok");
+                    }
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+        let dt = t0.elapsed();
+        println!(
+            "  {family:<5} 512 requests in {:>8.3}s  ->  {:>8.0} req/s",
+            dt.as_secs_f64(),
+            512.0 / dt.as_secs_f64()
+        );
+    }
+
+    let server = Arc::try_unwrap(server).ok().expect("sole owner");
+    let m = server.shutdown();
+    println!("\ncoordinator metrics:\n{m}");
+    assert_eq!(m.failed, 0);
+    assert!(m.mean_batch() > 1.5, "batching engaged: {}", m.mean_batch());
+    println!("\nend-to-end OK: all layers composed (Pallas kernel -> HLO -> PJRT -> coordinator).");
+    Ok(())
+}

@@ -1,0 +1,37 @@
+//! Regenerate Table III (area & accuracy comparison) and the §V
+//! configuration trade-off — the full synthesis-style report.
+//!
+//! ```sh
+//! cargo run --release --example synthesis_report
+//! ```
+
+use crspline::hw::synth;
+
+fn main() {
+    println!("{}", synth::table3());
+    println!();
+
+    let problems = synth::check_orderings(&synth::table3_rows());
+    if problems.is_empty() {
+        println!("ordering checks: OK — the paper's Table III argument reproduces:");
+        println!("  * CR spline is orders of magnitude more accurate than RALUT [5]");
+        println!("    and region-based [6] at comparable (logic-only) cost class;");
+        println!("  * DCTIF [10] matches on accuracy but pays Kbits of memory;");
+        println!("  * CR spline needs no memory macro at all.");
+    } else {
+        for p in &problems {
+            println!("ordering check FAILED: {p}");
+        }
+        std::process::exit(1);
+    }
+
+    println!();
+    println!("{}", synth::variant_tradeoff());
+    println!();
+    println!("{}", synth::cr_breakdown());
+    println!(
+        "\nnote: gate counts come from the structural model (cells + QMC'd\n\
+         LUTs, Booth multipliers); the paper's 5840 came from real synthesis.\n\
+         Magnitude and ordering are the reproduction target — see DESIGN.md §1."
+    );
+}

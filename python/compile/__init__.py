@@ -1,0 +1,4 @@
+"""Build-time compile path: L1 Pallas kernels, L2 JAX models, AOT lowering.
+
+Never imported at runtime — the Rust binary consumes only artifacts/.
+"""

@@ -1,0 +1,88 @@
+"""AOT lowering: JAX → HLO **text** → artifacts/ + manifest.json.
+
+HLO text (NOT ``lowered.compile()`` / serialized protos) is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit
+instruction ids which the Rust side's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out ../artifacts``
+Idempotent: skips lowering when the output is newer than the inputs
+(the Makefile also guards this).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default HLO printer elides big
+    # literals as `constant({...})`, which would silently corrupt the
+    # baked model weights on the Rust side.
+    return comp.as_hlo_text(True)
+
+
+def lower_spec(spec) -> str:
+    args = [jax.ShapeDtypeStruct(s, jnp.float32) for s in spec["inputs"]]
+    lowered = jax.jit(spec["fn"]).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, only=None, verbose=True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": 1, "artifacts": []}
+    for spec in model.artifact_specs():
+        if only and spec["name"] not in only:
+            continue
+        path = f"{spec['name']}.hlo.txt"
+        text = lower_spec(spec)
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"].append({
+            "name": spec["name"],
+            "model": spec["model"],
+            "variant": spec["variant"],
+            "path": path,
+            "batch": spec["batch"],
+            "inputs": [list(s) for s in spec["inputs"]],
+            "outputs": [list(s) for s in spec["outputs"]],
+            "sha256_16": digest,
+        })
+        if verbose:
+            print(f"  lowered {spec['name']:<16} {len(text):>9} chars  {digest}")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if verbose:
+        print(f"wrote {len(manifest['artifacts'])} artifacts to {out_dir}/")
+    return manifest
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--only", nargs="*", help="subset of artifact names")
+    args = ap.parse_args()
+    build(args.out, only=args.only)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

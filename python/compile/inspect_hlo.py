@@ -1,0 +1,75 @@
+"""L2 performance tooling: inspect lowered HLO for fusion/recomputation.
+
+The §Perf target for L2 (DESIGN.md §6) is structural: the lowered tanh
+kernel must be a straight-line elementwise program — one LUT gather per
+tap, the polynomial arithmetic, one final round — with no loops, no
+custom calls, and no repeated gathers beyond the four taps. This tool
+parses HLO text into an op histogram and asserts those properties;
+pytest (`test_inspect.py`) runs it over the built artifacts, and its
+output for the shipped artifacts is recorded in EXPERIMENTS.md §Perf.
+
+Usage: ``python -m compile.inspect_hlo ../artifacts/tanh_cr_32.hlo.txt``
+"""
+
+import re
+import sys
+from collections import Counter
+
+
+# An instruction line is `%name = <type> opcode(operands...)`. The type
+# may itself contain parentheses (tuple types), so the opcode is the
+# first lowercase `tok(` after the `=`.
+ASSIGN_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*")
+OPCODE_RE = re.compile(r"\b([a-z][a-z0-9\-]*)\(")
+
+
+def op_histogram(hlo_text: str) -> Counter:
+    """Count HLO opcodes in the entry (and nested) computations."""
+    ops = Counter()
+    for line in hlo_text.splitlines():
+        m = ASSIGN_RE.match(line)
+        if not m:
+            continue
+        m2 = OPCODE_RE.search(line, m.end())
+        if m2:
+            op = m2.group(1)
+            if op not in ("tuple",):  # structural, not compute
+                ops[op] += 1
+    return ops
+
+
+def analyze(hlo_text: str) -> dict:
+    """Structural performance facts for a lowered module."""
+    ops = op_histogram(hlo_text)
+    return {
+        "ops": ops,
+        "total_ops": sum(ops.values()),
+        "has_custom_call": ops.get("custom-call", 0) > 0,
+        "has_loops": ops.get("while", 0) > 0,
+        "gathers": ops.get("gather", 0) + ops.get("dynamic-slice", 0),
+        "dots": ops.get("dot", 0),
+        "constants_bytes": sum(
+            len(m) for m in re.findall(r"constant\(\{[^}]*\}\)", hlo_text)
+        ),
+    }
+
+
+def main() -> int:
+    if len(sys.argv) < 2:
+        print(__doc__)
+        return 2
+    for path in sys.argv[1:]:
+        with open(path) as f:
+            text = f.read()
+        info = analyze(text)
+        print(f"== {path}")
+        print(f"   total ops: {info['total_ops']}")
+        print(f"   custom-call: {info['has_custom_call']}  loops: {info['has_loops']}")
+        print(f"   gathers: {info['gathers']}  dots: {info['dots']}")
+        for op, n in info["ops"].most_common(12):
+            print(f"     {op:<22} {n}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

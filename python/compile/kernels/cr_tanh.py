@@ -1,0 +1,146 @@
+"""L1 Pallas kernel: quantized Catmull-Rom spline tanh.
+
+Hardware adaptation (DESIGN.md §2): the ASIC datapath's 32×13-bit
+combinational LUT becomes a small tensor operand pinned in VMEM; the
+per-element index/t bit-split and 4-tap dot product are pure VPU
+element-wise work; `BlockSpec` tiles the activation tensor row-by-row so
+each block streams HBM→VMEM once — the TPU analogue of the paper's "no
+memory on the hot path" property (the LUT block's index_map is constant,
+so it stays resident across grid steps).
+
+The arithmetic is **integer**: t², t³ and the basis are built exactly in
+int64 and a single final round-half-even produces the Q2.13 result —
+bit-identical to the validated golden model (``ref.golden_cr_q13``) and
+to the Rust `approx::CatmullRom` datapath (pytest proves the first, the
+Rust integration test the second).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO ops so the same program
+executes under the Rust runtime (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+
+jax.config.update("jax_enable_x64", True)  # exact int64 datapath arithmetic
+
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import ref
+
+FRAC_BITS = 13
+SCALE = 1 << FRAC_BITS
+
+
+def _basis_i64(tu: jnp.ndarray, tbits: int):
+    """The four cubic basis values at the tbits-bit fraction ``tu``,
+    carrying 3·tbits fraction bits, exactly (int64)."""
+    tu = tu.astype(jnp.int64)
+    t1 = tu << (2 * tbits)
+    t2 = (tu * tu) << tbits
+    t3 = tu * tu * tu
+    one = jnp.int64(1) << (3 * tbits)
+    return (
+        -t3 + 2 * t2 - t1,
+        3 * t3 - 5 * t2 + 2 * one,
+        -3 * t3 + 4 * t2 + t1,
+        t3 - t2,
+    )
+
+
+def _round_half_even_shift(acc: jnp.ndarray, n: int) -> jnp.ndarray:
+    """acc // 2^n with round-half-even, on int64."""
+    floor = acc >> n
+    rem = acc - (floor << n)
+    half = jnp.int64(1) << (n - 1)
+    round_up = (rem > half) | ((rem == half) & ((floor & 1) == 1))
+    return floor + round_up.astype(jnp.int64)
+
+
+def quantize_q13(x: jnp.ndarray) -> jnp.ndarray:
+    """f32 → raw Q2.13 int32 (round-half-even, saturate, NaN→0)."""
+    x = jnp.nan_to_num(x.astype(jnp.float32))
+    scaled = jnp.round(x.astype(jnp.float64) * SCALE)  # half-even
+    return jnp.clip(scaled, -32768, 32767).astype(jnp.int32)
+
+
+def _cr_eval_raw(xi: jnp.ndarray, lut: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Raw Q2.13 int32 in → raw Q2.13 int32 out (the datapath)."""
+    tbits = FRAC_BITS - k
+    neg = xi < 0
+    mag = jnp.minimum(jnp.abs(xi.astype(jnp.int64)), 32767)
+    seg = (mag >> tbits).astype(jnp.int32)
+    tu = mag & ((1 << tbits) - 1)
+    b = _basis_i64(tu, tbits)
+    lut_j = lut.astype(jnp.int64)
+    n_entries = lut.shape[-1]
+
+    def p(idx):
+        # odd extension below 0, clamp above the table
+        s = jnp.sign(idx).astype(jnp.int64)
+        safe = jnp.clip(jnp.abs(idx), 0, n_entries - 1)
+        return s * jnp.take(lut_j, safe, axis=-1, mode="clip")
+
+    acc = jnp.zeros_like(mag)
+    for i in range(4):
+        acc = acc + p(seg - 1 + i) * b[i]
+    y = _round_half_even_shift(acc, 3 * tbits + 1)
+    y = jnp.clip(y, -SCALE, SCALE)
+    return jnp.where(neg, -y, y).astype(jnp.int32)
+
+
+def _kernel(x_ref, lut_ref, o_ref, *, k: int):
+    xi = quantize_q13(x_ref[...])
+    y = _cr_eval_raw(xi, lut_ref[...], k)
+    o_ref[...] = y.astype(jnp.float32) / SCALE
+
+
+# Block threshold: tiles at or under this element count are evaluated as
+# one VMEM block (the whole tile fits comfortably: 64Ki elements of f32
+# plus int64 intermediates ~ 3 MiB << 16 MiB VMEM); larger tensors stream
+# row blocks through the grid. Perf note (EXPERIMENTS.md §Perf/L1): on
+# the CPU interpret path a 32x256 tile runs 23x faster single-block
+# (5.3us vs 123us) because the grid loop lowers to a sequential HLO
+# while; on real TPU the same split is what keeps blocks VMEM-resident.
+VMEM_BLOCK_ELEMS = 64 * 1024
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def cr_tanh(x: jnp.ndarray, k: int = 3) -> jnp.ndarray:
+    """Quantized Catmull-Rom tanh over any (..., N) f32 array."""
+    lut = jnp.asarray(ref.build_lut(k, guard=2), jnp.int32)
+    orig_shape = x.shape
+    x2 = x.reshape((-1, x.shape[-1])) if x.ndim > 1 else x.reshape((1, -1))
+    rows, cols = x2.shape
+    if rows * cols <= VMEM_BLOCK_ELEMS:
+        # single block: whole tile resident in VMEM
+        out = pl.pallas_call(
+            functools.partial(_kernel, k=k),
+            out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+            interpret=True,
+        )(x2, lut)
+    else:
+        # stream one row-block per grid step (HBM -> VMEM schedule)
+        out = pl.pallas_call(
+            functools.partial(_kernel, k=k),
+            out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+            grid=(rows,),
+            in_specs=[
+                pl.BlockSpec((1, cols), lambda r: (r, 0)),
+                pl.BlockSpec((lut.shape[0],), lambda r: (0,)),  # LUT resident
+            ],
+            out_specs=pl.BlockSpec((1, cols), lambda r: (r, 0)),
+            interpret=True,
+        )(x2, lut)
+    return out.reshape(orig_shape)
+
+
+def cr_tanh_reference(x: jnp.ndarray, k: int = 3) -> jnp.ndarray:
+    """Same computation without pallas_call (pure jnp) — used to check
+    that the BlockSpec plumbing adds nothing numerically."""
+    xi = quantize_q13(x)
+    lut = jnp.asarray(ref.build_lut(k, guard=2), jnp.int32)
+    return _cr_eval_raw(xi, lut, k).astype(jnp.float32) / SCALE

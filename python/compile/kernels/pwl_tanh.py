@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: quantized piecewise-linear tanh (the baseline the
+paper's Tables I/II compare against). Same quantization model, same
+BlockSpec schedule as the CR kernel; 2-tap instead of 4-tap."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .cr_tanh import _round_half_even_shift, quantize_q13
+
+FRAC_BITS = 13
+SCALE = 1 << FRAC_BITS
+
+
+def _pwl_eval_raw(xi: jnp.ndarray, lut: jnp.ndarray, k: int) -> jnp.ndarray:
+    tbits = FRAC_BITS - k
+    neg = xi < 0
+    mag = jnp.minimum(jnp.abs(xi.astype(jnp.int64)), 32767)
+    seg = (mag >> tbits).astype(jnp.int32)
+    tu = mag & ((1 << tbits) - 1)
+    one = jnp.int64(1) << tbits
+    lut_j = lut.astype(jnp.int64)
+    n = lut.shape[-1]
+    p0 = jnp.take(lut_j, jnp.clip(seg, 0, n - 1), axis=-1, mode="clip")
+    p1 = jnp.take(lut_j, jnp.clip(seg + 1, 0, n - 1), axis=-1, mode="clip")
+    acc = p0 * (one - tu) + p1 * tu
+    y = jnp.clip(_round_half_even_shift(acc, tbits), -SCALE, SCALE)
+    return jnp.where(neg, -y, y).astype(jnp.int32)
+
+
+def _kernel(x_ref, lut_ref, o_ref, *, k: int):
+    xi = quantize_q13(x_ref[...])
+    y = _pwl_eval_raw(xi, lut_ref[...], k)
+    o_ref[...] = y.astype(jnp.float32) / SCALE
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def pwl_tanh(x: jnp.ndarray, k: int = 3) -> jnp.ndarray:
+    """Quantized PWL tanh over any (..., N) f32 array."""
+    from .cr_tanh import VMEM_BLOCK_ELEMS
+
+    lut = jnp.asarray(ref.build_lut(k, guard=1), jnp.int32)
+    orig_shape = x.shape
+    x2 = x.reshape((-1, x.shape[-1])) if x.ndim > 1 else x.reshape((1, -1))
+    rows, cols = x2.shape
+    if rows * cols <= VMEM_BLOCK_ELEMS:
+        out = pl.pallas_call(
+            functools.partial(_kernel, k=k),
+            out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+            interpret=True,
+        )(x2, lut)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_kernel, k=k),
+            out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+            grid=(rows,),
+            in_specs=[
+                pl.BlockSpec((1, cols), lambda r: (r, 0)),
+                pl.BlockSpec((lut.shape[0],), lambda r: (0,)),
+            ],
+            out_specs=pl.BlockSpec((1, cols), lambda r: (r, 0)),
+            interpret=True,
+        )(x2, lut)
+    return out.reshape(orig_shape)
+
+
+def pwl_tanh_reference(x: jnp.ndarray, k: int = 3) -> jnp.ndarray:
+    xi = quantize_q13(x)
+    lut = jnp.asarray(ref.build_lut(k, guard=1), jnp.int32)
+    return _pwl_eval_raw(xi, lut, k).astype(jnp.float32) / SCALE

@@ -1,0 +1,107 @@
+"""Pure-numpy/jnp correctness oracles for the L1 kernels.
+
+``golden_*`` are the *normative* numpy models — the exact float pipeline
+that reproduces the paper's Tables I and II to the published digit
+(validated in DESIGN.md): Q2.13 input, 13-bit-quantized LUT entries,
+real-arithmetic Catmull-Rom basis, one final round-half-even to Q2.13.
+The Rust `approx::CatmullRom` integer datapath is proven equal to this
+model exhaustively; the Pallas kernel is tested against it here.
+"""
+
+import numpy as np
+
+FRAC_BITS = 13
+SCALE = 1 << FRAC_BITS  # 8192
+Q_MIN, Q_MAX = -32768, 32767
+
+
+def q13(v):
+    """Quantize to Q2.13 raw integers: round-half-even + saturate."""
+    return np.clip(np.round(np.asarray(v, np.float64) * SCALE), Q_MIN, Q_MAX).astype(
+        np.int64
+    )
+
+
+def q13_to_f64(raw):
+    return np.asarray(raw, np.float64) / SCALE
+
+
+def build_lut(k: int, guard: int = 2) -> np.ndarray:
+    """Positive-side control points for step h = 2^-k over [0, 4)."""
+    h = 2.0**-k
+    depth = 1 << (k + 2)
+    idx = np.arange(depth + guard)
+    return q13(np.tanh(idx * h))
+
+
+def _fold(raw):
+    raw = np.asarray(raw, np.int64)
+    neg = raw < 0
+    mag = np.minimum(np.abs(raw), Q_MAX)
+    return neg, mag
+
+
+def _gather_p(lut, idx):
+    """Control point with odd extension below 0, clamp above the table."""
+    neg = idx < 0
+    safe = np.clip(np.abs(idx), 0, len(lut) - 1)
+    vals = lut[safe]
+    return np.where(neg, -vals, vals)
+
+
+def golden_cr_q13(raw, k: int = 3):
+    """Catmull-Rom tanh on raw Q2.13 ints; returns raw Q2.13 ints."""
+    lut = build_lut(k, guard=2)
+    tbits = FRAC_BITS - k
+    neg, mag = _fold(raw)
+    seg = mag >> tbits
+    t = (mag & ((1 << tbits) - 1)).astype(np.float64) / (1 << tbits)
+    t2, t3 = t * t, t * t * t
+    b = [
+        -t3 + 2 * t2 - t,
+        3 * t3 - 5 * t2 + 2.0,
+        -3 * t3 + 4 * t2 + t,
+        t3 - t2,
+    ]
+    acc = np.zeros_like(t)
+    for i in range(4):
+        acc += _gather_p(lut, seg - 1 + i).astype(np.float64) * b[i]
+    y = np.clip(np.round(acc * 0.5), -SCALE, SCALE).astype(np.int64)
+    return np.where(neg, -y, y)
+
+
+def golden_pwl_q13(raw, k: int = 3):
+    """Piecewise-linear tanh on raw Q2.13 ints; returns raw Q2.13 ints."""
+    lut = build_lut(k, guard=1)
+    tbits = FRAC_BITS - k
+    neg, mag = _fold(raw)
+    seg = mag >> tbits
+    t = (mag & ((1 << tbits) - 1)).astype(np.float64) / (1 << tbits)
+    p0 = _gather_p(lut, seg).astype(np.float64)
+    p1 = _gather_p(lut, seg + 1).astype(np.float64)
+    y = np.clip(np.round(p0 * (1 - t) + p1 * t), -SCALE, SCALE).astype(np.int64)
+    return np.where(neg, -y, y)
+
+
+def golden_cr_f32(x, k: int = 3):
+    """Float-in/float-out wrapper: quantize input, CR-evaluate, dequantize."""
+    raw = q13(np.nan_to_num(np.asarray(x, np.float64)))
+    return q13_to_f64(golden_cr_q13(raw, k)).astype(np.float32)
+
+
+def golden_pwl_f32(x, k: int = 3):
+    raw = q13(np.nan_to_num(np.asarray(x, np.float64)))
+    return q13_to_f64(golden_pwl_q13(raw, k)).astype(np.float32)
+
+
+def error_stats(approx_raw, exact_x):
+    """(rms, max) of a raw-Q2.13 approximation vs np.tanh(exact_x)."""
+    err = q13_to_f64(approx_raw) - np.tanh(exact_x)
+    return float(np.sqrt(np.mean(err * err))), float(np.max(np.abs(err)))
+
+
+# The published tables, used by tests here and in rust.
+PAPER_TABLE1 = {1: (0.008201, 0.001462), 2: (0.002078, 0.000147),
+                3: (0.000523, 0.000052), 4: (0.000135, 0.000049)}
+PAPER_TABLE2 = {1: (0.023330, 0.005179), 2: (0.006015, 0.000602),
+                3: (0.001584, 0.000152), 4: (0.000470, 0.000122)}

@@ -1,0 +1,170 @@
+"""L2: JAX model graphs calling the L1 kernels.
+
+Three model families, each lowered per (variant, batch) by ``aot.py``:
+
+- ``tanh``  — the raw activation block over a (B, 256) tile: the paper's
+  unit of deployment inside an accelerator.
+- ``mlp``   — 64→128→128→10 tanh MLP (weights baked into the HLO as
+  constants; deterministic PRNG so Rust tests can cross-check values).
+- ``lstm``  — 16-in/32-hidden LSTM over T=32 steps, final hidden state
+  out. Gates use the hardware sigmoid σ(x) = (1 + tanh(x/2))/2 so every
+  non-linearity goes through the paper's block — activation error
+  accumulates through time, the regime the paper's accuracy argument
+  targets.
+
+Variants: ``cr`` (Catmull-Rom kernel), ``pwl`` (PWL kernel), ``exact``
+(jnp.tanh reference).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+
+from .kernels.cr_tanh import cr_tanh
+from .kernels.pwl_tanh import pwl_tanh
+
+MLP_SIZES = (64, 128, 128, 10)
+LSTM_INPUT = 16
+LSTM_HIDDEN = 32
+LSTM_STEPS = 32
+TANH_TILE = 256
+
+VARIANTS = ("cr", "pwl", "exact")
+
+
+def activation(variant: str):
+    """The tanh block for a variant, f32 (..., N) → f32 (..., N)."""
+    if variant == "cr":
+        return cr_tanh
+    if variant == "pwl":
+        return pwl_tanh
+    if variant == "exact":
+        return jnp.tanh
+    raise ValueError(f"unknown variant {variant!r}")
+
+
+def hw_sigmoid(act, x):
+    """σ(x) = (1 + tanh(x/2)) / 2 through the hardware tanh block."""
+    return (1.0 + act(x * 0.5)) * 0.5
+
+
+# ---------------------------------------------------------------------------
+# tanh family
+# ---------------------------------------------------------------------------
+
+def tanh_fn(variant: str):
+    act = activation(variant)
+
+    def fn(x):  # (B, TANH_TILE) f32
+        return (act(x).astype(jnp.float32),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# MLP family
+# ---------------------------------------------------------------------------
+
+def mlp_params(seed: int = 0):
+    """Deterministic Glorot-initialized weights, f32."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for i in range(len(MLP_SIZES) - 1):
+        key, wk = jax.random.split(key)
+        fan_in, fan_out = MLP_SIZES[i], MLP_SIZES[i + 1]
+        scale = (2.0 / (fan_in + fan_out)) ** 0.5
+        w = jax.random.normal(wk, (fan_in, fan_out), jnp.float32) * scale
+        b = jnp.zeros((fan_out,), jnp.float32)
+        params.append((w, b))
+    return params
+
+
+def mlp_fn(variant: str, params=None):
+    act = activation(variant)
+    params = mlp_params() if params is None else params
+
+    def fn(x):  # (B, 64) f32
+        h = x.astype(jnp.float32)
+        for i, (w, b) in enumerate(params):
+            z = h @ w + b
+            h = act(z).astype(jnp.float32) if i + 1 < len(params) else z
+        return (h.astype(jnp.float32),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# LSTM family
+# ---------------------------------------------------------------------------
+
+def lstm_params(seed: int = 1):
+    key = jax.random.PRNGKey(seed)
+    fan = LSTM_INPUT + LSTM_HIDDEN
+    scale = (2.0 / (fan + LSTM_HIDDEN)) ** 0.5
+    params = {}
+    for gate in ("i", "f", "g", "o"):
+        key, wk = jax.random.split(key)
+        params[f"w_{gate}"] = (
+            jax.random.normal(wk, (fan, LSTM_HIDDEN), jnp.float32) * scale
+        )
+        bias = 1.0 if gate == "f" else 0.0  # standard forget-gate bias
+        params[f"b_{gate}"] = jnp.full((LSTM_HIDDEN,), bias, jnp.float32)
+    return params
+
+
+def lstm_fn(variant: str, params=None):
+    act = activation(variant)
+    params = lstm_params() if params is None else params
+
+    def step(carry, x_t):
+        h, c = carry
+        xh = jnp.concatenate([x_t, h], axis=-1)
+        gi = hw_sigmoid(act, xh @ params["w_i"] + params["b_i"])
+        gf = hw_sigmoid(act, xh @ params["w_f"] + params["b_f"])
+        gg = act(xh @ params["w_g"] + params["b_g"])
+        go = hw_sigmoid(act, xh @ params["w_o"] + params["b_o"])
+        c = gf * c + gi * gg
+        h = go * act(c)
+        return (h.astype(jnp.float32), c.astype(jnp.float32)), None
+
+    def fn(x):  # (B, T, LSTM_INPUT) f32
+        b = x.shape[0]
+        h0 = jnp.zeros((b, LSTM_HIDDEN), jnp.float32)
+        c0 = jnp.zeros((b, LSTM_HIDDEN), jnp.float32)
+        xs = jnp.swapaxes(x.astype(jnp.float32), 0, 1)  # (T, B, I)
+        (h, _), _ = jax.lax.scan(step, (h0, c0), xs)
+        return (h.astype(jnp.float32),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Artifact registry (consumed by aot.py and the tests)
+# ---------------------------------------------------------------------------
+
+def artifact_specs():
+    """Every (name, fn, input_shape, output_shape, model, variant, batch)."""
+    specs = []
+    for variant in VARIANTS:
+        for b in (1, 8, 32):
+            specs.append(dict(
+                name=f"tanh_{variant}_{b}", model="tanh", variant=variant,
+                batch=b, fn=tanh_fn(variant),
+                inputs=[(b, TANH_TILE)], outputs=[(b, TANH_TILE)],
+            ))
+    for variant in ("cr", "exact"):
+        for b in (1, 8, 32):
+            specs.append(dict(
+                name=f"mlp_{variant}_{b}", model="mlp", variant=variant,
+                batch=b, fn=mlp_fn(variant),
+                inputs=[(b, MLP_SIZES[0])], outputs=[(b, MLP_SIZES[-1])],
+            ))
+        for b in (1, 8):
+            specs.append(dict(
+                name=f"lstm_{variant}_{b}", model="lstm", variant=variant,
+                batch=b, fn=lstm_fn(variant),
+                inputs=[(b, LSTM_STEPS, LSTM_INPUT)], outputs=[(b, LSTM_HIDDEN)],
+            ))
+    return specs

@@ -1,0 +1,135 @@
+"""Build-time end-to-end validation: train a small LSTM in float, then
+deploy it through the quantized CR-tanh activation and measure parity.
+
+This mirrors the accelerator story the paper targets: training happens in
+float (tanh is differentiable); inference runs on hardware whose tanh is
+the CR-spline block. The experiment trains next-step prediction on a
+noisy multi-sine sequence and reports test MSE under (a) exact tanh,
+(b) CR-spline tanh, (c) PWL tanh — plus loss-curve samples. Results are
+recorded in EXPERIMENTS.md §E2E.
+
+Usage: ``python -m compile.train_lstm [--steps 300]``
+"""
+
+import argparse
+import sys
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .kernels.cr_tanh import cr_tanh
+from .kernels.pwl_tanh import pwl_tanh
+
+HIDDEN = 32
+INPUT = 4
+
+
+def make_data(n_seq, t_len, key):
+    """Noisy multi-sine sequences; target = next value of channel 0."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    freqs = jax.random.uniform(k1, (n_seq, INPUT), minval=0.05, maxval=0.3)
+    phases = jax.random.uniform(k2, (n_seq, INPUT), maxval=2 * jnp.pi)
+    t = jnp.arange(t_len + 1, dtype=jnp.float32)
+    xs = jnp.sin(freqs[:, None, :] * t[None, :, None] + phases[:, None, :])
+    xs = xs + 0.05 * jax.random.normal(k3, xs.shape)
+    return xs[:, :-1, :].astype(jnp.float32), xs[:, 1:, 0].astype(jnp.float32)
+
+
+def init_params(key):
+    fan = INPUT + HIDDEN
+    scale = (2.0 / (fan + HIDDEN)) ** 0.5
+    params = {}
+    for gate in ("i", "f", "g", "o"):
+        key, wk = jax.random.split(key)
+        params[f"w_{gate}"] = (
+            jax.random.normal(wk, (fan, HIDDEN), jnp.float32) * scale
+        )
+        params[f"b_{gate}"] = jnp.full(
+            (HIDDEN,), 1.0 if gate == "f" else 0.0, jnp.float32
+        )
+    key, wk = jax.random.split(key)
+    params["w_out"] = jax.random.normal(wk, (HIDDEN, 1), jnp.float32) * 0.1
+    params["b_out"] = jnp.zeros((1,), jnp.float32)
+    return params
+
+
+def forward(params, xs, act):
+    """xs (B,T,I) → per-step predictions (B,T)."""
+
+    def step(carry, x_t):
+        h, c = carry
+        xh = jnp.concatenate([x_t, h], axis=-1)
+        gi = M.hw_sigmoid(act, xh @ params["w_i"] + params["b_i"])
+        gf = M.hw_sigmoid(act, xh @ params["w_f"] + params["b_f"])
+        gg = act(xh @ params["w_g"] + params["b_g"])
+        go = M.hw_sigmoid(act, xh @ params["w_o"] + params["b_o"])
+        c = gf * c + gi * gg
+        h = go * act(c)
+        y = h @ params["w_out"] + params["b_out"]
+        return (h, c), y[:, 0]
+
+    b = xs.shape[0]
+    h0 = jnp.zeros((b, HIDDEN), jnp.float32)
+    c0 = jnp.zeros((b, HIDDEN), jnp.float32)
+    (_, _), ys = jax.lax.scan(step, (h0, c0), jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(ys, 0, 1)
+
+
+def mse(params, xs, ys, act):
+    pred = forward(params, xs, act)
+    return jnp.mean((pred - ys) ** 2)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--lr", type=float, default=0.05)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--tlen", type=int, default=48)
+    args = ap.parse_args()
+
+    key = jax.random.PRNGKey(42)
+    key, dk, pk = jax.random.split(key, 3)
+    xs, ys = make_data(args.batch * 4, args.tlen, dk)
+    xs_tr, ys_tr = xs[: args.batch * 3], ys[: args.batch * 3]
+    xs_te, ys_te = xs[args.batch * 3 :], ys[args.batch * 3 :]
+    params = init_params(pk)
+
+    loss_fn = jax.jit(lambda p, x, y: mse(p, x, y, jnp.tanh))
+    grad_fn = jax.jit(jax.grad(lambda p, x, y: mse(p, x, y, jnp.tanh)))
+
+    print(f"training LSTM({INPUT}->{HIDDEN}) on next-step prediction, "
+          f"{args.steps} steps, {xs_tr.shape[0]} train sequences of T={args.tlen}")
+    for step in range(args.steps + 1):
+        if step % max(1, args.steps // 10) == 0:
+            l = float(loss_fn(params, xs_tr, ys_tr))
+            print(f"  step {step:>4}  train_mse={l:.5f}")
+        g = grad_fn(params, xs_tr, ys_tr)
+        params = jax.tree.map(lambda p, gi: p - args.lr * gi, params, g)
+
+    results = {}
+    for name, act in (("exact", jnp.tanh), ("cr", cr_tanh), ("pwl", pwl_tanh)):
+        results[name] = float(mse(params, xs_te, ys_te, act))
+    print("\ndeployment parity (test MSE):")
+    for name, v in results.items():
+        print(f"  {name:<6} {v:.6f}")
+    rel_cr = abs(results["cr"] - results["exact"]) / results["exact"]
+    rel_pwl = abs(results["pwl"] - results["exact"]) / results["exact"]
+    print(f"\nrelative MSE drift: cr={rel_cr * 100:.3f}%  pwl={rel_pwl * 100:.3f}%")
+    # Deployment criterion: the CR block must be transparent to the model.
+    ok = rel_cr < 0.01
+    print("PASS" if ok else "FAIL", "(cr drift < 1%)")
+
+    # Sanity: a trained model should beat the untrained one clearly.
+    base = float(mse(init_params(jax.random.PRNGKey(7)), xs_te, ys_te, jnp.tanh))
+    print(f"(untrained baseline MSE: {base:.5f})")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

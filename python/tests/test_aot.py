@@ -1,0 +1,63 @@
+"""AOT pipeline tests: HLO text integrity + manifest contract."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot, model as M
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    # lower a small representative subset to keep the test quick
+    names = ["tanh_cr_1", "mlp_cr_1", "lstm_cr_1"]
+    manifest = aot.build(str(out), only=names, verbose=False)
+    return out, manifest
+
+
+def test_manifest_schema(built):
+    out, manifest = built
+    assert manifest["version"] == 1
+    assert len(manifest["artifacts"]) == 3
+    for a in manifest["artifacts"]:
+        for key in ("name", "model", "variant", "path", "batch", "inputs", "outputs"):
+            assert key in a, a
+        assert os.path.exists(out / a["path"])
+    # round-trips through json
+    text = (out / "manifest.json").read_text()
+    assert json.loads(text)["artifacts"][0]["batch"] >= 1
+
+
+def test_hlo_text_is_parseable_and_complete(built):
+    out, manifest = built
+    for a in manifest["artifacts"]:
+        text = (out / a["path"]).read_text()
+        assert text.startswith("HloModule"), a["name"]
+        assert "ROOT" in text
+        # the failure mode this guards: elided large constants would
+        # silently corrupt baked weights on the Rust side
+        assert "constant({...})" not in text, a["name"]
+
+
+def test_tanh_artifact_has_no_pallas_custom_call(built):
+    # interpret=True must lower to plain HLO ops the CPU client can run
+    out, manifest = built
+    text = (out / "tanh_cr_1.hlo.txt").read_text()
+    assert "custom-call" not in text.lower()
+
+
+def test_shapes_in_manifest_match_registry(built):
+    _, manifest = built
+    reg = {s["name"]: s for s in M.artifact_specs()}
+    for a in manifest["artifacts"]:
+        spec = reg[a["name"]]
+        assert a["inputs"] == [list(s) for s in spec["inputs"]]
+        assert a["outputs"] == [list(s) for s in spec["outputs"]]
+
+
+def test_lowering_is_deterministic(tmp_path):
+    t1 = aot.lower_spec(next(s for s in M.artifact_specs() if s["name"] == "tanh_cr_1"))
+    t2 = aot.lower_spec(next(s for s in M.artifact_specs() if s["name"] == "tanh_cr_1"))
+    assert t1 == t2

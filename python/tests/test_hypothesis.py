@@ -1,0 +1,81 @@
+"""Hypothesis sweeps: shapes, dtypes and values against the oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.cr_tanh import cr_tanh
+from compile.kernels.pwl_tanh import pwl_tanh
+
+finite_f32 = st.floats(
+    min_value=-16.0, max_value=16.0, allow_nan=False, width=32
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    rows=st.integers(1, 5),
+    cols=st.integers(1, 64),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_cr_matches_golden_on_random_arrays(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-8, 8, size=(rows, cols)).astype(np.float32)
+    got = np.asarray(cr_tanh(x))
+    want = ref.golden_cr_f32(x).reshape(rows, cols)
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    rows=st.integers(1, 4),
+    cols=st.integers(1, 48),
+    seed=st.integers(0, 2**32 - 1),
+)
+def test_pwl_matches_golden_on_random_arrays(rows, cols, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-8, 8, size=(rows, cols)).astype(np.float32)
+    got = np.asarray(pwl_tanh(x))
+    want = ref.golden_pwl_f32(x).reshape(rows, cols)
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(finite_f32, min_size=1, max_size=32))
+def test_output_always_in_unit_interval(vals):
+    y = np.asarray(cr_tanh(np.array([vals], np.float32)))
+    assert np.all(np.abs(y) <= 1.0)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(finite_f32, min_size=1, max_size=32))
+def test_odd_symmetry_on_floats(vals):
+    x = np.array([vals], np.float32)
+    # avoid the asymmetric saturation boundary at exactly -4.0
+    x = np.clip(x, -3.999, 3.999)
+    a = np.asarray(cr_tanh(x))
+    b = np.asarray(cr_tanh(-x))
+    assert np.array_equal(a, -b)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(finite_f32, min_size=2, max_size=32), st.integers(1, 4))
+def test_monotone_after_sorting(vals, k):
+    x = np.sort(np.array(vals, np.float32))
+    y = np.asarray(cr_tanh(x.reshape(1, -1), k=k))[0]
+    # CR interpolation of tanh is monotone to within one output ULP
+    diffs = np.diff(y)
+    assert np.all(diffs >= -1.0 / 8192.0 - 1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 65535), st.integers(1, 4))
+def test_pointwise_quantized_domain(idx, k):
+    raw = np.array([idx - 32768], np.int64)
+    x = (raw / 8192.0).astype(np.float32)
+    got = np.asarray(cr_tanh(x.reshape(1, 1)))[0, 0]
+    want = ref.q13_to_f64(ref.golden_cr_q13(raw, k))[0]
+    # note: cr_tanh defaults to k=3; evaluate at the same k
+    got_k = np.asarray(cr_tanh(x.reshape(1, 1), k=k))[0, 0]
+    assert got_k == np.float32(want)
+    assert np.abs(got) <= 1.0

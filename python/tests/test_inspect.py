@@ -1,0 +1,71 @@
+"""L2 structural perf assertions over freshly-lowered HLO."""
+
+import pytest
+
+from compile import aot, model as M
+from compile.inspect_hlo import analyze, op_histogram
+
+
+@pytest.fixture(scope="module")
+def tanh_hlo():
+    spec = next(s for s in M.artifact_specs() if s["name"] == "tanh_cr_32")
+    return aot.lower_spec(spec)
+
+
+@pytest.fixture(scope="module")
+def lstm_hlo():
+    spec = next(s for s in M.artifact_specs() if s["name"] == "lstm_cr_1")
+    return aot.lower_spec(spec)
+
+
+def test_tanh_kernel_is_straightline_elementwise(tanh_hlo):
+    info = analyze(tanh_hlo)
+    assert not info["has_custom_call"], "Mosaic custom-call would break CPU PJRT"
+    # exactly one while is allowed: the Pallas grid loop over rows
+    # (the BlockSpec schedule); a second would mean recomputation.
+    assert info["ops"].get("while", 0) <= 1, info["ops"]
+    assert info["dots"] == 0, "no matmul in the activation"
+    # the 4 taps gather from the LUT; XLA may fuse them into <= 4 gathers
+    assert 1 <= info["gathers"] <= 8, info["gathers"]
+
+
+def test_tanh_kernel_op_budget(tanh_hlo):
+    # Fusion/no-recompute check: the whole quantized CR evaluation is a
+    # few dozen elementwise ops. A regression that duplicates the basis
+    # computation or the quantization would blow this budget.
+    # Pallas interpret mode wraps block I/O in `call` computations, which
+    # inflates the raw count; the budget still catches a duplicated basis
+    # or quantization computation (which would add ~100 arithmetic ops).
+    info = analyze(tanh_hlo)
+    assert info["total_ops"] < 400, f"op budget exceeded: {info['ops']}"
+    arith = sum(info["ops"][o] for o in ("multiply", "add", "subtract", "divide"))
+    assert arith < 80, f"arithmetic budget exceeded: {info['ops']}"
+
+
+def test_lstm_lowered_to_single_loop(lstm_hlo):
+    info = analyze(lstm_hlo)
+    # lax.scan -> one while loop; each pallas_call in the body adds its
+    # grid loop, so expect a small bounded number, not an explosion.
+    whiles = info["ops"].get("while", 0)
+    assert 1 <= whiles <= 8, info["ops"]
+    assert not info["has_custom_call"]
+    # 4 gates x (matmul) inside the body, fused by XLA into >= 1 dot
+    assert info["dots"] >= 1
+
+
+def test_histogram_parser_on_known_snippet():
+    snippet = """
+HloModule test
+ENTRY main {
+  p = f32[4]{0} parameter(0)
+  c = f32[4]{0} constant({1, 2, 3, 4})
+  a = f32[4]{0} add(p, c)
+  m = f32[4]{0} multiply(a, a)
+  ROOT t = (f32[4]{0}) tuple(m)
+}
+"""
+    ops = op_histogram(snippet)
+    assert ops["add"] == 1
+    assert ops["multiply"] == 1
+    assert ops["parameter"] == 1
+    assert "tuple" not in ops

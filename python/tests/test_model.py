@@ -1,0 +1,96 @@
+"""L2 model tests: shapes, determinism, variant parity."""
+
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def rng():
+    return np.random.default_rng(0)
+
+
+class TestTanhFamily:
+    def test_shapes_and_tuple_output(self, rng):
+        fn = M.tanh_fn("cr")
+        x = rng.uniform(-4, 4, (8, M.TANH_TILE)).astype(np.float32)
+        out = fn(x)
+        assert isinstance(out, tuple) and len(out) == 1
+        assert out[0].shape == (8, M.TANH_TILE)
+
+    def test_cr_close_to_exact(self, rng):
+        x = rng.uniform(-4, 4, (4, M.TANH_TILE)).astype(np.float32)
+        y_cr = np.asarray(M.tanh_fn("cr")(x)[0])
+        y_ex = np.asarray(M.tanh_fn("exact")(x)[0])
+        assert np.max(np.abs(y_cr - y_ex)) < 3e-4  # table II bound + quant
+
+    def test_pwl_visibly_worse_than_cr(self, rng):
+        x = rng.uniform(-4, 4, (4, M.TANH_TILE)).astype(np.float32)
+        y_ex = np.asarray(M.tanh_fn("exact")(x)[0])
+        err_cr = np.max(np.abs(np.asarray(M.tanh_fn("cr")(x)[0]) - y_ex))
+        err_pwl = np.max(np.abs(np.asarray(M.tanh_fn("pwl")(x)[0]) - y_ex))
+        assert err_pwl > 3 * err_cr
+
+
+class TestMlp:
+    def test_shapes(self, rng):
+        x = rng.normal(0, 1, (8, M.MLP_SIZES[0])).astype(np.float32)
+        out = M.mlp_fn("cr")(x)[0]
+        assert out.shape == (8, M.MLP_SIZES[-1])
+
+    def test_params_deterministic(self):
+        a = M.mlp_params()
+        b = M.mlp_params()
+        for (wa, _), (wb, _) in zip(a, b):
+            assert np.array_equal(np.asarray(wa), np.asarray(wb))
+
+    def test_cr_vs_exact_outputs_close(self, rng):
+        x = rng.normal(0, 1, (8, M.MLP_SIZES[0])).astype(np.float32)
+        y_cr = np.asarray(M.mlp_fn("cr")(x)[0])
+        y_ex = np.asarray(M.mlp_fn("exact")(x)[0])
+        # activation error ~1.5e-4 per layer, amplified by ~unit-norm weights
+        assert np.max(np.abs(y_cr - y_ex)) < 0.02
+        # decisions agree
+        assert np.array_equal(np.argmax(y_cr, -1), np.argmax(y_ex, -1))
+
+
+class TestLstm:
+    def test_shapes(self, rng):
+        x = rng.normal(0, 1, (4, M.LSTM_STEPS, M.LSTM_INPUT)).astype(np.float32)
+        h = M.lstm_fn("cr")(x)[0]
+        assert h.shape == (4, M.LSTM_HIDDEN)
+
+    def test_hidden_state_bounded(self, rng):
+        x = rng.normal(0, 2, (2, M.LSTM_STEPS, M.LSTM_INPUT)).astype(np.float32)
+        h = np.asarray(M.lstm_fn("cr")(x)[0])
+        assert np.all(np.abs(h) <= 1.0)
+
+    def test_cr_drift_small_over_sequence(self, rng):
+        x = rng.normal(0, 1, (4, M.LSTM_STEPS, M.LSTM_INPUT)).astype(np.float32)
+        h_cr = np.asarray(M.lstm_fn("cr")(x)[0])
+        h_ex = np.asarray(M.lstm_fn("exact")(x)[0])
+        assert np.max(np.abs(h_cr - h_ex)) < 0.02
+
+
+class TestArtifactRegistry:
+    def test_registry_complete(self):
+        specs = M.artifact_specs()
+        names = {s["name"] for s in specs}
+        assert len(names) == len(specs) == 19
+        for fam, variants, batches in (
+            ("tanh", ("cr", "pwl", "exact"), (1, 8, 32)),
+            ("mlp", ("cr", "exact"), (1, 8, 32)),
+            ("lstm", ("cr", "exact"), (1, 8)),
+        ):
+            for v in variants:
+                for b in batches:
+                    assert f"{fam}_{v}_{b}" in names
+
+    def test_specs_runnable(self):
+        for spec in M.artifact_specs():
+            if spec["batch"] != 1:
+                continue  # keep the smoke fast: batch-1 of each family
+            x = np.zeros(spec["inputs"][0], np.float32)
+            out = spec["fn"](x)
+            assert out[0].shape == tuple(spec["outputs"][0]), spec["name"]

@@ -1,0 +1,87 @@
+//! Bench target `approx_methods`: scalar hot-path latency of every
+//! approximation method (the L3 software model of each datapath), plus
+//! the CR configuration sweep — the perf numbers in EXPERIMENTS.md §Perf.
+//!
+//! ```sh
+//! cargo bench --bench approx_methods          # full
+//! CRSPLINE_BENCH_FAST=1 cargo bench --bench approx_methods
+//! ```
+
+use crspline::approx::{self, Boundary, CatmullRom, TanhApprox};
+use crspline::bench::{black_box, Bencher};
+use crspline::util::rng::Rng;
+
+const N: usize = 4096;
+
+fn inputs() -> Vec<i32> {
+    let mut rng = Rng::new(42);
+    (0..N).map(|_| rng.range_i64(i16::MIN as i64, i16::MAX as i64) as i32).collect()
+}
+
+fn main() {
+    let xs = inputs();
+    let mut b = Bencher::new();
+
+    println!("# scalar hot path, {N} random Q2.13 inputs per iteration\n");
+    for m in approx::all_methods() {
+        let name = format!("approx/{}", m.name());
+        b.bench_with_items(&name, N as u64, || {
+            let mut acc = 0i32;
+            for &x in &xs {
+                acc = acc.wrapping_add(m.eval_q13(black_box(x)));
+            }
+            black_box(acc);
+        });
+    }
+
+    println!("\n# CR sweep configurations (Table I/II rows)\n");
+    for k in 1..=4 {
+        let cr = CatmullRom::new(k, Boundary::Extend);
+        b.bench_with_items(&format!("cr/k{k}-depth{}", 1 << (k + 2)), N as u64, || {
+            let mut acc = 0i32;
+            for &x in &xs {
+                acc = acc.wrapping_add(cr.eval_q13(black_box(x)));
+            }
+            black_box(acc);
+        });
+    }
+
+    println!("\n# basis-bus ablation (area knob; see EXPERIMENTS.md)\n");
+    for bf in [10u32, 14, 16, 20] {
+        let cr = CatmullRom::paper_default().with_basis_frac(bf);
+        b.bench_with_items(&format!("cr/basis-frac-{bf}"), N as u64, || {
+            let mut acc = 0i32;
+            for &x in &xs {
+                acc = acc.wrapping_add(cr.eval_q13(black_box(x)));
+            }
+            black_box(acc);
+        });
+    }
+
+    println!("\n# batch API (perf pass: contiguous taps + i64 MAC + buffer reuse)\n");
+    {
+        let cr = CatmullRom::paper_default();
+        let mut out = vec![0i32; N];
+        b.bench_with_items("cr/eval_slice", N as u64, || {
+            cr.eval_slice(black_box(&xs), black_box(&mut out));
+        });
+    }
+
+    println!("\n# f64 convenience interface (includes quantize/dequantize)\n");
+    let cr = CatmullRom::paper_default();
+    let fxs: Vec<f64> = xs.iter().map(|&x| x as f64 / 8192.0).collect();
+    b.bench_with_items("cr/eval_f64", N as u64, || {
+        let mut acc = 0.0f64;
+        for &x in &fxs {
+            acc += cr.eval_f64(black_box(x));
+        }
+        black_box(acc);
+    });
+    b.bench_with_items("libm/tanh-f64 (reference)", N as u64, || {
+        let mut acc = 0.0f64;
+        for &x in &fxs {
+            acc += black_box(x).tanh();
+        }
+        black_box(acc);
+    });
+}

@@ -1,0 +1,52 @@
+//! Bench target `datapath`: cycle-accurate Fig. 2/3 pipeline simulator —
+//! samples/second of the simulation itself, poly vs t-LUT variants, and
+//! the modelled silicon throughput for context (§V).
+//!
+//! ```sh
+//! cargo bench --bench datapath
+//! ```
+
+use crspline::bench::{black_box, Bencher};
+use crspline::hw::datapath::{CrDatapath, TVariant};
+use crspline::hw::timing::{cr_poly_timing, cr_tlut_timing};
+use crspline::util::rng::Rng;
+
+const N: usize = 8192;
+
+fn main() {
+    let mut rng = Rng::new(7);
+    let xs: Vec<i32> =
+        (0..N).map(|_| rng.range_i64(i16::MIN as i64, i16::MAX as i64) as i32).collect();
+    let mut b = Bencher::new();
+
+    println!("# cycle-accurate pipeline simulation, {N} samples per iteration\n");
+    b.bench_with_items("datapath/poly", N as u64, || {
+        let mut dp = CrDatapath::new(3, TVariant::Poly);
+        black_box(dp.run(black_box(&xs)));
+    });
+    b.bench_with_items("datapath/tlut-8bit", N as u64, || {
+        let mut dp = CrDatapath::new(3, TVariant::Lut { addr_bits: 8 });
+        black_box(dp.run(black_box(&xs)));
+    });
+    for k in [1u32, 4] {
+        b.bench_with_items(&format!("datapath/poly-k{k}"), N as u64, || {
+            let mut dp = CrDatapath::new(k, TVariant::Poly);
+            black_box(dp.run(black_box(&xs)));
+        });
+    }
+
+    // The modelled silicon numbers these simulations stand in for (§V).
+    println!("\n# modelled silicon (timing model, 1 sample/cycle):");
+    for (name, t) in [
+        ("t-polynomial", cr_poly_timing(10, 16)),
+        ("t-LUT", cr_tlut_timing(10, 16)),
+    ] {
+        let fmax = t.fmax_mhz();
+        println!(
+            "  {name:<14} fmax={fmax:>4.0}MHz -> {:>5.0}M samples/s (critical: {})",
+            fmax, // 1 sample per cycle, fully pipelined
+            t.critical().0
+        );
+    }
+    println!("\n  (paper synthesized at 500 MHz = 500M samples/s fully pipelined)");
+}

@@ -1,0 +1,59 @@
+//! Bench target `runtime_exec`: PJRT executable invocation latency per
+//! artifact (the L3 runtime's unit of work). Skips politely when
+//! artifacts have not been built.
+//!
+//! ```sh
+//! make artifacts && cargo bench --bench runtime_exec
+//! ```
+
+use crspline::bench::{black_box, Bencher};
+use crspline::runtime::{Engine, Manifest};
+use crspline::util::rng::Rng;
+
+fn main() {
+    let manifest = match Manifest::load(crspline::runtime::artifacts::default_dir()) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("SKIP runtime_exec bench: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+    let mut engine = Engine::cpu().expect("PJRT CPU client");
+    engine.load_all(&manifest).expect("compile artifacts");
+    println!("# PJRT exec latency per artifact ({} compiled)\n", engine.models.len());
+
+    let mut rng = Rng::new(3);
+    let mut b = Bencher::new();
+    for name in [
+        "tanh_cr_1",
+        "tanh_cr_8",
+        "tanh_cr_32",
+        "tanh_exact_32",
+        "tanh_pwl_32",
+        "mlp_cr_1",
+        "mlp_cr_32",
+        "mlp_exact_32",
+        "lstm_cr_1",
+        "lstm_cr_8",
+        "lstm_exact_8",
+    ] {
+        let Some(m) = engine.by_name(name) else { continue };
+        let input: Vec<f32> =
+            (0..m.spec.input_elems(0)).map(|_| rng.f64_range(-2.0, 2.0) as f32).collect();
+        let elems = m.spec.input_elems(0) as u64;
+        b.bench_with_items(&format!("pjrt/{name}"), elems, || {
+            black_box(m.run_f32(black_box(&[input.clone()])).expect("exec"));
+        });
+    }
+
+    println!("\n# batching amortization (per-sample latency, tanh_cr family):");
+    for (name, batch) in [("tanh_cr_1", 1u64), ("tanh_cr_8", 8), ("tanh_cr_32", 32)] {
+        if let Some(meas) = b.results.iter().find(|m| m.name.ends_with(name)) {
+            println!(
+                "  batch {batch:>2}: {:>8.1}us/exec = {:>6.2}us/sample",
+                meas.mean_ns() / 1000.0,
+                meas.mean_ns() / 1000.0 / batch as f64
+            );
+        }
+    }
+}

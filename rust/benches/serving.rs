@@ -1,0 +1,150 @@
+//! Bench target `serving`: end-to-end coordinator throughput/latency —
+//! batching-policy sweep over the mock backend (isolates coordinator
+//! overhead) and the full PJRT path when artifacts exist.
+//!
+//! ```sh
+//! cargo bench --bench serving
+//! ```
+
+use crspline::coordinator::{
+    BatchPolicy, MockBackend, ModelKey, PjrtBackend, Router, Server, ServerConfig,
+};
+use crspline::runtime::Manifest;
+use crspline::util::rng::Rng;
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+fn mock_router() -> Router {
+    let manifest = Manifest::parse(
+        r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "t1", "model": "tanh", "variant": "cr",
+             "path": "x", "batch": 1, "inputs": [[1, 256]], "outputs": [[1, 256]]},
+            {"name": "t8", "model": "tanh", "variant": "cr",
+             "path": "x", "batch": 8, "inputs": [[8, 256]], "outputs": [[8, 256]]},
+            {"name": "t32", "model": "tanh", "variant": "cr",
+             "path": "x", "batch": 32, "inputs": [[32, 256]], "outputs": [[32, 256]]}
+        ]}"#,
+        PathBuf::from("."),
+    )
+    .unwrap();
+    Router::from_manifest(&manifest)
+}
+
+/// Fire `total` requests from `clients` threads; return (elapsed, metrics).
+fn drive(server: Arc<Server>, clients: usize, total: usize) -> (Duration, f64) {
+    let per = total / clients;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let server = Arc::clone(&server);
+            std::thread::spawn(move || {
+                let key = ModelKey::new("tanh", "cr");
+                let mut rng = Rng::new(c as u64);
+                for _ in 0..per {
+                    let payload: Vec<f32> =
+                        (0..256).map(|_| rng.f64_range(-4.0, 4.0) as f32).collect();
+                    server.submit_wait(key.clone(), payload).unwrap().output().unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let dt = t0.elapsed();
+    (dt, total as f64 / dt.as_secs_f64())
+}
+
+fn main() {
+    let fast = std::env::var("CRSPLINE_BENCH_FAST").is_ok();
+    let total = if fast { 512 } else { 2048 };
+
+    println!("# coordinator overhead isolation (mock backend), {total} requests\n");
+    println!(
+        "{:<44} {:>10} {:>10} {:>8} {:>9}",
+        "config", "req/s", "p99 e2e", "batch", "padding"
+    );
+    for (max_batch, wait_us) in
+        [(1usize, 0u64), (8, 200), (8, 1000), (32, 500), (32, 2000), (32, 8000)]
+    {
+        let router = mock_router();
+        let mut cfg = ServerConfig::new(router.clone(), MockBackend::factory(router));
+        cfg.workers = 4;
+        cfg.policy = BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_micros(wait_us),
+        };
+        let server = Arc::new(Server::start(cfg).unwrap());
+        let (_, rps) = drive(Arc::clone(&server), 8, total);
+        let m = Arc::try_unwrap(server).ok().expect("sole owner").shutdown();
+        println!(
+            "{:<44} {:>10.0} {:>10} {:>8.2} {:>8.1}%",
+            format!("mock workers=4 max_batch={max_batch} wait={wait_us}us"),
+            rps,
+            crspline::util::hist::fmt_ns(m.e2e.quantile(0.99)),
+            m.mean_batch(),
+            m.padding_ratio() * 100.0
+        );
+    }
+
+    // Open-loop trace replay: offered load vs achieved latency.
+    println!("\n# open-loop Poisson traffic (mock backend, 4 workers, max_batch=16, wait=400us)\n");
+    println!("{:<28} {:>10} {:>10} {:>10} {:>8}", "offered", "achieved", "p50 e2e", "p99 e2e", "batch");
+    for rate in [5_000.0f64, 20_000.0, 60_000.0] {
+        use crspline::coordinator::{replay, Trace};
+        let router = mock_router();
+        let mut cfg = ServerConfig::new(router.clone(), MockBackend::factory(router));
+        cfg.workers = 4;
+        cfg.policy = BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(400) };
+        let server = Server::start(cfg).unwrap();
+        let dur = if fast { Duration::from_millis(150) } else { Duration::from_millis(500) };
+        let trace = Trace::poisson(ModelKey::new("tanh", "cr"), rate, dur, 11);
+        let report = replay(&server, &trace, |_| vec![0.5f32; 256]);
+        let m = server.shutdown();
+        println!(
+            "{:<28} {:>10.0} {:>10} {:>10} {:>8.2}",
+            format!("{:.0} req/s ({} reqs)", rate, trace.len()),
+            report.throughput(),
+            crspline::util::hist::fmt_ns(report.e2e.quantile(0.5)),
+            crspline::util::hist::fmt_ns(report.e2e.quantile(0.99)),
+            m.mean_batch(),
+        );
+        assert_eq!(report.failed, 0);
+    }
+
+    // The real path, when artifacts are available.
+    match Manifest::load(crspline::runtime::artifacts::default_dir()) {
+        Err(e) => eprintln!("\nSKIP PJRT serving bench: {e:#}"),
+        Ok(manifest) => {
+            println!("\n# full PJRT path ({} artifacts), {total} requests\n", manifest.artifacts.len());
+            for (workers, max_batch, wait_us) in [(1usize, 32usize, 1500u64), (2, 32, 1500), (4, 32, 1500), (2, 8, 500)] {
+                let router = Router::from_manifest(&manifest);
+                let dir = crspline::runtime::artifacts::default_dir();
+                let mut cfg = ServerConfig::new(router, PjrtBackend::factory(dir));
+                cfg.workers = workers;
+                cfg.policy = BatchPolicy {
+                    max_batch,
+                    max_wait: Duration::from_micros(wait_us),
+                };
+                let server = Arc::new(Server::start(cfg).unwrap());
+                // warm up compile before timing
+                let _ = server
+                    .submit_wait(ModelKey::new("tanh", "cr"), vec![0.0; 256])
+                    .unwrap();
+                let (_, rps) = drive(Arc::clone(&server), 8, total);
+                let m = Arc::try_unwrap(server).ok().expect("sole owner").shutdown();
+                println!(
+                    "{:<44} {:>10.0} {:>10} {:>8.2} {:>8.1}%",
+                    format!("pjrt workers={workers} max_batch={max_batch} wait={wait_us}us"),
+                    rps,
+                    crspline::util::hist::fmt_ns(m.e2e.quantile(0.99)),
+                    m.mean_batch(),
+                    m.padding_ratio() * 100.0
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! Bench target `tables`: regenerates EVERY table and figure in the paper
+//! and prints measured-vs-published rows. Deterministic (accuracy, not
+//! timing) — this is the harness EXPERIMENTS.md quotes.
+//!
+//! ```sh
+//! cargo bench --bench tables
+//! ```
+
+use crspline::analysis::{figures, tables};
+use crspline::hw::synth;
+
+fn main() {
+    println!("==================================================================");
+    println!(" PAPER ARTIFACT REGENERATION — measured vs published");
+    println!("==================================================================\n");
+
+    println!("{}", tables::table1());
+    println!();
+    println!("{}", tables::table2());
+    println!();
+    println!("{}", synth::table3());
+    let problems = synth::check_orderings(&synth::table3_rows());
+    match problems.is_empty() {
+        true => println!("\nTable III ordering checks: OK"),
+        false => {
+            for p in &problems {
+                println!("Table III ordering check FAILED: {p}");
+            }
+            std::process::exit(1);
+        }
+    }
+
+    println!();
+    println!("{}", synth::variant_tradeoff());
+
+    // Figure 1: emit alongside the tables so `cargo bench` regenerates
+    // every visual artifact in one run.
+    let csv = figures::figure1_csv(512);
+    let path = std::env::temp_dir().join("crspline_figure1.csv");
+    std::fs::write(&path, &csv).expect("write figure1");
+    let (mut max_pwl, mut max_cr): (f64, f64) = (0.0, 0.0);
+    for line in csv.lines().skip(1) {
+        let f: Vec<f64> = line.split(',').map(|v| v.parse().unwrap()).collect();
+        max_pwl = max_pwl.max(f[4].abs());
+        max_cr = max_cr.max(f[5].abs());
+    }
+    println!(
+        "\nFIGURE 1 series -> {} (512 pts; max|pwl err|={:.4}, max|cr err|={:.4})",
+        path.display(),
+        max_pwl,
+        max_cr
+    );
+
+    // Error profile (the visual behind §II's method discussion).
+    use crspline::approx::{self, TanhApprox};
+    let methods = approx::all_methods();
+    let refs: Vec<&dyn TanhApprox> = methods.iter().map(|m| m.as_ref()).collect();
+    let profile = figures::error_profile_csv(&refs, 1024);
+    let ppath = std::env::temp_dir().join("crspline_error_profile.csv");
+    std::fs::write(&ppath, profile).expect("write profile");
+    println!("ERROR PROFILE series -> {} (1024 pts, {} methods)", ppath.display(), refs.len());
+}

@@ -1,0 +1,92 @@
+//! Figure data emission.
+//!
+//! Fig. 1 of the paper shows tanh with its piecewise-linear approximation;
+//! we emit the same series as CSV (x, tanh, pwl, cr, pwl_err, cr_err) so
+//! any plotting tool reproduces the figure. A second series emits the
+//! per-method error *profile* (error vs x), the visual behind §II's
+//! Taylor/region observations.
+
+use crate::approx::TanhApprox;
+use crate::fixed::{q13, q13_to_f64};
+
+/// Fig. 1 series: tanh and its approximations over (-4, 4).
+/// `points` samples are uniformly spaced; returns CSV text with header.
+pub fn figure1_csv(points: usize) -> String {
+    let pwl = crate::approx::Pwl::new(1); // h = 0.5, the coarse PWL the figure shows
+    let cr = crate::approx::CatmullRom::new(1, crate::approx::Boundary::Extend);
+    let mut out = String::from("x,tanh,pwl_h0.5,cr_h0.5,pwl_err,cr_err\n");
+    for i in 0..points {
+        let x = -4.0 + 8.0 * (i as f64 + 0.5) / points as f64;
+        let xi = q13(x);
+        let exact = q13_to_f64(xi).tanh();
+        let yp = q13_to_f64(pwl.eval_q13(xi));
+        let yc = q13_to_f64(cr.eval_q13(xi));
+        out.push_str(&format!(
+            "{:.5},{:.6},{:.6},{:.6},{:.3e},{:.3e}\n",
+            x,
+            exact,
+            yp,
+            yc,
+            yp - exact,
+            yc - exact
+        ));
+    }
+    out
+}
+
+/// Error-profile series for a set of methods (error vs x).
+pub fn error_profile_csv(methods: &[&dyn TanhApprox], points: usize) -> String {
+    let mut out = String::from("x");
+    for m in methods {
+        out.push_str(&format!(",{}", m.name()));
+    }
+    out.push('\n');
+    for i in 0..points {
+        let x = -4.0 + 8.0 * (i as f64 + 0.5) / points as f64;
+        let xi = q13(x);
+        out.push_str(&format!("{x:.5}"));
+        for m in methods {
+            out.push_str(&format!(",{:.4e}", super::metrics::point_error(*m, xi)));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure1_has_requested_points_and_header() {
+        let csv = figure1_csv(100);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines.len(), 101);
+        assert!(lines[0].starts_with("x,tanh"));
+        assert_eq!(lines[1].split(',').count(), 6);
+    }
+
+    #[test]
+    fn figure1_pwl_error_visibly_larger_than_cr() {
+        // The figure's point: at h=0.5 the PWL chords visibly cut the
+        // curve while CR hugs it.
+        let csv = figure1_csv(512);
+        let mut max_pwl: f64 = 0.0;
+        let mut max_cr: f64 = 0.0;
+        for line in csv.lines().skip(1) {
+            let f: Vec<f64> = line.split(',').map(|v| v.parse().unwrap()).collect();
+            max_pwl = max_pwl.max(f[4].abs());
+            max_cr = max_cr.max(f[5].abs());
+        }
+        assert!(max_pwl > 3.0 * max_cr, "pwl={max_pwl} cr={max_cr}");
+    }
+
+    #[test]
+    fn error_profile_emits_one_column_per_method() {
+        let cr = crate::approx::CatmullRom::paper_default();
+        let ta = crate::approx::Taylor::paper_default();
+        let csv = error_profile_csv(&[&cr, &ta], 32);
+        assert_eq!(csv.lines().next().unwrap().split(',').count(), 3);
+        assert_eq!(csv.lines().count(), 33);
+    }
+}

@@ -1,0 +1,104 @@
+//! Exhaustive error metrics over the Q2.13 input space.
+
+use crate::approx::TanhApprox;
+use crate::fixed::q13_to_f64;
+
+/// Error statistics of an approximation against f64 tanh.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ErrorStats {
+    pub rms: f64,
+    pub max: f64,
+    pub mean_abs: f64,
+    /// Input (raw Q2.13) where the max error occurs.
+    pub max_at: i32,
+}
+
+impl ErrorStats {
+    /// Accuracy gain factor vs another method (paper's "Accuracy Gain (x)"
+    /// column), on the chosen metric.
+    pub fn gain_rms(&self, other: &ErrorStats) -> f64 {
+        other.rms / self.rms
+    }
+    pub fn gain_max(&self, other: &ErrorStats) -> f64 {
+        other.max / self.max
+    }
+}
+
+/// Sweep the full 16-bit input space (-32768..=32767) — exactly the
+/// paper's evaluation — and collect error statistics.
+pub fn sweep_full(approx: &dyn TanhApprox) -> ErrorStats {
+    sweep_stride(approx, 1)
+}
+
+/// Strided sweep for quick checks (stride 1 = exhaustive).
+pub fn sweep_stride(approx: &dyn TanhApprox, stride: usize) -> ErrorStats {
+    assert!(stride >= 1);
+    let mut sq_sum = 0.0f64;
+    let mut abs_sum = 0.0f64;
+    let mut max = 0.0f64;
+    let mut max_at = 0i32;
+    let mut n = 0u64;
+    let mut x = i16::MIN as i32;
+    while x <= i16::MAX as i32 {
+        let exact = q13_to_f64(x).tanh();
+        let err = q13_to_f64(approx.eval_q13(x)) - exact;
+        sq_sum += err * err;
+        abs_sum += err.abs();
+        if err.abs() > max {
+            max = err.abs();
+            max_at = x;
+        }
+        n += 1;
+        x += stride as i32;
+    }
+    ErrorStats {
+        rms: (sq_sum / n as f64).sqrt(),
+        max,
+        mean_abs: abs_sum / n as f64,
+        max_at,
+    }
+}
+
+/// Error of one point (helper for error-profile figures).
+pub fn point_error(approx: &dyn TanhApprox, x: i32) -> f64 {
+    q13_to_f64(approx.eval_q13(x)) - q13_to_f64(x).tanh()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{CatmullRom, QuantizedTanh};
+
+    #[test]
+    fn ideal_quantizer_stats_match_theory() {
+        // Uniform quantization: RMS ~ ULP/sqrt(12), max ~ ULP/2.
+        let s = sweep_full(&QuantizedTanh);
+        let ulp = crate::fixed::ULP;
+        assert!((s.rms - ulp / 12f64.sqrt()).abs() < ulp * 0.1, "rms={}", s.rms);
+        assert!(s.max <= ulp / 2.0 + 1e-12);
+        assert!(s.mean_abs <= s.rms);
+    }
+
+    #[test]
+    fn stats_ordering_invariants() {
+        let s = sweep_stride(&CatmullRom::paper_default(), 7);
+        assert!(s.mean_abs <= s.rms && s.rms <= s.max);
+        assert!(s.max > 0.0);
+    }
+
+    #[test]
+    fn strided_approximates_full() {
+        let cr = CatmullRom::paper_default();
+        let full = sweep_full(&cr);
+        let strided = sweep_stride(&cr, 9);
+        assert!((full.rms - strided.rms).abs() / full.rms < 0.05);
+    }
+
+    #[test]
+    fn gain_factors() {
+        let a = ErrorStats { rms: 0.001, max: 0.002, mean_abs: 0.0005, max_at: 0 };
+        let b = ErrorStats { rms: 0.01, max: 0.01, mean_abs: 0.005, max_at: 0 };
+        assert!((a.gain_rms(&b) - 10.0).abs() < 1e-12);
+        assert!((a.gain_max(&b) - 5.0).abs() < 1e-12);
+    }
+}

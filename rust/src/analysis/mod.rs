@@ -1,0 +1,12 @@
+//! Error analysis and table/figure regeneration.
+//!
+//! [`metrics`] computes exhaustive error statistics over the full 2^16
+//! Q2.13 input space (the paper's methodology: "performed for 16-bit
+//! signed input x such that -4 < x < 4"); [`sweep`] runs the Table I/II
+//! configuration sweeps; [`tables`] renders them next to the published
+//! values; [`figures`] emits the Fig. 1 series.
+
+pub mod figures;
+pub mod metrics;
+pub mod sweep;
+pub mod tables;

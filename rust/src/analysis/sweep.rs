@@ -1,0 +1,96 @@
+//! Configuration sweeps regenerating Tables I and II.
+
+use super::metrics::{sweep_full, ErrorStats};
+use crate::approx::{CatmullRom, Boundary, Pwl};
+
+/// One row of Table I/II: a (sampling period, LUT depth) configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SweepRow {
+    pub k: u32,
+    pub sampling_period: f64,
+    pub lut_depth: usize,
+    pub pwl: ErrorStats,
+    pub cr: ErrorStats,
+}
+
+impl SweepRow {
+    pub fn gain_rms(&self) -> f64 {
+        self.cr.gain_rms(&self.pwl)
+    }
+    pub fn gain_max(&self) -> f64 {
+        self.cr.gain_max(&self.pwl)
+    }
+}
+
+/// Published Table I (RMS): (period, depth, pwl, cr, gain).
+pub const PAPER_TABLE1: [(f64, usize, f64, f64, f64); 4] = [
+    (0.5, 8, 0.008201, 0.001462, 5.61),
+    (0.25, 16, 0.002078, 0.000147, 14.16),
+    (0.125, 32, 0.000523, 0.000052, 10.02),
+    (0.0625, 64, 0.000135, 0.000049, 2.76),
+];
+
+/// Published Table II (max error).
+pub const PAPER_TABLE2: [(f64, usize, f64, f64, f64); 4] = [
+    (0.5, 8, 0.023330, 0.005179, 4.50),
+    (0.25, 16, 0.006015, 0.000602, 9.99),
+    (0.125, 32, 0.001584, 0.000152, 10.42),
+    (0.0625, 64, 0.000470, 0.000122, 3.84),
+];
+
+/// Run the PWL-vs-CR sweep over the paper's four configurations
+/// (k = 1..=4, i.e. h ∈ {0.5, 0.25, 0.125, 0.0625}).
+pub fn run_sweep() -> Vec<SweepRow> {
+    (1..=4)
+        .map(|k| {
+            let pwl = Pwl::new(k);
+            let cr = CatmullRom::new(k, Boundary::Extend);
+            SweepRow {
+                k,
+                sampling_period: 0.5f64.powi(k as i32),
+                lut_depth: 1 << (k + 2),
+                pwl: sweep_full(&pwl),
+                cr: sweep_full(&cr),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The core reproduction claim: every cell of Tables I and II matches
+    /// the published digits. (RMS/max printed to 6 decimals; the paper's
+    /// Table II h=0.5 PWL cell prints 0.023330 vs our 0.023333 — a
+    /// last-digit transcription-level difference, tolerated at 1e-5.)
+    #[test]
+    fn tables_match_published_values() {
+        let rows = run_sweep();
+        for (row, (p1, p2)) in rows.iter().zip(PAPER_TABLE1.iter().zip(PAPER_TABLE2.iter())) {
+            assert_eq!(row.lut_depth, p1.1);
+            assert!((row.sampling_period - p1.0).abs() < 1e-12);
+            assert!((row.pwl.rms - p1.2).abs() < 1e-5, "T1 pwl k={}: {} vs {}", row.k, row.pwl.rms, p1.2);
+            assert!((row.cr.rms - p1.3).abs() < 1e-5, "T1 cr k={}: {} vs {}", row.k, row.cr.rms, p1.3);
+            assert!((row.pwl.max - p2.2).abs() < 1e-5, "T2 pwl k={}: {} vs {}", row.k, row.pwl.max, p2.2);
+            assert!((row.cr.max - p2.3).abs() < 1e-5, "T2 cr k={}: {} vs {}", row.k, row.cr.max, p2.3);
+        }
+    }
+
+    #[test]
+    fn gain_columns_match() {
+        let rows = run_sweep();
+        for (row, (p1, p2)) in rows.iter().zip(PAPER_TABLE1.iter().zip(PAPER_TABLE2.iter())) {
+            assert!((row.gain_rms() - p1.4).abs() < 0.25, "T1 gain k={}: {}", row.k, row.gain_rms());
+            assert!((row.gain_max() - p2.4).abs() < 0.25, "T2 gain k={}: {}", row.k, row.gain_max());
+        }
+    }
+
+    #[test]
+    fn cr_beats_pwl_at_every_depth() {
+        for row in run_sweep() {
+            assert!(row.cr.rms < row.pwl.rms);
+            assert!(row.cr.max < row.pwl.max);
+        }
+    }
+}

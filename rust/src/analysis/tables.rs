@@ -1,0 +1,85 @@
+//! Table rendering: measured vs published, in the paper's row format.
+
+use super::sweep::{run_sweep, PAPER_TABLE1, PAPER_TABLE2};
+use crate::util::{fmt6, render_table};
+
+/// Render Table I (RMS error) with the paper's columns plus a
+/// measured-vs-published check column.
+pub fn table1() -> String {
+    let rows = run_sweep();
+    let mut out = Vec::new();
+    for (row, p) in rows.iter().zip(PAPER_TABLE1.iter()) {
+        out.push(vec![
+            format!("{}", row.sampling_period),
+            format!("{}", row.lut_depth),
+            fmt6(row.pwl.rms),
+            fmt6(row.cr.rms),
+            format!("{:.2}", row.gain_rms()),
+            format!("{}/{}", fmt6(p.2), fmt6(p.3)),
+            verdict(row.pwl.rms, p.2, row.cr.rms, p.3),
+        ]);
+    }
+    format!(
+        "TABLE I — RMS ERROR, PWL vs CATMULL-ROM\n{}",
+        render_table(
+            &["Period", "Depth", "PWL", "CatmullRom", "Gain(x)", "paper PWL/CR", "match"],
+            &out
+        )
+    )
+}
+
+/// Render Table II (maximum error).
+pub fn table2() -> String {
+    let rows = run_sweep();
+    let mut out = Vec::new();
+    for (row, p) in rows.iter().zip(PAPER_TABLE2.iter()) {
+        out.push(vec![
+            format!("{}", row.sampling_period),
+            format!("{}", row.lut_depth),
+            fmt6(row.pwl.max),
+            fmt6(row.cr.max),
+            format!("{:.2}", row.gain_max()),
+            format!("{}/{}", fmt6(p.2), fmt6(p.3)),
+            verdict(row.pwl.max, p.2, row.cr.max, p.3),
+        ]);
+    }
+    format!(
+        "TABLE II — MAXIMUM ERROR, PWL vs CATMULL-ROM\n{}",
+        render_table(
+            &["Period", "Depth", "PWL", "CatmullRom", "Gain(x)", "paper PWL/CR", "match"],
+            &out
+        )
+    )
+}
+
+fn verdict(pwl: f64, pwl_paper: f64, cr: f64, cr_paper: f64) -> String {
+    let ok = (pwl - pwl_paper).abs() < 1e-5 && (cr - cr_paper).abs() < 1e-5;
+    if ok { "OK".into() } else { "DIFF".into() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_all_rows_match() {
+        let t = table1();
+        assert_eq!(t.matches("OK").count(), 4, "{t}");
+        assert!(!t.contains("DIFF"), "{t}");
+    }
+
+    #[test]
+    fn table2_all_rows_match() {
+        let t = table2();
+        assert_eq!(t.matches("OK").count(), 4, "{t}");
+        assert!(!t.contains("DIFF"), "{t}");
+    }
+
+    #[test]
+    fn tables_contain_paper_headline_numbers() {
+        let t1 = table1();
+        assert!(t1.contains("0.000052"), "{t1}"); // CR RMS at h=0.125
+        let t2 = table2();
+        assert!(t2.contains("0.000152"), "{t2}"); // CR max at h=0.125
+    }
+}

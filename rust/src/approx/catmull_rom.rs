@@ -1,0 +1,371 @@
+//! Catmull-Rom spline tanh — the paper's contribution (§III, §IV).
+//!
+//! The input is a 16-bit signed Q2.13 word. For x ≥ 0 the top bits select
+//! a LUT segment and the remaining `tbits = 13 - k` LSBs are the
+//! interpolation factor t (the paper: "msbs are used for addressing the
+//! LUT, the remaining bits (lsbs) can directly be used as t"). Negative
+//! inputs are folded through the odd symmetry of tanh, which halves the
+//! LUT ("the size of control points LUT can be reduced by storing them
+//! only for the positive range").
+//!
+//! The spline (paper eq. 3) is evaluated as a 4-tap dot product
+//!
+//! ```text
+//! f = ½ · [P(s-1) P(s) P(s+1) P(s+2)] · [b0(t) b1(t) b2(t) b3(t)]ᵀ
+//! b0 = -t³+2t²-t   b1 = 3t³-5t²+2   b2 = -3t³+4t²+t   b3 = t³-t²
+//! ```
+//!
+//! entirely in integer arithmetic: t is a `tbits`-bit fraction, t²/t³ are
+//! formed exactly, the basis is assembled at 3·tbits fraction bits, the
+//! MAC accumulates at 13 + 3·tbits fraction bits, and a single final
+//! round-half-even produces the Q2.13 output. Because every intermediate
+//! is exact, this integer datapath computes the same real number as the
+//! float model that reproduces the paper's Tables I/II to the digit
+//! (verified exhaustively in `rust/tests/integration_tables.rs`).
+
+use super::{tanh_ref, TanhApprox};
+use crate::fixed::{round_shift, Rounding};
+use crate::hw::area::Resources;
+
+/// How control points past x = 4 are provided.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Boundary {
+    /// Store two guard entries tanh(4+h), tanh(4+2h) (normative — matches
+    /// the validated table model; costs 2 extra LUT rows).
+    Extend,
+    /// Clamp reads past the last entry to tanh(4) (paper's "32 values";
+    /// slightly perturbs the top segment).
+    Clamp,
+}
+
+/// Catmull-Rom spline tanh approximator.
+#[derive(Clone, Debug)]
+pub struct CatmullRom {
+    /// Sampling period h = 2^-k.
+    k: u32,
+    /// Interpolation-factor width: 13 - k bits.
+    tbits: u32,
+    /// Positive-side control points, Q2.13 raw.
+    lut: Vec<i32>,
+    /// Hot-path table: `lut_ext[i] = P(i - 1)` with the odd extension and
+    /// boundary handling materialized, so the four taps of segment `s`
+    /// are the contiguous reads `lut_ext[s .. s+4]` — no sign branch, no
+    /// clamp in the inner loop (perf pass; see EXPERIMENTS.md §Perf).
+    lut_ext: Vec<i64>,
+    boundary: Boundary,
+    /// Optional basis-bus truncation (fraction bits of b after rounding).
+    /// `None` = full precision (3·tbits). Smaller values shrink the MAC
+    /// multipliers at an accuracy cost — the ablation in EXPERIMENTS.md.
+    basis_frac: Option<u32>,
+}
+
+impl CatmullRom {
+    /// Construct for sampling period h = 2^-k (k in 1..=4 covers the
+    /// paper's Table I/II configurations).
+    pub fn new(k: u32, boundary: Boundary) -> Self {
+        assert!((1..=12).contains(&k), "k={k} out of range");
+        let guard = match boundary {
+            Boundary::Extend => 2,
+            Boundary::Clamp => 1, // include tanh(4) itself, clamp beyond
+        };
+        let lut = tanh_ref::build_lut(k, guard);
+        let depth = 1usize << (k + 2);
+        // Materialize P(-1)..P(depth+1) with the boundary policy applied.
+        let p_at = |idx: i64| -> i64 {
+            if idx < 0 {
+                -(lut[(-idx) as usize] as i64)
+            } else {
+                lut[(idx as usize).min(lut.len() - 1)] as i64
+            }
+        };
+        let lut_ext = (-1..=(depth as i64 + 1)).map(p_at).collect();
+        Self {
+            k,
+            tbits: 13 - k,
+            lut,
+            lut_ext,
+            boundary,
+            basis_frac: None,
+        }
+    }
+
+    /// The paper's implemented configuration: h = 0.125 (32-entry LUT),
+    /// extend boundary (§IV: "sampling period of 0.125 is good enough").
+    pub fn paper_default() -> Self {
+        Self::new(3, Boundary::Extend)
+    }
+
+    /// Ablation constructor: truncate the basis bus to `frac` bits.
+    pub fn with_basis_frac(mut self, frac: u32) -> Self {
+        assert!(frac >= 2 && frac <= 3 * self.tbits);
+        self.basis_frac = Some(frac);
+        self
+    }
+
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    /// LUT depth covering [0,4) — the paper's "LUT Depth" column.
+    pub fn depth(&self) -> usize {
+        1 << (self.k + 2)
+    }
+
+    /// Total stored entries including boundary guards.
+    pub fn stored_entries(&self) -> usize {
+        self.lut.len()
+    }
+
+    pub fn boundary(&self) -> Boundary {
+        self.boundary
+    }
+
+    /// Control point P(idx) with odd extension below zero and the
+    /// configured boundary handling above the table.
+    #[inline]
+    fn p(&self, idx: i64) -> i64 {
+        if idx < 0 {
+            -(self.lut[(-idx) as usize] as i64)
+        } else {
+            let i = (idx as usize).min(self.lut.len() - 1);
+            self.lut[i] as i64
+        }
+    }
+
+    /// The four integer basis values at `tu` (a `tbits`-bit fraction),
+    /// expressed with `3·tbits` fraction bits. Exact.
+    #[inline]
+    fn basis(&self, tu: i64) -> [i64; 4] {
+        let tb = self.tbits;
+        let t1 = tu << (2 * tb); // t  at 3·tbits frac
+        let t2 = (tu * tu) << tb; // t² at 3·tbits frac
+        let t3 = tu * tu * tu; // t³ at 3·tbits frac
+        let one = 1i64 << (3 * tb);
+        [
+            -t3 + 2 * t2 - t1,
+            3 * t3 - 5 * t2 + 2 * one,
+            -3 * t3 + 4 * t2 + t1,
+            t3 - t2,
+        ]
+    }
+
+    /// Positive-side evaluation: `u` is the magnitude in [0, 32767].
+    #[inline]
+    fn eval_pos(&self, u: i64) -> i32 {
+        let tb = self.tbits;
+        let seg = (u >> tb) as usize;
+        let tu = u & ((1i64 << tb) - 1);
+        if let Some(f) = self.basis_frac {
+            // Ablation path: narrow the basis bus with round-half-up (the
+            // cheap hardware rounder) before the MAC.
+            let mut b = self.basis(tu);
+            for bi in b.iter_mut() {
+                *bi = round_shift(*bi as i128, 3 * tb - f, Rounding::HalfUp);
+            }
+            let taps = &self.lut_ext[seg..seg + 4];
+            let acc: i128 = (taps[0] * b[0]) as i128
+                + (taps[1] * b[1]) as i128
+                + (taps[2] * b[2]) as i128
+                + (taps[3] * b[3]) as i128;
+            let y = round_shift(acc, f + 1, Rounding::HalfEven);
+            return y.clamp(-8192, 8192) as i32;
+        }
+        // Hot path (full precision): contiguous taps, i64-only MAC, and an
+        // inline round-half-even. The accumulator needs 13 + 3·tb + 3 bits
+        // (≤ 52 for k=1), so i64 is exact — no i128 on the hot path.
+        let b = self.basis(tu);
+        let taps = &self.lut_ext[seg..seg + 4];
+        let acc: i64 = taps[0] * b[0] + taps[1] * b[1] + taps[2] * b[2] + taps[3] * b[3];
+        let n = 3 * tb + 1;
+        let floor = acc >> n;
+        let rem = acc - (floor << n);
+        let half = 1i64 << (n - 1);
+        let up = (rem > half) as i64 | ((rem == half) as i64 & floor & 1);
+        let y = floor + up;
+        y.clamp(-8192, 8192) as i32
+    }
+
+    /// Batch evaluation into a caller-provided buffer — the L3 software
+    /// hot path (lets the compiler pipeline the folded loop; see
+    /// EXPERIMENTS.md §Perf).
+    pub fn eval_slice(&self, xs: &[i32], out: &mut [i32]) {
+        assert_eq!(xs.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(xs) {
+            let (neg, u) = fold(x);
+            let y = self.eval_pos(u);
+            *o = if neg { -y } else { y };
+        }
+    }
+
+    /// Float-pipeline model of the same computation (the Table I/II
+    /// validation model): quantized LUT, real-arithmetic basis, single
+    /// final round. Used by tests to prove the integer datapath is exact.
+    pub fn eval_model(&self, x: i32) -> i32 {
+        let (neg, u) = fold(x);
+        let tb = self.tbits;
+        let seg = (u >> tb) as i64;
+        let t = (u & ((1i64 << tb) - 1)) as f64 / (1i64 << tb) as f64;
+        let (t2, t3) = (t * t, t * t * t);
+        let b = [
+            -t3 + 2.0 * t2 - t,
+            3.0 * t3 - 5.0 * t2 + 2.0,
+            -3.0 * t3 + 4.0 * t2 + t,
+            t3 - t2,
+        ];
+        let acc: f64 = (0..4).map(|i| self.p(seg - 1 + i as i64) as f64 * b[i]).sum();
+        let y = crate::fixed::round_half_even(acc * 0.5) as i64;
+        let y = y.clamp(-8192, 8192) as i32;
+        if neg {
+            -y
+        } else {
+            y
+        }
+    }
+}
+
+/// Fold a Q2.13 input through odd symmetry: returns (negate, magnitude).
+/// −32768 (x = −4.0) saturates to magnitude 32767, the hardware behaviour
+/// of a two's-complement negate feeding a 15-bit magnitude bus.
+#[inline]
+pub fn fold(x: i32) -> (bool, i64) {
+    if x < 0 {
+        (true, (-(x as i64)).min(32767))
+    } else {
+        (false, x as i64)
+    }
+}
+
+impl TanhApprox for CatmullRom {
+    fn name(&self) -> String {
+        let b = match self.boundary {
+            Boundary::Extend => "",
+            Boundary::Clamp => ",clamp",
+        };
+        match self.basis_frac {
+            Some(f) => format!("cr-k{}{b},b{}", self.k, f),
+            None => format!("cr-k{}{b}", self.k),
+        }
+    }
+
+    fn eval_q13(&self, x: i32) -> i32 {
+        let (neg, u) = fold(x);
+        let y = self.eval_pos(u);
+        if neg {
+            -y
+        } else {
+            y
+        }
+    }
+
+    fn resources(&self) -> Option<Resources> {
+        // The synthesized datapath carries a 16-fraction-bit basis bus
+        // (full precision in the *numerics* model; 16 bits in the *area*
+        // model — measured to shift the error tables by at most one unit
+        // in the 6th decimal, see EXPERIMENTS.md §T3). Explicit
+        // `with_basis_frac` configurations are priced as configured.
+        Some(crate::hw::area::catmull_rom_resources(
+            self.stored_entries(),
+            self.tbits,
+            self.basis_frac.unwrap_or(16).min(3 * self.tbits),
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{q13, q13_to_f64};
+
+    #[test]
+    fn interpolates_exactly_at_nodes() {
+        let cr = CatmullRom::paper_default();
+        // At t = 0 the basis is (0, 2, 0, 0)/2 -> output = P(seg) exactly.
+        for seg in 0..32i64 {
+            let x = (seg << 10) as i32; // tbits = 10
+            let expect = q13((x as f64 * crate::fixed::ULP).tanh());
+            assert_eq!(cr.eval_q13(x), expect, "seg={seg}");
+        }
+    }
+
+    #[test]
+    fn odd_symmetry() {
+        let cr = CatmullRom::paper_default();
+        for x in (1..32768).step_by(61) {
+            assert_eq!(cr.eval_q13(-x), -cr.eval_q13(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn integer_path_equals_float_model_exhaustive() {
+        let cr = CatmullRom::paper_default();
+        for x in i16::MIN as i32..=i16::MAX as i32 {
+            assert_eq!(cr.eval_q13(x), cr.eval_model(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn integer_path_equals_float_model_all_k() {
+        for k in 1..=4 {
+            let cr = CatmullRom::new(k, Boundary::Extend);
+            for x in (i16::MIN as i32..=i16::MAX as i32).step_by(7) {
+                assert_eq!(cr.eval_q13(x), cr.eval_model(x), "k={k} x={x}");
+            }
+        }
+    }
+
+    #[test]
+    fn max_error_matches_paper_headline() {
+        // Table II, h=0.125: max error 0.000122... wait, that's h=0.0625.
+        // h=0.125 row: 0.000152. Check the bound (exact digits verified in
+        // the integration test).
+        let cr = CatmullRom::paper_default();
+        let mut max_err: f64 = 0.0;
+        for x in i16::MIN as i32..=i16::MAX as i32 {
+            let err = (q13_to_f64(cr.eval_q13(x)) - q13_to_f64(x).tanh()).abs();
+            max_err = max_err.max(err);
+        }
+        assert!((0.000140..0.000160).contains(&max_err), "max={max_err}");
+    }
+
+    #[test]
+    fn clamp_boundary_close_to_extend() {
+        let e = CatmullRom::new(3, Boundary::Extend);
+        let c = CatmullRom::new(3, Boundary::Clamp);
+        for x in (-32768..32768).step_by(11) {
+            let (ye, yc) = (e.eval_q13(x), c.eval_q13(x));
+            assert!((ye - yc).abs() <= 2, "x={x}: {ye} vs {yc}");
+        }
+    }
+
+    #[test]
+    fn basis_truncation_degrades_gracefully() {
+        let full = CatmullRom::paper_default();
+        let narrow = CatmullRom::paper_default().with_basis_frac(12);
+        let mut max_full: f64 = 0.0;
+        let mut max_narrow: f64 = 0.0;
+        for x in -32768..32768 {
+            let t = q13_to_f64(x).tanh();
+            max_full = max_full.max((q13_to_f64(full.eval_q13(x)) - t).abs());
+            max_narrow = max_narrow.max((q13_to_f64(narrow.eval_q13(x)) - t).abs());
+        }
+        assert!(max_narrow >= max_full);
+        assert!(max_narrow < 0.001, "12-bit basis should stay accurate: {max_narrow}");
+    }
+
+    #[test]
+    fn saturated_region_output_near_one() {
+        let cr = CatmullRom::paper_default();
+        let y = cr.eval_q13(32767);
+        assert!((8186..=8192).contains(&y), "y={y}");
+        let y = cr.eval_q13(-32768);
+        assert!((-8192..=-8186).contains(&y), "y={y}");
+    }
+
+    #[test]
+    fn fold_saturates_min() {
+        assert_eq!(fold(-32768), (true, 32767));
+        assert_eq!(fold(-1), (true, 1));
+        assert_eq!(fold(0), (false, 0));
+        assert_eq!(fold(32767), (false, 32767));
+    }
+}

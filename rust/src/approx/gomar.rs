@@ -1,0 +1,156 @@
+//! Base-2 exponential tanh — baseline [9] (Gomar et al.).
+//!
+//! tanh(x) = (e²ˣ − 1)/(e²ˣ + 1) with e²ˣ = 2^(2x·log₂e). The method
+//! approximates the base-2 exponential with Mitchell's piecewise-linear
+//! trick — 2^u ≈ 2^⌊u⌋ · (1 + frac(u)) — and closes with a fixed-point
+//! division ("their implementation requires an exponential unit, a
+//! division unit and supporting logic", §II). The paper quotes RMSE
+//! 0.0177 for [9]; this model reproduces that magnitude (≈0.01–0.02,
+//! dominated by the Mitchell error, verified in tests).
+
+use super::catmull_rom::fold;
+use super::TanhApprox;
+use crate::fixed::q13_to_f64;
+use crate::hw::area::Resources;
+
+/// Gomar-style base-2 exponential approximation.
+#[derive(Clone, Debug)]
+pub struct Gomar {
+    /// Fraction bits used by the exponential/divide datapath.
+    frac_bits: u32,
+}
+
+impl Gomar {
+    pub fn new(frac_bits: u32) -> Self {
+        assert!((8..=24).contains(&frac_bits));
+        Self { frac_bits }
+    }
+
+    pub fn paper_default() -> Self {
+        Self::new(13)
+    }
+
+    /// Mitchell approximation of 2^u for u >= 0 in fixed point.
+    /// Input and output carry `self.frac_bits` fraction bits.
+    fn exp2_mitchell(&self, u: i64) -> i64 {
+        let fb = self.frac_bits;
+        let int = (u >> fb) as u32;
+        let frac = u & ((1i64 << fb) - 1);
+        // 2^u ~ (1 + frac) << int
+        ((1i64 << fb) + frac) << int.min(16)
+    }
+
+    /// Restoring division num/den, both with `frac_bits` fractions,
+    /// producing `frac_bits` fractional quotient bits. Models the
+    /// sequential divider of [9].
+    fn divide(&self, num: i64, den: i64) -> i64 {
+        debug_assert!(den > 0 && num >= 0);
+        let fb = self.frac_bits;
+        let mut rem = (num as i128) << fb;
+        let d = den as i128;
+        let mut q: i64 = 0;
+        for bit in (0..=fb).rev() {
+            let trial = d << bit;
+            q <<= 1;
+            if rem >= trial {
+                rem -= trial;
+                q |= 1;
+            }
+        }
+        q // quotient with fb fraction bits
+    }
+}
+
+impl TanhApprox for Gomar {
+    fn name(&self) -> String {
+        format!("gomar-f{}", self.frac_bits)
+    }
+
+    fn eval_q13(&self, x: i32) -> i32 {
+        let (neg, u13) = fold(x);
+        let fb = self.frac_bits;
+        // u = 2x·log2(e), converted to `fb` fraction bits.
+        const LOG2E: f64 = std::f64::consts::LOG2_E;
+        let scale = (1i64 << fb) as f64;
+        let u = ((2.0 * q13_to_f64(u13 as i32) * LOG2E) * scale) as i64;
+        let e2x = self.exp2_mitchell(u);
+        let one = 1i64 << fb;
+        // tanh = (e2x - 1) / (e2x + 1)
+        let q = self.divide(e2x - one, e2x + one);
+        // rescale quotient to Q2.13
+        let y = if fb >= 13 {
+            (q >> (fb - 13)) as i32
+        } else {
+            (q << (13 - fb)) as i32
+        };
+        let y = y.clamp(0, 8192);
+        if neg {
+            -y
+        } else {
+            y
+        }
+    }
+
+    fn resources(&self) -> Option<Resources> {
+        Some(crate::hw::baselines::gomar_resources(self.frac_bits))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::q13_to_f64;
+
+    #[test]
+    fn divide_is_exact_for_exact_quotients() {
+        let g = Gomar::new(13);
+        let one = 1i64 << 13;
+        assert_eq!(g.divide(one, one), one); // 1/1 = 1
+        assert_eq!(g.divide(one, 2 * one), one / 2); // 1/2
+        assert_eq!(g.divide(3 * one, 4 * one), 3 * one / 4);
+    }
+
+    #[test]
+    fn mitchell_exact_at_integers() {
+        let g = Gomar::new(13);
+        let one = 1i64 << 13;
+        assert_eq!(g.exp2_mitchell(0), one);
+        assert_eq!(g.exp2_mitchell(one), 2 * one);
+        assert_eq!(g.exp2_mitchell(2 * one), 4 * one);
+    }
+
+    #[test]
+    fn mitchell_error_bounded() {
+        // max relative error of Mitchell's approx is ~5.7% at u=0.5
+        let g = Gomar::new(13);
+        for i in 0..100 {
+            let u = i as f64 * 0.04;
+            let approx = g.exp2_mitchell((u * 8192.0) as i64) as f64 / 8192.0;
+            let exact = 2f64.powf(u);
+            // Mitchell's max relative error is (1+f)/2^f at f ≈ 0.4427: ~6.15%
+            assert!((approx / exact - 1.0).abs() < 0.0625, "u={u}");
+        }
+    }
+
+    #[test]
+    fn rmse_matches_published_magnitude() {
+        // §II: "RMSE error for this implementation is 0.0177"
+        let g = Gomar::paper_default();
+        let mut sq = 0.0;
+        for x in -32768..32768 {
+            let e = q13_to_f64(g.eval_q13(x)) - q13_to_f64(x).tanh();
+            sq += e * e;
+        }
+        let rmse = (sq / 65536.0).sqrt();
+        assert!((0.005..0.03).contains(&rmse), "rmse={rmse}");
+    }
+
+    #[test]
+    fn odd_and_bounded() {
+        let g = Gomar::paper_default();
+        for x in (1..32768).step_by(173) {
+            assert_eq!(g.eval_q13(-x), -g.eval_q13(x));
+            assert!(g.eval_q13(x) <= 8192);
+        }
+    }
+}

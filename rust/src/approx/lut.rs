@@ -1,0 +1,100 @@
+//! Plain lookup-table tanh — the simplest method in §II: "store the
+//! values of the function in a lookup table and approximate the output
+//! with the lookup table value for the nearest input".
+//!
+//! Rounds the input to the nearest LUT node (uniform step h = 2^-k) and
+//! returns the stored value. Accuracy is bounded by the function's slope
+//! times h/2, which is why §II calls the uniform-step trade-off hard to
+//! balance — the motivation for RALUT and the interpolating methods.
+
+use super::catmull_rom::fold;
+use super::{tanh_ref, TanhApprox};
+use crate::hw::area::Resources;
+
+/// Nearest-entry LUT with uniform step h = 2^-k.
+#[derive(Clone, Debug)]
+pub struct PlainLut {
+    k: u32,
+    tbits: u32,
+    lut: Vec<i32>, // depth + 1: include tanh(4) for rounding at the top
+}
+
+impl PlainLut {
+    pub fn new(k: u32) -> Self {
+        assert!((1..=12).contains(&k));
+        Self { k, tbits: 13 - k, lut: tanh_ref::build_lut(k, 1) }
+    }
+
+    /// 64-entry LUT (h = 0.0625) — the depth a plain LUT needs to get
+    /// anywhere near interpolating methods, per Table I's trend.
+    pub fn paper_default() -> Self {
+        Self::new(4)
+    }
+
+    pub fn depth(&self) -> usize {
+        1 << (self.k + 2)
+    }
+}
+
+impl TanhApprox for PlainLut {
+    fn name(&self) -> String {
+        format!("lut-k{}", self.k)
+    }
+
+    fn eval_q13(&self, x: i32) -> i32 {
+        let (neg, u) = fold(x);
+        // nearest node: add half a step then truncate
+        let idx = (((u + (1i64 << (self.tbits - 1))) >> self.tbits) as usize)
+            .min(self.lut.len() - 1);
+        let y = self.lut[idx];
+        if neg {
+            -y
+        } else {
+            y
+        }
+    }
+
+    fn resources(&self) -> Option<Resources> {
+        Some(crate::hw::area::plain_lut_resources(self.lut.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::q13_to_f64;
+
+    #[test]
+    fn returns_nearest_node_value() {
+        let l = PlainLut::new(3);
+        // x = 0.1 -> nearest node 0.125 (idx 1)
+        let x = crate::fixed::q13(0.1);
+        assert_eq!(l.eval_q13(x), l.lut[1]);
+        // x = 0.05 -> nearest node 0.0
+        let x = crate::fixed::q13(0.05);
+        assert_eq!(l.eval_q13(x), 0);
+    }
+
+    #[test]
+    fn error_bounded_by_slope_times_half_step() {
+        let l = PlainLut::new(4);
+        let h = 0.0625;
+        let mut max_err: f64 = 0.0;
+        for x in -32768..32768 {
+            let err = (q13_to_f64(l.eval_q13(x)) - q13_to_f64(x).tanh()).abs();
+            max_err = max_err.max(err);
+        }
+        // slope of tanh <= 1, so error <= h/2 + quantization
+        assert!(max_err <= h / 2.0 + 2.0 * crate::fixed::ULP, "max={max_err}");
+        // and it is *much* worse than interpolation at the same depth
+        assert!(max_err > 0.01, "max={max_err}");
+    }
+
+    #[test]
+    fn odd_symmetry() {
+        let l = PlainLut::paper_default();
+        for x in (1..32768).step_by(119) {
+            assert_eq!(l.eval_q13(-x), -l.eval_q13(x));
+        }
+    }
+}

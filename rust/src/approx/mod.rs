@@ -1,0 +1,102 @@
+//! The tanh approximation zoo.
+//!
+//! `catmull_rom` is the paper's contribution; every other module is a
+//! published baseline the paper compares against in §II / Table III:
+//!
+//! | module | paper ref | method |
+//! |---|---|---|
+//! | `catmull_rom` | this paper | cubic Catmull-Rom spline over a uniform LUT |
+//! | `pwl` | [7] | piecewise-linear interpolation over the same LUT |
+//! | `lut` | [4] | plain nearest-entry lookup table |
+//! | `ralut` | [4][5] | range-addressable LUT (non-uniform segments) |
+//! | `region` | [6] | Zamanlooy pass/processing/saturation regions |
+//! | `taylor` | [8] | truncated Taylor series |
+//! | `gomar` | [9] | base-2 exponential approximation |
+//! | `dctif` | [10] | DCT interpolation filter |
+//!
+//! All methods implement [`TanhApprox`]: a bit-accurate Q2.13 entry point
+//! (`eval_q13`, the hardware semantics) plus a convenience float wrapper.
+
+pub mod catmull_rom;
+pub mod dctif;
+pub mod gomar;
+pub mod lut;
+pub mod pwl;
+pub mod ralut;
+pub mod region;
+pub mod sigmoid;
+pub mod tanh_ref;
+pub mod taylor;
+
+pub use catmull_rom::{Boundary, CatmullRom};
+pub use dctif::Dctif;
+pub use gomar::Gomar;
+pub use lut::PlainLut;
+pub use pwl::Pwl;
+pub use ralut::Ralut;
+pub use region::RegionBased;
+pub use sigmoid::Sigmoid;
+pub use tanh_ref::QuantizedTanh;
+pub use taylor::Taylor;
+
+use crate::fixed::{q13, q13_to_f64};
+
+/// A hardware tanh approximation operating on the paper's Q2.13 I/O format.
+pub trait TanhApprox: Send + Sync {
+    /// Short method name used in tables and CLI.
+    fn name(&self) -> String;
+
+    /// Bit-accurate evaluation: raw Q2.13 in, raw Q2.13 out.
+    ///
+    /// Input is interpreted as a 16-bit signed integer (passed as i32 for
+    /// convenience); implementations must accept the full i16 range.
+    fn eval_q13(&self, x: i32) -> i32;
+
+    /// Evaluate on an f64 by quantizing through the Q2.13 interface.
+    fn eval_f64(&self, x: f64) -> f64 {
+        q13_to_f64(self.eval_q13(q13(x)))
+    }
+
+    /// Hardware resource summary for the area model (gates, memory bits).
+    /// Defaults to "unknown"; methods with a modelled datapath override it.
+    fn resources(&self) -> Option<crate::hw::area::Resources> {
+        None
+    }
+}
+
+/// Every method at its paper-default configuration, for sweeps and tables.
+pub fn all_methods() -> Vec<Box<dyn TanhApprox>> {
+    vec![
+        Box::new(CatmullRom::paper_default()),
+        Box::new(Pwl::paper_default()),
+        Box::new(PlainLut::paper_default()),
+        Box::new(Ralut::paper_default()),
+        Box::new(RegionBased::paper_default()),
+        Box::new(Taylor::paper_default()),
+        Box::new(Gomar::paper_default()),
+        Box::new(Dctif::paper_default()),
+        Box::new(QuantizedTanh),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_methods_produce_sane_outputs() {
+        for m in all_methods() {
+            for xi in [-32768, -8192, -1, 0, 1, 100, 8192, 32767] {
+                let y = m.eval_q13(xi);
+                assert!(
+                    (-8192..=8192).contains(&y),
+                    "{}: tanh output {y} out of [-1,1] for x={xi}",
+                    m.name()
+                );
+            }
+            // sign behaviour at a clearly positive / negative point
+            assert!(m.eval_q13(8192) > 0, "{}", m.name());
+            assert!(m.eval_q13(-8192) < 0, "{}", m.name());
+        }
+    }
+}

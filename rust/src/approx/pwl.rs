@@ -1,0 +1,132 @@
+//! Piecewise-linear tanh interpolation — the paper's main comparison
+//! baseline (ref [7], the "PWL" columns of Tables I/II).
+//!
+//! Shares the uniform Q2.13 LUT and index/t split with the Catmull-Rom
+//! method; the interpolation is the 2-tap dot product
+//! `f = P(s)·(1-t) + P(s+1)·t`, computed exactly in integer arithmetic
+//! with one final round-half-even.
+
+use super::catmull_rom::fold;
+use super::{tanh_ref, TanhApprox};
+use crate::fixed::{round_shift, Rounding};
+use crate::hw::area::Resources;
+
+/// PWL interpolator over a uniform LUT with step h = 2^-k.
+#[derive(Clone, Debug)]
+pub struct Pwl {
+    k: u32,
+    tbits: u32,
+    lut: Vec<i32>, // depth + 1 entries: needs P(depth) = tanh(4) at the top
+}
+
+impl Pwl {
+    pub fn new(k: u32) -> Self {
+        assert!((1..=12).contains(&k));
+        Self { k, tbits: 13 - k, lut: tanh_ref::build_lut(k, 1) }
+    }
+
+    /// Same LUT depth as the paper's chosen CR configuration (h = 0.125).
+    pub fn paper_default() -> Self {
+        Self::new(3)
+    }
+
+    pub fn depth(&self) -> usize {
+        1 << (self.k + 2)
+    }
+
+    #[inline]
+    fn eval_pos(&self, u: i64) -> i32 {
+        let tb = self.tbits;
+        let seg = (u >> tb) as usize;
+        let tu = u & ((1i64 << tb) - 1);
+        let one = 1i64 << tb;
+        let p0 = self.lut[seg] as i64;
+        let p1 = self.lut[(seg + 1).min(self.lut.len() - 1)] as i64;
+        // acc carries 13 + tbits fraction bits, exact.
+        let acc = p0 * (one - tu) + p1 * tu;
+        round_shift(acc as i128, tb, Rounding::HalfEven).clamp(-8192, 8192) as i32
+    }
+}
+
+impl TanhApprox for Pwl {
+    fn name(&self) -> String {
+        format!("pwl-k{}", self.k)
+    }
+
+    fn eval_q13(&self, x: i32) -> i32 {
+        let (neg, u) = fold(x);
+        let y = self.eval_pos(u);
+        if neg {
+            -y
+        } else {
+            y
+        }
+    }
+
+    fn resources(&self) -> Option<Resources> {
+        Some(crate::hw::area::pwl_resources(self.lut.len(), self.tbits))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::{q13, q13_to_f64};
+
+    #[test]
+    fn exact_at_nodes() {
+        let p = Pwl::paper_default();
+        for seg in 0..=32i64 {
+            let x = ((seg << 10) as i32).min(32767);
+            if x == 32767 {
+                continue; // top of range is mid-segment after saturation
+            }
+            assert_eq!(p.eval_q13(x), q13((x as f64 * crate::fixed::ULP).tanh()));
+        }
+    }
+
+    #[test]
+    fn odd_symmetry() {
+        let p = Pwl::paper_default();
+        for x in (1..32768).step_by(97) {
+            assert_eq!(p.eval_q13(-x), -p.eval_q13(x));
+        }
+    }
+
+    #[test]
+    fn midpoint_is_average_of_nodes() {
+        let p = Pwl::paper_default();
+        // halfway through segment 8 (x = 1.0625): PWL = (P8 + P9)/2
+        let x = (8 << 10) + 512;
+        let expect = (p.lut[8] as i64 + p.lut[9] as i64) as f64 / 2.0;
+        let got = p.eval_q13(x) as f64;
+        assert!((got - expect).abs() <= 0.5);
+    }
+
+    #[test]
+    fn monotone_nondecreasing_over_full_range() {
+        let p = Pwl::paper_default();
+        let mut prev = i32::MIN;
+        for x in -32768..32768 {
+            let y = p.eval_q13(x);
+            assert!(y >= prev, "x={x}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn pwl_error_worse_than_cr_everywhere_that_matters() {
+        // The paper's core claim at the default config: CR max error is
+        // ~10x smaller than PWL (Table II row h=0.125: 0.001584 vs 0.000152).
+        use crate::approx::CatmullRom;
+        let p = Pwl::paper_default();
+        let c = CatmullRom::paper_default();
+        let (mut pmax, mut cmax): (f64, f64) = (0.0, 0.0);
+        for x in -32768..32768 {
+            let t = q13_to_f64(x).tanh();
+            pmax = pmax.max((q13_to_f64(p.eval_q13(x)) - t).abs());
+            cmax = cmax.max((q13_to_f64(c.eval_q13(x)) - t).abs());
+        }
+        assert!(pmax / cmax > 8.0, "gain {}", pmax / cmax);
+    }
+}

@@ -1,0 +1,125 @@
+//! Sigmoid through the tanh block: σ(x) = (1 + tanh(x/2)) / 2.
+//!
+//! Every baseline the paper cites ([4][5][7]) is titled "tanh *sigmoid*"
+//! because accelerators serve both from one block: the halving and the
+//! (1+·)/2 are pure wiring (shifts) around the tanh datapath. This
+//! module makes that wrapper a first-class, bit-accurate citizen so the
+//! NN substrate and the L2 models use the exact same semantics.
+//!
+//! Fixed-point contract: input raw Q2.13 (interpreted over (−4,4), so
+//! the effective sigmoid domain is (−8,8) pre-halving is NOT applied
+//! here — callers pass x and we halve internally, saturating the halved
+//! value); output raw **Q1.14 would be natural, but we keep Q2.13** for
+//! bus uniformity: σ ∈ (0,1) uses only the positive half of the range.
+
+use super::TanhApprox;
+
+/// Sigmoid wrapper over any tanh implementation.
+pub struct Sigmoid<'a> {
+    tanh: &'a dyn TanhApprox,
+}
+
+impl<'a> Sigmoid<'a> {
+    pub fn new(tanh: &'a dyn TanhApprox) -> Self {
+        Self { tanh }
+    }
+
+    /// Bit-accurate: raw Q2.13 in (x over (−8,8) conceptually, halved
+    /// with round-to-even on the dropped bit), raw Q2.13 out in [0, 1].
+    pub fn eval_q13(&self, x: i32) -> i32 {
+        // halve with round-half-even on the dropped LSB
+        let half = {
+            let fl = x >> 1;
+            let rem = x & 1;
+            if rem == 1 && (fl & 1) == 1 {
+                fl + 1
+            } else {
+                fl
+            }
+        };
+        let t = self.tanh.eval_q13(half);
+        // (8192 + t) / 2, exact: both terms even or rounded half-even
+        let sum = 8192 + t; // in [0, 16384]
+        let fl = sum >> 1;
+        let rem = sum & 1;
+        if rem == 1 && (fl & 1) == 1 {
+            fl + 1
+        } else {
+            fl
+        }
+    }
+
+    /// Float convenience.
+    pub fn eval_f64(&self, x: f64) -> f64 {
+        crate::fixed::q13_to_f64(self.eval_q13(crate::fixed::q13(x)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{CatmullRom, QuantizedTanh};
+
+    fn exact_sigmoid(x: f64) -> f64 {
+        1.0 / (1.0 + (-x).exp())
+    }
+
+    #[test]
+    fn tracks_exact_sigmoid_within_activation_error() {
+        let cr = CatmullRom::paper_default();
+        let s = Sigmoid::new(&cr);
+        for i in -320..=320 {
+            let x = i as f64 * 0.0125;
+            let err = (s.eval_f64(x) - exact_sigmoid(x)).abs();
+            assert!(err < 2.5e-4, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn output_range_and_midpoint() {
+        let cr = CatmullRom::paper_default();
+        let s = Sigmoid::new(&cr);
+        assert_eq!(s.eval_q13(0), 4096); // sigma(0) = 0.5 exactly
+        for x in [-32768, -10000, 0, 10000, 32767] {
+            let y = s.eval_q13(x);
+            assert!((0..=8192).contains(&y), "x={x} y={y}");
+        }
+        assert!(s.eval_q13(32767) > 8000);
+        assert!(s.eval_q13(-32768) < 200);
+    }
+
+    #[test]
+    fn complementarity_sigma_x_plus_sigma_neg_x_is_one() {
+        // sigma(x) + sigma(-x) = 1; the fixed-point wrapper preserves it
+        // to within one LSB (rounding of the halving step).
+        let cr = CatmullRom::paper_default();
+        let s = Sigmoid::new(&cr);
+        for x in (-32000..32000).step_by(997) {
+            let sum = s.eval_q13(x) + s.eval_q13(-x);
+            assert!((sum - 8192).abs() <= 1, "x={x} sum={sum}");
+        }
+    }
+
+    #[test]
+    fn monotone_nondecreasing() {
+        let cr = CatmullRom::paper_default();
+        let s = Sigmoid::new(&cr);
+        let mut prev = -1;
+        for x in (-32768..=32767).step_by(37) {
+            let y = s.eval_q13(x);
+            assert!(y >= prev - 1, "x={x}");
+            prev = y;
+        }
+    }
+
+    #[test]
+    fn ideal_tanh_gives_ideal_sigmoid() {
+        let q = QuantizedTanh;
+        let s = Sigmoid::new(&q);
+        for i in -100..=100 {
+            let x = i as f64 * 0.04;
+            let err = (s.eval_f64(x) - exact_sigmoid(x)).abs();
+            assert!(err < 1.5 * crate::fixed::ULP, "x={x} err={err}");
+        }
+    }
+}

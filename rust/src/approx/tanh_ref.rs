@@ -1,0 +1,88 @@
+//! Reference tanh implementations.
+//!
+//! `exact` is the f64 libm tanh — the error baseline every table measures
+//! against. [`QuantizedTanh`] is the *ideal quantized* implementation: the
+//! true tanh rounded to Q2.13. No 16-bit hardware can beat its error
+//! (RMS = ULP/√12 ≈ 3.5e-5, max = ULP/2 ≈ 6.1e-5), so it bounds what any
+//! method in the zoo can achieve at this precision — useful context for
+//! Table III.
+
+use super::TanhApprox;
+use crate::fixed::{q13, q13_to_f64};
+
+/// True tanh on f64 (libm).
+#[inline]
+pub fn exact(x: f64) -> f64 {
+    x.tanh()
+}
+
+/// Value of the i-th uniform sample tanh(i·h) quantized to Q2.13 raw.
+/// The shared LUT builder for CR / PWL / plain-LUT methods.
+pub fn lut_entry(i: i64, h: f64) -> i32 {
+    q13((i as f64 * h).tanh())
+}
+
+/// Build the positive-side control-point table for step `h = 2^-k`
+/// covering x ∈ [0, 4), with `guard` extra entries past x = 4 (the CR
+/// datapath reads P[seg+2] at the top segment). Entry j = q13(tanh(j·h)).
+pub fn build_lut(k: u32, guard: usize) -> Vec<i32> {
+    let h = 0.5f64.powi(k as i32);
+    let depth = 1usize << (k + 2); // 4 / h
+    (0..depth + guard).map(|j| lut_entry(j as i64, h)).collect()
+}
+
+/// The ideal 16-bit implementation: round(tanh(x)) in Q2.13.
+pub struct QuantizedTanh;
+
+impl TanhApprox for QuantizedTanh {
+    fn name(&self) -> String {
+        "ideal-q13".into()
+    }
+
+    fn eval_q13(&self, x: i32) -> i32 {
+        q13(q13_to_f64(x).tanh())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::ULP;
+
+    #[test]
+    fn lut_matches_direct_quantization() {
+        let lut = build_lut(3, 2);
+        assert_eq!(lut.len(), 34);
+        assert_eq!(lut[0], 0);
+        assert_eq!(lut[8], q13((1.0f64).tanh())); // 8 * 0.125 = 1.0
+        assert_eq!(lut[32], q13((4.0f64).tanh()));
+    }
+
+    #[test]
+    fn lut_depths_match_paper_table() {
+        // Table I: sampling period {0.5,0.25,0.125,0.0625} -> depth {8,16,32,64}
+        for (k, depth) in [(1u32, 8usize), (2, 16), (3, 32), (4, 64)] {
+            assert_eq!(build_lut(k, 0).len(), depth);
+        }
+    }
+
+    #[test]
+    fn lut_is_monotone_nondecreasing() {
+        for k in 1..=4 {
+            let lut = build_lut(k, 2);
+            for w in lut.windows(2) {
+                assert!(w[1] >= w[0]);
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_tanh_error_within_half_ulp() {
+        let q = QuantizedTanh;
+        for xi in (-32768..32768).step_by(97) {
+            let x = q13_to_f64(xi);
+            let err = (q13_to_f64(q.eval_q13(xi)) - x.tanh()).abs();
+            assert!(err <= ULP / 2.0 + 1e-12, "x={x} err={err}");
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Taylor-series tanh — baseline [8] (Adnan et al.).
+//!
+//! tanh(x) ≈ x − x³/3 + 2x⁵/15 − 17x⁷/315 around 0, truncated to 3 or 4
+//! terms and clamped to ±1. §II's observation about this method — the
+//! error is tiny near 0 and blows up toward the saturation region, and
+//! adding the 4th term helps ~10× where the error was already small but
+//! only ~2× where it was large — is reproduced as an ablation bench
+//! (`crspline taylor-profile`).
+//!
+//! The hardware model evaluates the odd polynomial in Horner form on the
+//! folded magnitude with full-precision intermediates and a single final
+//! round, i.e. the most favourable implementation; its accuracy is still
+//! far off the interpolating methods, which is the point of the baseline.
+
+use super::catmull_rom::fold;
+use super::TanhApprox;
+use crate::fixed::{q13, q13_to_f64};
+use crate::hw::area::Resources;
+
+/// Truncated Taylor approximation with `terms` odd terms (2..=4).
+#[derive(Clone, Debug)]
+pub struct Taylor {
+    terms: u32,
+}
+
+impl Taylor {
+    pub fn new(terms: u32) -> Self {
+        assert!((2..=4).contains(&terms));
+        Self { terms }
+    }
+
+    /// Three terms, the configuration [8] implements.
+    pub fn paper_default() -> Self {
+        Self::new(3)
+    }
+
+    /// The ideal-arithmetic polynomial (before output quantization).
+    pub fn poly(&self, x: f64) -> f64 {
+        let x2 = x * x;
+        // Horner over the odd series: x(1 + x²(c3 + x²(c5 + x²·c7)))
+        let c3 = -1.0 / 3.0;
+        let c5 = 2.0 / 15.0;
+        let c7 = -17.0 / 315.0;
+        let inner = match self.terms {
+            2 => c3,
+            3 => c3 + x2 * c5,
+            4 => c3 + x2 * (c5 + x2 * c7),
+            _ => unreachable!(),
+        };
+        (x * (1.0 + x2 * inner)).clamp(-1.0, 1.0)
+    }
+}
+
+impl TanhApprox for Taylor {
+    fn name(&self) -> String {
+        format!("taylor-{}t", self.terms)
+    }
+
+    fn eval_q13(&self, x: i32) -> i32 {
+        let (neg, u) = fold(x);
+        let y = q13(self.poly(q13_to_f64(u as i32)));
+        if neg {
+            -y
+        } else {
+            y
+        }
+    }
+
+    fn resources(&self) -> Option<Resources> {
+        Some(crate::hw::baselines::taylor_resources(self.terms))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accurate_near_zero() {
+        let t = Taylor::new(3);
+        for i in -800..800 {
+            let x = i as f64 * 1e-3; // |x| < 0.8
+            assert!((t.poly(x) - x.tanh()).abs() < 0.01, "x={x}");
+        }
+    }
+
+    #[test]
+    fn poor_near_saturation() {
+        let t = Taylor::new(3);
+        // Around |x| ~ 2 the truncated series has drifted far off (the
+        // clamp at 1.0 caps the blow-up, still ~200x the CR max error).
+        let err = (t.poly(2.0) - (2.0f64).tanh()).abs();
+        assert!(err > 0.03, "err={err}");
+        // before the clamp region the raw polynomial is diverging fast
+        let raw = 2.0 * (1.0 + 4.0 * (-1.0 / 3.0 + 4.0 * 2.0 / 15.0));
+        assert!(raw > 3.0, "raw={raw}");
+    }
+
+    #[test]
+    fn fourth_term_gain_profile_matches_paper_claim() {
+        // [8]: going 3 -> 4 terms improves ~10x where error was small,
+        // only ~2x where it was large (before the clamp region).
+        let t3 = Taylor::new(3);
+        let t4 = Taylor::new(4);
+        let small_x = 0.5;
+        let gain_small = (t3.poly(small_x) - small_x.tanh()).abs()
+            / (t4.poly(small_x) - small_x.tanh()).abs();
+        let large_x = 1.1;
+        let gain_large = (t3.poly(large_x) - large_x.tanh()).abs()
+            / (t4.poly(large_x) - large_x.tanh()).abs();
+        assert!(gain_small > 4.0, "gain_small={gain_small}");
+        assert!(gain_large < 4.0, "gain_large={gain_large}");
+    }
+
+    #[test]
+    fn odd_symmetry_and_clamp() {
+        let t = Taylor::paper_default();
+        for x in (1..32768).step_by(131) {
+            assert_eq!(t.eval_q13(-x), -t.eval_q13(x));
+        }
+        assert!(t.eval_q13(32767).abs() <= 8192);
+    }
+}

@@ -1,0 +1,234 @@
+//! Criterion-style benchmark harness (the offline image has no criterion).
+//!
+//! Provides warmup, calibrated iteration counts, multiple measurement
+//! samples, and p50/p99/mean reporting, plus throughput units. All
+//! `rust/benches/*.rs` targets (declared `harness = false`) use this.
+//!
+//! Output format is one line per benchmark:
+//! `bench <name> ... mean=… p50=… p99=… thrpt=…` so results are grep-able
+//! and stable for EXPERIMENTS.md.
+
+use crate::util::hist::fmt_ns;
+use std::time::{Duration, Instant};
+
+/// Benchmark configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Config {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub samples: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(600),
+            samples: 30,
+        }
+    }
+}
+
+impl Config {
+    /// Fast profile for CI-style runs (CRSPLINE_BENCH_FAST=1).
+    pub fn from_env() -> Self {
+        if std::env::var("CRSPLINE_BENCH_FAST").is_ok() {
+            Self {
+                warmup: Duration::from_millis(20),
+                measure: Duration::from_millis(80),
+                samples: 8,
+            }
+        } else {
+            Self::default()
+        }
+    }
+}
+
+/// Result of one benchmark: per-sample mean latencies in ns.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub sample_ns: Vec<f64>,
+    /// Work items per iteration (for throughput), if declared.
+    pub items_per_iter: Option<u64>,
+}
+
+impl Measurement {
+    pub fn mean_ns(&self) -> f64 {
+        self.sample_ns.iter().sum::<f64>() / self.sample_ns.len() as f64
+    }
+
+    pub fn percentile_ns(&self, q: f64) -> f64 {
+        let mut s = self.sample_ns.clone();
+        s.sort_by(f64::total_cmp);
+        let idx = ((q * (s.len() - 1) as f64).round() as usize).min(s.len() - 1);
+        s[idx]
+    }
+
+    pub fn report(&self) -> String {
+        let mut line = format!(
+            "bench {:<40} mean={:<10} p50={:<10} p99={:<10}",
+            self.name,
+            fmt_ns(self.mean_ns() as u64),
+            fmt_ns(self.percentile_ns(0.5) as u64),
+            fmt_ns(self.percentile_ns(0.99) as u64),
+        );
+        if let Some(items) = self.items_per_iter {
+            let per_sec = items as f64 / (self.mean_ns() * 1e-9);
+            line.push_str(&format!(" thrpt={}", fmt_throughput(per_sec)));
+        }
+        line
+    }
+}
+
+fn fmt_throughput(per_sec: f64) -> String {
+    if per_sec >= 1e9 {
+        format!("{:.2}G/s", per_sec / 1e9)
+    } else if per_sec >= 1e6 {
+        format!("{:.2}M/s", per_sec / 1e6)
+    } else if per_sec >= 1e3 {
+        format!("{:.2}K/s", per_sec / 1e3)
+    } else {
+        format!("{per_sec:.1}/s")
+    }
+}
+
+/// A benchmark group that prints results as it goes and remembers them.
+pub struct Bencher {
+    config: Config,
+    pub results: Vec<Measurement>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self { config: Config::from_env(), results: Vec::new() }
+    }
+
+    pub fn with_config(config: Config) -> Self {
+        Self { config, results: Vec::new() }
+    }
+
+    /// Benchmark `f`, treating one call as one iteration.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> &Measurement {
+        self.bench_items(name, None, move || f())
+    }
+
+    /// Benchmark `f` which processes `items` work units per call
+    /// (reported as throughput).
+    pub fn bench_with_items(
+        &mut self,
+        name: &str,
+        items: u64,
+        mut f: impl FnMut(),
+    ) -> &Measurement {
+        self.bench_items(name, Some(items), move || f())
+    }
+
+    fn bench_items(
+        &mut self,
+        name: &str,
+        items: Option<u64>,
+        mut f: impl FnMut(),
+    ) -> &Measurement {
+        // Warmup + calibration: find iters such that one sample ~ measure/samples.
+        let warmup_end = Instant::now() + self.config.warmup;
+        let mut calib_iters = 0u64;
+        let calib_start = Instant::now();
+        while Instant::now() < warmup_end {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = calib_start.elapsed().as_nanos() as f64 / calib_iters.max(1) as f64;
+        let sample_budget_ns =
+            self.config.measure.as_nanos() as f64 / self.config.samples as f64;
+        let iters = ((sample_budget_ns / per_iter.max(1.0)).ceil() as u64).max(1);
+
+        let mut samples = Vec::with_capacity(self.config.samples);
+        for _ in 0..self.config.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            samples.push(t0.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let m = Measurement { name: name.to_string(), sample_ns: samples, items_per_iter: items };
+        println!("{}", m.report());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value (std::hint wrapper).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast() -> Bencher {
+        Bencher::with_config(Config {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            samples: 5,
+        })
+    }
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = fast();
+        let mut acc = 0u64;
+        b.bench("noop-ish", || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        let m = &b.results[0];
+        assert!(m.mean_ns() > 0.0);
+        assert_eq!(m.sample_ns.len(), 5);
+    }
+
+    #[test]
+    fn throughput_reported_for_items() {
+        let mut b = fast();
+        let data = vec![1u64; 1024];
+        b.bench_with_items("sum-1024", 1024, || {
+            black_box(data.iter().sum::<u64>());
+        });
+        let r = b.results[0].report();
+        assert!(r.contains("thrpt="), "{r}");
+    }
+
+    #[test]
+    fn slower_function_measures_slower() {
+        let mut b = fast();
+        // fold with black_box inside so the loop cannot collapse to a
+        // closed-form sum
+        let work = |n: u64| (0..black_box(n)).fold(0u64, |a, x| black_box(a ^ x.wrapping_mul(0x9E3779B9)));
+        b.bench("fast", || {
+            black_box(work(10));
+        });
+        b.bench("slow", || {
+            black_box(work(10_000));
+        });
+        assert!(b.results[1].mean_ns() > b.results[0].mean_ns() * 5.0);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Measurement {
+            name: "x".into(),
+            sample_ns: vec![10.0, 20.0, 30.0, 40.0, 100.0],
+            items_per_iter: None,
+        };
+        assert!(m.percentile_ns(0.5) <= m.percentile_ns(0.99));
+        assert_eq!(m.percentile_ns(0.0), 10.0);
+        assert_eq!(m.percentile_ns(1.0), 100.0);
+    }
+}

@@ -1,0 +1,196 @@
+//! Dynamic batcher: size + deadline policy.
+//!
+//! Pure data structure (no threads) so the invariants are property-testable:
+//! a batch closes when it reaches `max_batch` items, or when its oldest
+//! item has waited `max_wait`. Each (model, variant) key has its own queue.
+//! See `rust/tests/prop_coordinator.rs` for the no-loss/no-duplication and
+//! bound proofs; `server.rs` drives this from the batcher thread.
+
+use super::request::ModelKey;
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    /// Close a batch at this many items.
+    pub max_batch: usize,
+    /// Close a non-empty batch when its oldest item is this old.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        Self { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A closed batch ready for execution.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub key: ModelKey,
+    pub items: Vec<T>,
+    /// Enqueue time of the oldest item (for queue-latency metrics).
+    pub oldest: Instant,
+}
+
+struct Queue<T> {
+    items: VecDeque<(Instant, T)>,
+}
+
+/// The batcher: per-key FIFO queues + the closing policy.
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    queues: BTreeMap<ModelKey, Queue<T>>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        Self { policy, queues: BTreeMap::new() }
+    }
+
+    /// Enqueue an item; returns a closed batch if the key's queue reached
+    /// `max_batch`.
+    pub fn push(&mut self, key: ModelKey, item: T, now: Instant) -> Option<Batch<T>> {
+        let q = self
+            .queues
+            .entry(key.clone())
+            .or_insert_with(|| Queue { items: VecDeque::new() });
+        q.items.push_back((now, item));
+        if q.items.len() >= self.policy.max_batch {
+            return self.close(&key);
+        }
+        None
+    }
+
+    /// Close and return the batch for `key`, if non-empty.
+    pub fn close(&mut self, key: &ModelKey) -> Option<Batch<T>> {
+        let q = self.queues.get_mut(key)?;
+        if q.items.is_empty() {
+            return None;
+        }
+        let n = q.items.len().min(self.policy.max_batch);
+        let drained: Vec<(Instant, T)> = q.items.drain(..n).collect();
+        let oldest = drained.iter().map(|(t, _)| *t).min().unwrap();
+        Some(Batch {
+            key: key.clone(),
+            items: drained.into_iter().map(|(_, i)| i).collect(),
+            oldest,
+        })
+    }
+
+    /// Close every batch whose oldest item has exceeded `max_wait`.
+    pub fn poll_expired(&mut self, now: Instant) -> Vec<Batch<T>> {
+        let expired: Vec<ModelKey> = self
+            .queues
+            .iter()
+            .filter(|(_, q)| {
+                q.items
+                    .front()
+                    .is_some_and(|(t, _)| now.duration_since(*t) >= self.policy.max_wait)
+            })
+            .map(|(k, _)| k.clone())
+            .collect();
+        expired.iter().filter_map(|k| self.close(k)).collect()
+    }
+
+    /// Flush everything (shutdown path).
+    pub fn flush(&mut self) -> Vec<Batch<T>> {
+        let keys: Vec<ModelKey> = self.queues.keys().cloned().collect();
+        let mut out = Vec::new();
+        for k in keys {
+            while let Some(b) = self.close(&k) {
+                out.push(b);
+            }
+        }
+        out
+    }
+
+    /// Earliest deadline across queues (drives the batcher thread's sleep).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.queues
+            .values()
+            .filter_map(|q| q.items.front().map(|(t, _)| *t + self.policy.max_wait))
+            .min()
+    }
+
+    /// Total queued items.
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(|q| q.items.len()).sum()
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(m: &str) -> ModelKey {
+        ModelKey::new(m, "cr")
+    }
+
+    #[test]
+    fn closes_at_max_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(9) });
+        let now = Instant::now();
+        assert!(b.push(key("m"), 1, now).is_none());
+        assert!(b.push(key("m"), 2, now).is_none());
+        let batch = b.push(key("m"), 3, now).expect("batch closes at 3");
+        assert_eq!(batch.items, vec![1, 2, 3]);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn keys_batch_independently() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(9) });
+        let now = Instant::now();
+        assert!(b.push(key("a"), 1, now).is_none());
+        assert!(b.push(key("b"), 10, now).is_none());
+        let batch = b.push(key("a"), 2, now).unwrap();
+        assert_eq!(batch.key, key("a"));
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn deadline_expiry_closes_partial_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        b.push(key("m"), 1, t0);
+        b.push(key("m"), 2, t0 + Duration::from_millis(1));
+        assert!(b.poll_expired(t0 + Duration::from_millis(3)).is_empty());
+        let expired = b.poll_expired(t0 + Duration::from_millis(5));
+        assert_eq!(expired.len(), 1);
+        assert_eq!(expired[0].items, vec![1, 2]);
+        assert_eq!(expired[0].oldest, t0);
+    }
+
+    #[test]
+    fn next_deadline_tracks_oldest() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) });
+        assert!(b.next_deadline().is_none());
+        let t0 = Instant::now();
+        b.push(key("m"), 1, t0);
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
+        b.push(key("a"), 2, t0 - Duration::from_millis(5));
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn flush_returns_everything_in_fifo_chunks() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(9) });
+        let now = Instant::now();
+        b.push(key("m"), 1, now);
+        // 3 pushes close one batch at 2; 1 remains
+        b.push(key("m"), 2, now);
+        b.push(key("m"), 3, now);
+        let batches = b.flush();
+        let items: Vec<i32> = batches.into_iter().flat_map(|b| b.items).collect();
+        assert_eq!(items, vec![3]);
+        assert_eq!(b.pending(), 0);
+    }
+}

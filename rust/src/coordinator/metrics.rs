@@ -1,0 +1,154 @@
+//! Serving metrics: counters + latency histograms.
+
+use crate::util::hist::{fmt_ns, Histogram};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Shared metrics, updated by batcher and workers.
+#[derive(Default)]
+pub struct Metrics {
+    pub submitted: AtomicU64,
+    pub completed: AtomicU64,
+    pub failed: AtomicU64,
+    pub batches: AtomicU64,
+    /// Sum of real items over all batches (for mean batch size).
+    pub batched_items: AtomicU64,
+    /// Sum of padded slots (bucket size − items).
+    pub padding_slots: AtomicU64,
+    queue_ns: Mutex<Histogram>,
+    exec_ns: Mutex<Histogram>,
+    e2e_ns: Mutex<Histogram>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_queue(&self, d: Duration) {
+        self.queue_ns.lock().unwrap().record(d.as_nanos() as u64);
+    }
+
+    pub fn record_exec(&self, d: Duration) {
+        self.exec_ns.lock().unwrap().record(d.as_nanos() as u64);
+    }
+
+    pub fn record_e2e(&self, d: Duration) {
+        self.e2e_ns.lock().unwrap().record(d.as_nanos() as u64);
+    }
+
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            submitted: self.submitted.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            batches: self.batches.load(Ordering::Relaxed),
+            batched_items: self.batched_items.load(Ordering::Relaxed),
+            padding_slots: self.padding_slots.load(Ordering::Relaxed),
+            queue: self.queue_ns.lock().unwrap().clone(),
+            exec: self.exec_ns.lock().unwrap().clone(),
+            e2e: self.e2e_ns.lock().unwrap().clone(),
+        }
+    }
+}
+
+/// Point-in-time copy for reporting.
+#[derive(Clone)]
+pub struct MetricsSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub batches: u64,
+    pub batched_items: u64,
+    pub padding_slots: u64,
+    pub queue: Histogram,
+    pub exec: Histogram,
+    pub e2e: Histogram,
+}
+
+impl MetricsSnapshot {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batched_items as f64 / self.batches as f64
+        }
+    }
+
+    /// Fraction of executed slots that were padding.
+    pub fn padding_ratio(&self) -> f64 {
+        let total = self.batched_items + self.padding_slots;
+        if total == 0 {
+            0.0
+        } else {
+            self.padding_slots as f64 / total as f64
+        }
+    }
+}
+
+impl std::fmt::Display for MetricsSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        writeln!(
+            f,
+            "requests: submitted={} completed={} failed={}",
+            self.submitted, self.completed, self.failed
+        )?;
+        writeln!(
+            f,
+            "batches:  n={} mean_size={:.2} padding={:.1}%",
+            self.batches,
+            self.mean_batch(),
+            self.padding_ratio() * 100.0
+        )?;
+        writeln!(
+            f,
+            "queue:    p50={} p99={}",
+            fmt_ns(self.queue.quantile(0.5)),
+            fmt_ns(self.queue.quantile(0.99))
+        )?;
+        writeln!(
+            f,
+            "exec:     p50={} p99={}",
+            fmt_ns(self.exec.quantile(0.5)),
+            fmt_ns(self.exec.quantile(0.99))
+        )?;
+        write!(
+            f,
+            "e2e:      p50={} p99={} max={}",
+            fmt_ns(self.e2e.quantile(0.5)),
+            fmt_ns(self.e2e.quantile(0.99)),
+            fmt_ns(self.e2e.max())
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_reflects_counters() {
+        let m = Metrics::new();
+        m.submitted.fetch_add(10, Ordering::Relaxed);
+        m.completed.fetch_add(9, Ordering::Relaxed);
+        m.batches.fetch_add(3, Ordering::Relaxed);
+        m.batched_items.fetch_add(9, Ordering::Relaxed);
+        m.padding_slots.fetch_add(3, Ordering::Relaxed);
+        m.record_e2e(Duration::from_micros(100));
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 10);
+        assert_eq!(s.mean_batch(), 3.0);
+        assert!((s.padding_ratio() - 0.25).abs() < 1e-12);
+        assert!(s.e2e.count() == 1);
+        let text = s.to_string();
+        assert!(text.contains("mean_size=3.00"), "{text}");
+    }
+
+    #[test]
+    fn empty_metrics_do_not_divide_by_zero() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.mean_batch(), 0.0);
+        assert_eq!(s.padding_ratio(), 0.0);
+    }
+}

@@ -1,0 +1,30 @@
+//! L3 inference coordinator.
+//!
+//! The paper's contribution is the L1 activation kernel, so — per the
+//! three-layer architecture — the coordinator is a lean, production-shaped
+//! serving layer rather than a research scheduler: typed requests, a
+//! shape-bucket router, a size+deadline dynamic batcher, a worker pool
+//! (each worker owns a thread-local PJRT engine, since PJRT handles are
+//! not `Send`), latency metrics, and graceful shutdown.
+//!
+//! ```text
+//! submit() ──channel──▶ batcher thread ──batch channel──▶ worker pool
+//!    ▲                    (size/deadline policy)             │ PJRT exec
+//!    └────────────── reply channel per request ◀────────────┘
+//! ```
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+pub mod trace;
+pub mod worker;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::{Metrics, MetricsSnapshot};
+pub use request::{ModelKey, Request, Response};
+pub use router::Router;
+pub use server::{Server, ServerConfig};
+pub use trace::{replay, Trace};
+pub use worker::{Backend, BackendFactory, MockBackend, PjrtBackend};

@@ -1,0 +1,91 @@
+//! Request/response types of the serving layer.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Routing key: one queue + one executable family per (model, variant).
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ModelKey {
+    /// Model family: "tanh", "mlp", "lstm".
+    pub model: String,
+    /// Activation variant: "cr", "pwl", "exact".
+    pub variant: String,
+}
+
+impl ModelKey {
+    pub fn new(model: impl Into<String>, variant: impl Into<String>) -> Self {
+        Self { model: model.into(), variant: variant.into() }
+    }
+}
+
+impl std::fmt::Display for ModelKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}/{}", self.model, self.variant)
+    }
+}
+
+/// One inference request: a single sample (one row of the batch).
+#[derive(Debug)]
+pub struct Request {
+    pub id: u64,
+    pub key: ModelKey,
+    /// Flattened per-sample input (the artifact's trailing dims).
+    pub payload: Vec<f32>,
+    pub submitted: Instant,
+    /// Where the response goes.
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// The response to one request.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    /// Flattened per-sample output, or an error message.
+    pub result: Result<Vec<f32>, String>,
+    /// Time spent queued before the batch closed.
+    pub queue_time: Duration,
+    /// End-to-end latency (submit → response send).
+    pub latency: Duration,
+    /// How many real requests shared the batch.
+    pub batch_size: usize,
+    /// The bucket (padded batch) size executed.
+    pub padded_to: usize,
+}
+
+impl Response {
+    pub fn output(&self) -> anyhow::Result<&[f32]> {
+        match &self.result {
+            Ok(v) => Ok(v),
+            Err(e) => anyhow::bail!("inference failed: {e}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn model_key_display_and_ordering() {
+        let a = ModelKey::new("mlp", "cr");
+        assert_eq!(a.to_string(), "mlp/cr");
+        let b = ModelKey::new("tanh", "cr");
+        assert!(a < b);
+        assert_eq!(a, ModelKey::new("mlp", "cr"));
+    }
+
+    #[test]
+    fn response_output_accessor() {
+        let ok = Response {
+            id: 1,
+            result: Ok(vec![1.0]),
+            queue_time: Duration::ZERO,
+            latency: Duration::ZERO,
+            batch_size: 1,
+            padded_to: 1,
+        };
+        assert_eq!(ok.output().unwrap(), &[1.0]);
+        let err = Response { result: Err("boom".into()), ..ok };
+        assert!(err.output().is_err());
+    }
+}

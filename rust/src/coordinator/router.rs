@@ -1,0 +1,141 @@
+//! Shape-bucket routing.
+//!
+//! Artifacts are AOT-compiled for a fixed set of batch sizes (XLA programs
+//! have static shapes). The router owns the mapping from a dynamic batch
+//! of n requests to the smallest compiled bucket with batch >= n, plus the
+//! per-sample payload contract of each model family.
+
+use super::request::ModelKey;
+use crate::runtime::Manifest;
+use std::collections::BTreeMap;
+
+/// Per-family shape information derived from the manifest.
+#[derive(Clone, Debug, Default)]
+pub struct FamilyInfo {
+    /// Available batch sizes, ascending.
+    pub buckets: Vec<usize>,
+    /// Per-sample input element count (product of trailing input dims).
+    pub sample_in: usize,
+    /// Per-sample output element count.
+    pub sample_out: usize,
+}
+
+/// Routing table for every (model, variant) family in a manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Router {
+    families: BTreeMap<ModelKey, FamilyInfo>,
+}
+
+impl Router {
+    /// Build from a manifest. Each artifact's input 0 must have the batch
+    /// as the leading dim; trailing dims define the per-sample payload.
+    pub fn from_manifest(manifest: &Manifest) -> Router {
+        let mut families: BTreeMap<ModelKey, FamilyInfo> = BTreeMap::new();
+        for a in &manifest.artifacts {
+            let key = ModelKey::new(a.model.clone(), a.variant.clone());
+            let sample_in = a.inputs[0][1..].iter().product::<usize>().max(1);
+            let sample_out = a.outputs[0][1..].iter().product::<usize>().max(1);
+            let f = families.entry(key).or_default();
+            f.buckets.push(a.batch);
+            f.sample_in = sample_in;
+            f.sample_out = sample_out;
+        }
+        for f in families.values_mut() {
+            f.buckets.sort_unstable();
+            f.buckets.dedup();
+        }
+        Router { families }
+    }
+
+    pub fn family(&self, key: &ModelKey) -> Option<&FamilyInfo> {
+        self.families.get(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &ModelKey> {
+        self.families.keys()
+    }
+
+    /// Smallest bucket holding `n` samples; None if n exceeds the largest
+    /// bucket (the server then splits the batch).
+    pub fn bucket(&self, key: &ModelKey, n: usize) -> Option<usize> {
+        self.families
+            .get(key)?
+            .buckets
+            .iter()
+            .copied()
+            .find(|&b| b >= n)
+    }
+
+    /// Largest compiled bucket (the batcher's effective max batch).
+    pub fn max_bucket(&self, key: &ModelKey) -> Option<usize> {
+        self.families.get(key)?.buckets.last().copied()
+    }
+
+    /// Validate a request payload against the family contract.
+    pub fn validate(&self, key: &ModelKey, payload_len: usize) -> Result<(), String> {
+        match self.families.get(key) {
+            None => Err(format!("unknown model {key}")),
+            Some(f) if payload_len != f.sample_in => Err(format!(
+                "{key}: payload has {payload_len} elems, expected {}",
+                f.sample_in
+            )),
+            Some(_) => Ok(()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn router() -> Router {
+        let manifest = Manifest::parse(
+            r#"{
+            "version": 1,
+            "artifacts": [
+                {"name": "tanh_cr_1", "model": "tanh", "variant": "cr",
+                 "path": "a", "batch": 1, "inputs": [[1, 256]], "outputs": [[1, 256]]},
+                {"name": "tanh_cr_8", "model": "tanh", "variant": "cr",
+                 "path": "b", "batch": 8, "inputs": [[8, 256]], "outputs": [[8, 256]]},
+                {"name": "tanh_cr_32", "model": "tanh", "variant": "cr",
+                 "path": "c", "batch": 32, "inputs": [[32, 256]], "outputs": [[32, 256]]},
+                {"name": "mlp_cr_8", "model": "mlp", "variant": "cr",
+                 "path": "d", "batch": 8, "inputs": [[8, 64]], "outputs": [[8, 10]]}
+            ]}"#,
+            PathBuf::from("."),
+        )
+        .unwrap();
+        Router::from_manifest(&manifest)
+    }
+
+    #[test]
+    fn picks_smallest_sufficient_bucket() {
+        let r = router();
+        let k = ModelKey::new("tanh", "cr");
+        assert_eq!(r.bucket(&k, 1), Some(1));
+        assert_eq!(r.bucket(&k, 2), Some(8));
+        assert_eq!(r.bucket(&k, 8), Some(8));
+        assert_eq!(r.bucket(&k, 9), Some(32));
+        assert_eq!(r.bucket(&k, 33), None);
+        assert_eq!(r.max_bucket(&k), Some(32));
+    }
+
+    #[test]
+    fn family_shapes() {
+        let r = router();
+        let f = r.family(&ModelKey::new("mlp", "cr")).unwrap();
+        assert_eq!(f.sample_in, 64);
+        assert_eq!(f.sample_out, 10);
+        assert_eq!(f.buckets, vec![8]);
+    }
+
+    #[test]
+    fn validate_rejects_bad_payloads() {
+        let r = router();
+        let k = ModelKey::new("tanh", "cr");
+        assert!(r.validate(&k, 256).is_ok());
+        assert!(r.validate(&k, 255).is_err());
+        assert!(r.validate(&ModelKey::new("nope", "cr"), 1).is_err());
+    }
+}

@@ -1,0 +1,294 @@
+//! The serving loop: glues submit channel → batcher thread → worker pool.
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::request::{ModelKey, Request, Response};
+use super::router::Router;
+use super::worker::{spawn_workers, BackendFactory};
+use anyhow::{bail, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Server configuration.
+#[derive(Clone)]
+pub struct ServerConfig {
+    pub workers: usize,
+    pub policy: BatchPolicy,
+    pub router: Router,
+    pub backend: BackendFactory,
+}
+
+impl ServerConfig {
+    pub fn new(router: Router, backend: BackendFactory) -> Self {
+        Self { workers: 2, policy: BatchPolicy::default(), router, backend }
+    }
+}
+
+/// A running coordinator instance.
+pub struct Server {
+    submit_tx: Option<Sender<Request>>,
+    batcher_thread: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    router: Router,
+    metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+}
+
+impl Server {
+    /// Start the batcher thread and worker pool.
+    pub fn start(config: ServerConfig) -> Result<Server> {
+        let metrics = Arc::new(Metrics::new());
+        let (submit_tx, submit_rx) = mpsc::channel::<Request>();
+        let (batch_tx, batch_rx) = mpsc::channel();
+        let workers = spawn_workers(
+            config.workers,
+            Arc::new(Mutex::new(batch_rx)),
+            config.router.clone(),
+            Arc::clone(&config.backend),
+            Arc::clone(&metrics),
+        );
+        let router = config.router.clone();
+        let policy = config.policy;
+        let batcher_thread = std::thread::Builder::new()
+            .name("batcher".into())
+            .spawn(move || batcher_loop(submit_rx, batch_tx, router, policy))
+            .expect("spawn batcher");
+        Ok(Server {
+            submit_tx: Some(submit_tx),
+            batcher_thread: Some(batcher_thread),
+            workers,
+            router: config.router,
+            metrics,
+            next_id: AtomicU64::new(1),
+        })
+    }
+
+    pub fn router(&self) -> &Router {
+        &self.router
+    }
+
+    /// Submit one sample; returns the channel the response arrives on.
+    pub fn submit(
+        &self,
+        key: ModelKey,
+        payload: Vec<f32>,
+    ) -> Result<Receiver<Response>> {
+        self.router
+            .validate(&key, payload.len())
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let (reply, rx) = mpsc::channel();
+        let req = Request {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            key,
+            payload,
+            submitted: Instant::now(),
+            reply,
+        };
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        match &self.submit_tx {
+            Some(tx) => tx.send(req).map_err(|_| anyhow::anyhow!("server shut down"))?,
+            None => bail!("server shut down"),
+        }
+        Ok(rx)
+    }
+
+    /// Submit and block for the response.
+    pub fn submit_wait(&self, key: ModelKey, payload: Vec<f32>) -> Result<Response> {
+        let rx = self.submit(key, payload)?;
+        Ok(rx.recv()?)
+    }
+
+    pub fn metrics(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Graceful shutdown: flush queues, drain workers, join threads.
+    pub fn shutdown(mut self) -> MetricsSnapshot {
+        self.shutdown_inner();
+        self.metrics.snapshot()
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.submit_tx.take(); // closes submit channel -> batcher flushes + exits
+        if let Some(t) = self.batcher_thread.take() {
+            let _ = t.join();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+/// The batcher thread: accumulate requests, close batches on size or
+/// deadline, forward to workers. Exits (flushing) when submitters hang up.
+fn batcher_loop(
+    submit_rx: Receiver<Request>,
+    batch_tx: Sender<super::batcher::Batch<Request>>,
+    router: Router,
+    policy: BatchPolicy,
+) {
+    let mut batcher: Batcher<Request> = Batcher::new(policy);
+    loop {
+        // Sleep until the earliest deadline (or indefinitely if idle).
+        let recv = match batcher.next_deadline() {
+            Some(deadline) => {
+                let now = Instant::now();
+                let timeout = deadline.saturating_duration_since(now);
+                match submit_rx.recv_timeout(timeout) {
+                    Ok(req) => Some(req),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+            }
+            None => match submit_rx.recv() {
+                Ok(req) => Some(req),
+                Err(_) => break,
+            },
+        };
+        let now = Instant::now();
+        if let Some(req) = recv {
+            // Effective max batch = min(policy, largest compiled bucket).
+            let key = req.key.clone();
+            let _ = router; // router consulted at worker; batcher only sizes
+            if let Some(batch) = batcher.push(key, req, now) {
+                if batch_tx.send(batch).is_err() {
+                    break;
+                }
+            }
+        }
+        for batch in batcher.poll_expired(now) {
+            if batch_tx.send(batch).is_err() {
+                return;
+            }
+        }
+    }
+    // Shutdown: flush whatever is queued.
+    for batch in batcher.flush() {
+        let _ = batch_tx.send(batch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::worker::MockBackend;
+    use crate::runtime::Manifest;
+    use std::time::Duration;
+
+    fn test_router() -> Router {
+        let manifest = Manifest::parse(
+            r#"{
+            "version": 1,
+            "artifacts": [
+                {"name": "tanh_cr_1", "model": "tanh", "variant": "cr",
+                 "path": "a", "batch": 1, "inputs": [[1, 8]], "outputs": [[1, 8]]},
+                {"name": "tanh_cr_4", "model": "tanh", "variant": "cr",
+                 "path": "b", "batch": 4, "inputs": [[4, 8]], "outputs": [[4, 8]]}
+            ]}"#,
+            std::path::PathBuf::from("."),
+        )
+        .unwrap();
+        Router::from_manifest(&manifest)
+    }
+
+    fn start(max_batch: usize, max_wait_ms: u64) -> Server {
+        let router = test_router();
+        let mut cfg = ServerConfig::new(router.clone(), MockBackend::factory(router));
+        cfg.workers = 2;
+        cfg.policy = BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(max_wait_ms),
+        };
+        Server::start(cfg).unwrap()
+    }
+
+    #[test]
+    fn single_request_completes_via_deadline() {
+        let s = start(4, 2);
+        let key = ModelKey::new("tanh", "cr");
+        let resp = s.submit_wait(key, vec![0.5; 8]).unwrap();
+        let out = resp.output().unwrap();
+        assert_eq!(out.len(), 8);
+        assert!((out[0] as f64 - 0.5f64.tanh()).abs() < 2e-4);
+        assert_eq!(resp.batch_size, 1);
+        assert_eq!(resp.padded_to, 1); // bucket 1 fits a single request
+        let m = s.shutdown();
+        assert_eq!(m.completed, 1);
+        assert_eq!(m.failed, 0);
+    }
+
+    #[test]
+    fn burst_gets_batched() {
+        let s = start(4, 50);
+        let key = ModelKey::new("tanh", "cr");
+        let rxs: Vec<_> = (0..4)
+            .map(|i| s.submit(key.clone(), vec![i as f32 * 0.1; 8]).unwrap())
+            .collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.batch_size, 4, "req {i} batch");
+            assert_eq!(r.padded_to, 4);
+            let expect = ((i as f32) * 0.1).tanh();
+            assert!((r.output().unwrap()[0] - expect).abs() < 2e-4);
+        }
+        let m = s.shutdown();
+        assert_eq!(m.batches, 1);
+        assert_eq!(m.mean_batch(), 4.0);
+    }
+
+    #[test]
+    fn invalid_payload_rejected_at_submit() {
+        let s = start(4, 2);
+        let key = ModelKey::new("tanh", "cr");
+        assert!(s.submit(key.clone(), vec![0.0; 7]).is_err());
+        assert!(s.submit(ModelKey::new("nope", "cr"), vec![0.0; 8]).is_err());
+        s.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let s = start(64, 10_000); // nothing would close by itself
+        let key = ModelKey::new("tanh", "cr");
+        let rxs: Vec<_> = (0..3).map(|_| s.submit(key.clone(), vec![0.0; 8]).unwrap()).collect();
+        let m = s.shutdown(); // flush path must deliver all three
+        assert_eq!(m.completed, 3);
+        for rx in rxs {
+            assert!(rx.recv().unwrap().output().is_ok());
+        }
+    }
+
+    #[test]
+    fn many_concurrent_submitters() {
+        let s = Arc::new(start(4, 1));
+        let key = ModelKey::new("tanh", "cr");
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                let s = Arc::clone(&s);
+                let key = key.clone();
+                std::thread::spawn(move || {
+                    for i in 0..25 {
+                        let v = (t * 25 + i) as f32 * 1e-3;
+                        let r = s.submit_wait(key.clone(), vec![v; 8]).unwrap();
+                        let got = r.output().unwrap()[0];
+                        assert!((got - v.tanh()).abs() < 2e-4, "v={v} got={got}");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let m = Arc::try_unwrap(s).ok().expect("sole owner").shutdown();
+        assert_eq!(m.completed, 200);
+        assert_eq!(m.failed, 0);
+    }
+}

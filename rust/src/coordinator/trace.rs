@@ -1,0 +1,228 @@
+//! Open-loop workload traces for the serving benches.
+//!
+//! Closed-loop clients (submit → wait → submit) under-drive a batcher:
+//! in-flight requests never exceed the client count, so large buckets
+//! starve. Real accelerator front-ends see *open-loop* arrivals; this
+//! module generates Poisson and burst traces and replays them against a
+//! server at their recorded timestamps, measuring the latency the
+//! batching policy actually induces.
+
+use super::request::{ModelKey, Response};
+use super::server::Server;
+use crate::util::hist::Histogram;
+use crate::util::rng::Rng;
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+/// One planned arrival.
+#[derive(Clone, Debug)]
+pub struct Arrival {
+    /// Offset from trace start.
+    pub at: Duration,
+    pub key: ModelKey,
+}
+
+/// A workload trace.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    pub arrivals: Vec<Arrival>,
+}
+
+impl Trace {
+    /// Poisson arrivals at `rate_hz` for `duration`, single key.
+    pub fn poisson(key: ModelKey, rate_hz: f64, duration: Duration, seed: u64) -> Trace {
+        assert!(rate_hz > 0.0);
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0f64;
+        let mut arrivals = Vec::new();
+        loop {
+            // exponential inter-arrival
+            t += -(1.0 - rng.f64()).ln() / rate_hz;
+            if t >= duration.as_secs_f64() {
+                break;
+            }
+            arrivals.push(Arrival { at: Duration::from_secs_f64(t), key: key.clone() });
+        }
+        Trace { arrivals }
+    }
+
+    /// Bursty arrivals: `bursts` bursts of `burst_size` back-to-back
+    /// requests separated by `gap`.
+    pub fn bursts(key: ModelKey, bursts: usize, burst_size: usize, gap: Duration) -> Trace {
+        let mut arrivals = Vec::new();
+        for b in 0..bursts {
+            let base = gap * b as u32;
+            for _ in 0..burst_size {
+                arrivals.push(Arrival { at: base, key: key.clone() });
+            }
+        }
+        Trace { arrivals }
+    }
+
+    /// Interleave two traces by arrival time (mixed-model workloads).
+    pub fn merge(mut self, other: Trace) -> Trace {
+        self.arrivals.extend(other.arrivals);
+        self.arrivals.sort_by_key(|a| a.at);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.arrivals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.arrivals.is_empty()
+    }
+
+    /// Offered load in requests/second.
+    pub fn offered_rate(&self) -> f64 {
+        match self.arrivals.last() {
+            None => 0.0,
+            Some(last) if last.at.is_zero() => f64::INFINITY,
+            Some(last) => self.arrivals.len() as f64 / last.at.as_secs_f64(),
+        }
+    }
+}
+
+/// Result of replaying a trace.
+pub struct ReplayReport {
+    pub sent: usize,
+    pub completed: usize,
+    pub failed: usize,
+    pub e2e: Histogram,
+    pub wall: Duration,
+}
+
+impl ReplayReport {
+    pub fn throughput(&self) -> f64 {
+        self.completed as f64 / self.wall.as_secs_f64()
+    }
+}
+
+/// Replay a trace open-loop: requests are fired at their recorded
+/// offsets (busy-waiting the sub-ms gaps), responses are collected
+/// asynchronously and their end-to-end latency histogrammed.
+pub fn replay(
+    server: &Server,
+    trace: &Trace,
+    payload_for: impl Fn(&ModelKey) -> Vec<f32>,
+) -> ReplayReport {
+    let start = Instant::now();
+    let mut pending: Vec<Receiver<Response>> = Vec::with_capacity(trace.len());
+    let mut failed_submit = 0usize;
+    for arrival in &trace.arrivals {
+        // pace to the trace
+        let target = start + arrival.at;
+        loop {
+            let now = Instant::now();
+            if now >= target {
+                break;
+            }
+            let left = target - now;
+            if left > Duration::from_micros(200) {
+                std::thread::sleep(left - Duration::from_micros(100));
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+        match server.submit(arrival.key.clone(), payload_for(&arrival.key)) {
+            Ok(rx) => pending.push(rx),
+            Err(_) => failed_submit += 1,
+        }
+    }
+    let mut e2e = Histogram::new();
+    let mut completed = 0usize;
+    let mut failed = failed_submit;
+    for rx in pending {
+        match rx.recv() {
+            Ok(resp) => {
+                if resp.result.is_ok() {
+                    completed += 1;
+                } else {
+                    failed += 1;
+                }
+                e2e.record(resp.latency.as_nanos() as u64);
+            }
+            Err(_) => failed += 1,
+        }
+    }
+    ReplayReport { sent: trace.len(), completed, failed, e2e, wall: start.elapsed() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key() -> ModelKey {
+        ModelKey::new("tanh", "cr")
+    }
+
+    #[test]
+    fn poisson_rate_approximately_right() {
+        let t = Trace::poisson(key(), 10_000.0, Duration::from_millis(200), 42);
+        // expect ~2000 arrivals; allow generous tolerance
+        assert!((1500..2600).contains(&t.len()), "n={}", t.len());
+        let rate = t.offered_rate();
+        assert!((8_000.0..12_500.0).contains(&rate), "rate={rate}");
+        // sorted by construction
+        for w in t.arrivals.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+    }
+
+    #[test]
+    fn poisson_deterministic_per_seed() {
+        let a = Trace::poisson(key(), 1000.0, Duration::from_millis(50), 7);
+        let b = Trace::poisson(key(), 1000.0, Duration::from_millis(50), 7);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.arrivals[0].at, b.arrivals[0].at);
+    }
+
+    #[test]
+    fn bursts_shape() {
+        let t = Trace::bursts(key(), 3, 8, Duration::from_millis(10));
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.arrivals[7].at, Duration::ZERO);
+        assert_eq!(t.arrivals[8].at, Duration::from_millis(10));
+    }
+
+    #[test]
+    fn merge_sorts_by_time() {
+        let a = Trace::bursts(key(), 2, 2, Duration::from_millis(10));
+        let b = Trace::poisson(ModelKey::new("mlp", "cr"), 500.0, Duration::from_millis(15), 1);
+        let m = a.merge(b);
+        for w in m.arrivals.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+    }
+
+    #[test]
+    fn replay_against_mock_server() {
+        use crate::coordinator::{BatchPolicy, MockBackend, Router, ServerConfig};
+        use crate::runtime::Manifest;
+        let manifest = Manifest::parse(
+            r#"{
+            "version": 1,
+            "artifacts": [
+                {"name": "t8", "model": "tanh", "variant": "cr",
+                 "path": "x", "batch": 8, "inputs": [[8, 4]], "outputs": [[8, 4]]}
+            ]}"#,
+            std::path::PathBuf::from("."),
+        )
+        .unwrap();
+        let router = Router::from_manifest(&manifest);
+        let mut cfg = ServerConfig::new(router.clone(), MockBackend::factory(router));
+        cfg.workers = 2;
+        cfg.policy = BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_micros(500),
+        };
+        let server = Server::start(cfg).unwrap();
+        let trace = Trace::poisson(key(), 5_000.0, Duration::from_millis(100), 3);
+        let report = replay(&server, &trace, |_| vec![0.25; 4]);
+        assert_eq!(report.completed, trace.len());
+        assert_eq!(report.failed, 0);
+        assert!(report.e2e.count() as usize == trace.len());
+        server.shutdown();
+    }
+}

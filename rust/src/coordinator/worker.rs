@@ -1,0 +1,222 @@
+//! Worker pool: executes closed batches on a backend.
+//!
+//! The [`Backend`] trait abstracts the execution engine so the
+//! coordinator's logic is testable without PJRT: [`PjrtBackend`] runs the
+//! compiled artifacts, [`MockBackend`] computes the same models in pure
+//! Rust. Backends are built *inside* each worker thread via a
+//! [`BackendFactory`] because PJRT handles are not `Send`.
+
+use super::batcher::Batch;
+use super::metrics::Metrics;
+use super::request::{ModelKey, Request, Response};
+use super::router::Router;
+use crate::runtime::{Engine, Manifest};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// An inference engine a worker can drive.
+pub trait Backend {
+    /// Execute `flat` (bucket·sample_in f32, zero-padded) for `key` at the
+    /// given `bucket` size; return bucket·sample_out f32.
+    fn run(&mut self, key: &ModelKey, bucket: usize, flat: &[f32]) -> Result<Vec<f32>, String>;
+}
+
+/// Builds a backend inside the worker thread.
+pub type BackendFactory = Arc<dyn Fn() -> anyhow::Result<Box<dyn Backend>> + Send + Sync>;
+
+/// PJRT-backed engine: one CPU client, all manifest artifacts compiled.
+pub struct PjrtBackend {
+    engine: Engine,
+}
+
+impl PjrtBackend {
+    pub fn new(manifest: &Manifest) -> anyhow::Result<Self> {
+        let mut engine = Engine::cpu()?;
+        engine.load_all(manifest)?;
+        Ok(Self { engine })
+    }
+
+    /// A factory loading every artifact under `dir`.
+    pub fn factory(dir: std::path::PathBuf) -> BackendFactory {
+        Arc::new(move || {
+            let manifest = Manifest::load(&dir)?;
+            Ok(Box::new(PjrtBackend::new(&manifest)?) as Box<dyn Backend>)
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn run(&mut self, key: &ModelKey, bucket: usize, flat: &[f32]) -> Result<Vec<f32>, String> {
+        let model = self
+            .engine
+            .bucket_for(&key.model, &key.variant, bucket)
+            .filter(|m| m.spec.batch == bucket)
+            .ok_or_else(|| format!("no artifact for {key} bucket {bucket}"))?;
+        let outs = model.run_f32(&[flat.to_vec()]).map_err(|e| e.to_string())?;
+        Ok(outs.into_iter().next().unwrap())
+    }
+}
+
+/// Pure-Rust mock backend: computes the tanh family with
+/// `approx::CatmullRom`/`Pwl`/exact — bit-compatible with the L1 kernel's
+/// quantization model — and echoes shapes for other families.
+pub struct MockBackend {
+    router: Router,
+    cr: crate::approx::CatmullRom,
+    pwl: crate::approx::Pwl,
+}
+
+impl MockBackend {
+    pub fn new(router: Router) -> Self {
+        Self {
+            router,
+            cr: crate::approx::CatmullRom::paper_default(),
+            pwl: crate::approx::Pwl::paper_default(),
+        }
+    }
+
+    pub fn factory(router: Router) -> BackendFactory {
+        Arc::new(move || Ok(Box::new(MockBackend::new(router.clone())) as Box<dyn Backend>))
+    }
+}
+
+impl Backend for MockBackend {
+    fn run(&mut self, key: &ModelKey, bucket: usize, flat: &[f32]) -> Result<Vec<f32>, String> {
+        use crate::approx::TanhApprox;
+        let f = self.router.family(key).ok_or_else(|| format!("unknown {key}"))?;
+        if flat.len() != bucket * f.sample_in {
+            return Err(format!("bad flat len {}", flat.len()));
+        }
+        match key.model.as_str() {
+            "tanh" => {
+                let eval = |v: f32| -> f32 {
+                    match key.variant.as_str() {
+                        "cr" => self.cr.eval_f64(v as f64) as f32,
+                        "pwl" => self.pwl.eval_f64(v as f64) as f32,
+                        _ => v.tanh(),
+                    }
+                };
+                Ok(flat.iter().map(|&v| eval(v)).collect())
+            }
+            // Other families: deterministic shape-correct stand-in
+            // (mean of each sample broadcast over the output width).
+            _ => {
+                let mut out = Vec::with_capacity(bucket * f.sample_out);
+                for s in 0..bucket {
+                    let row = &flat[s * f.sample_in..(s + 1) * f.sample_in];
+                    let mean = row.iter().sum::<f32>() / f.sample_in as f32;
+                    out.extend(std::iter::repeat(mean.tanh()).take(f.sample_out));
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+/// Spawn `n` workers consuming batches from `rx`.
+pub fn spawn_workers(
+    n: usize,
+    rx: Arc<Mutex<Receiver<Batch<Request>>>>,
+    router: Router,
+    factory: BackendFactory,
+    metrics: Arc<Metrics>,
+) -> Vec<JoinHandle<()>> {
+    (0..n.max(1))
+        .map(|i| {
+            let rx = Arc::clone(&rx);
+            let router = router.clone();
+            let factory = Arc::clone(&factory);
+            let metrics = Arc::clone(&metrics);
+            std::thread::Builder::new()
+                .name(format!("worker-{i}"))
+                .spawn(move || {
+                    let mut backend = match factory() {
+                        Ok(b) => b,
+                        Err(e) => {
+                            eprintln!("worker-{i}: backend init failed: {e:#}");
+                            return;
+                        }
+                    };
+                    loop {
+                        let batch = {
+                            let guard = rx.lock().unwrap();
+                            match guard.recv() {
+                                Ok(b) => b,
+                                Err(_) => return, // channel closed: shutdown
+                            }
+                        };
+                        run_batch(&mut *backend, &router, batch, &metrics);
+                    }
+                })
+                .expect("spawn worker")
+        })
+        .collect()
+}
+
+/// Execute one batch and fan responses back out (also used directly by
+/// the bench harness to measure without threads).
+pub fn run_batch(
+    backend: &mut dyn Backend,
+    router: &Router,
+    batch: Batch<Request>,
+    metrics: &Metrics,
+) {
+    let Batch { key, items, oldest } = batch;
+    let n = items.len();
+    let exec_start = Instant::now();
+    let family = router.family(&key);
+    let bucket = router.bucket(&key, n);
+    let result: Result<Vec<f32>, String> = match (family, bucket) {
+        (Some(f), Some(bucket)) => {
+            // Assemble the padded batch.
+            let mut flat = vec![0f32; bucket * f.sample_in];
+            for (s, req) in items.iter().enumerate() {
+                flat[s * f.sample_in..(s + 1) * f.sample_in].copy_from_slice(&req.payload);
+            }
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            metrics.batched_items.fetch_add(n as u64, Ordering::Relaxed);
+            metrics
+                .padding_slots
+                .fetch_add((bucket - n) as u64, Ordering::Relaxed);
+            backend.run(&key, bucket, &flat)
+        }
+        (None, _) => Err(format!("unknown model {key}")),
+        (_, None) => Err(format!("batch of {n} exceeds largest bucket for {key}")),
+    };
+    let exec_time = exec_start.elapsed();
+    metrics.record_exec(exec_time);
+    let queue_time = exec_start.duration_since(oldest);
+    metrics.record_queue(queue_time);
+
+    let sample_out = family.map(|f| f.sample_out).unwrap_or(0);
+    let padded_to = bucket.unwrap_or(0);
+    for (s, req) in items.into_iter().enumerate() {
+        let item_result = match &result {
+            Ok(flat_out) => {
+                Ok(flat_out[s * sample_out..(s + 1) * sample_out].to_vec())
+            }
+            Err(e) => Err(e.clone()),
+        };
+        let ok = item_result.is_ok();
+        let latency = req.submitted.elapsed();
+        metrics.record_e2e(latency);
+        let resp = Response {
+            id: req.id,
+            result: item_result,
+            queue_time,
+            latency,
+            batch_size: n,
+            padded_to,
+        };
+        // Receiver may have hung up (fire-and-forget callers): not an error.
+        let _ = req.reply.send(resp);
+        if ok {
+            metrics.completed.fetch_add(1, Ordering::Relaxed);
+        } else {
+            metrics.failed.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}

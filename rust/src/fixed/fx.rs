@@ -1,0 +1,189 @@
+//! `Fx` — a fixed-point value tagged with its format.
+//!
+//! Used where code manipulates *mixed* formats (the datapath simulator's
+//! stage registers); raw-integer fast paths (`approx::catmull_rom::eval_i16`)
+//! skip the tagging for speed but are tested for exact equivalence.
+
+use super::{round_shift, QFormat, Rounding};
+
+/// A signed fixed-point value: `raw · 2^-fmt.frac_bits`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Fx {
+    raw: i64,
+    fmt: QFormat,
+}
+
+impl Fx {
+    /// Wrap a raw integer already in `fmt`. Panics (debug) if out of range.
+    #[inline]
+    pub fn from_raw(raw: i64, fmt: QFormat) -> Self {
+        debug_assert!(
+            raw >= fmt.min_raw() && raw <= fmt.max_raw(),
+            "raw {raw} out of range for {fmt}"
+        );
+        Self { raw, fmt }
+    }
+
+    /// Quantize an f64 with the given rounding, saturating to the format.
+    pub fn from_f64(v: f64, fmt: QFormat, mode: Rounding) -> Self {
+        let scaled = v * fmt.scale() as f64;
+        let rounded = match mode {
+            Rounding::Truncate => scaled.floor(),
+            Rounding::HalfUp => (scaled + 0.5).floor(),
+            Rounding::HalfEven => crate::fixed::round_half_even(scaled),
+        };
+        let raw = if rounded >= fmt.max_raw() as f64 {
+            fmt.max_raw()
+        } else if rounded <= fmt.min_raw() as f64 {
+            fmt.min_raw()
+        } else {
+            rounded as i64
+        };
+        Self { raw, fmt }
+    }
+
+    pub fn zero(fmt: QFormat) -> Self {
+        Self { raw: 0, fmt }
+    }
+
+    #[inline]
+    pub fn raw(&self) -> i64 {
+        self.raw
+    }
+
+    #[inline]
+    pub fn format(&self) -> QFormat {
+        self.fmt
+    }
+
+    pub fn to_f64(&self) -> f64 {
+        self.raw as f64 * self.fmt.ulp()
+    }
+
+    /// Saturating addition; both operands must share a format.
+    pub fn sat_add(&self, other: &Fx) -> Fx {
+        assert_eq!(self.fmt, other.fmt, "format mismatch in sat_add");
+        Fx { raw: self.fmt.saturate(self.raw + other.raw), fmt: self.fmt }
+    }
+
+    /// Saturating subtraction; both operands must share a format.
+    pub fn sat_sub(&self, other: &Fx) -> Fx {
+        assert_eq!(self.fmt, other.fmt, "format mismatch in sat_sub");
+        Fx { raw: self.fmt.saturate(self.raw - other.raw), fmt: self.fmt }
+    }
+
+    /// Widening addition: result format has one more integer bit, never
+    /// overflows (up to i64 capacity).
+    pub fn wide_add(&self, other: &Fx) -> Fx {
+        assert_eq!(self.fmt, other.fmt, "format mismatch in wide_add");
+        Fx { raw: self.raw + other.raw, fmt: self.fmt.add_format() }
+    }
+
+    /// Full-precision multiplication: result format is `mul_format`, exact.
+    pub fn mul_full(&self, other: &Fx) -> Fx {
+        let fmt = self.fmt.mul_format(&other.fmt);
+        assert!(fmt.width() <= 63, "mul_full would exceed i64: {fmt}");
+        Fx { raw: self.raw * other.raw, fmt }
+    }
+
+    /// Saturating negation (handles the asymmetric min_raw).
+    pub fn sat_neg(&self) -> Fx {
+        Fx { raw: self.fmt.saturate(-self.raw), fmt: self.fmt }
+    }
+
+    /// Convert to another format: shifts the binary point with the given
+    /// rounding (when narrowing the fraction) and saturates the result.
+    pub fn convert(&self, to: QFormat, mode: Rounding) -> Fx {
+        let raw = if to.frac_bits >= self.fmt.frac_bits {
+            let shl = to.frac_bits - self.fmt.frac_bits;
+            (self.raw as i128) << shl
+        } else {
+            let shr = self.fmt.frac_bits - to.frac_bits;
+            round_shift(self.raw as i128, shr, mode) as i128
+        };
+        let sat = raw.clamp(to.min_raw() as i128, to.max_raw() as i128) as i64;
+        Fx { raw: sat, fmt: to }
+    }
+}
+
+impl std::fmt::Display for Fx {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}({})", self.fmt, self.to_f64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q2_13;
+
+    #[test]
+    fn from_f64_roundtrip() {
+        let v = Fx::from_f64(0.761658, Q2_13, Rounding::HalfEven);
+        assert!((v.to_f64() - 0.761658).abs() <= Q2_13.ulp() / 2.0);
+    }
+
+    #[test]
+    fn from_f64_saturates_both_ends() {
+        assert_eq!(Fx::from_f64(100.0, Q2_13, Rounding::HalfEven).raw(), 32767);
+        assert_eq!(Fx::from_f64(-100.0, Q2_13, Rounding::HalfEven).raw(), -32768);
+    }
+
+    #[test]
+    fn sat_add_clamps() {
+        let a = Fx::from_raw(30000, Q2_13);
+        let b = Fx::from_raw(10000, Q2_13);
+        assert_eq!(a.sat_add(&b).raw(), 32767);
+        assert_eq!(a.sat_neg().sat_sub(&b).raw(), -32768);
+    }
+
+    #[test]
+    fn wide_add_never_saturates() {
+        let a = Fx::from_raw(32767, Q2_13);
+        let s = a.wide_add(&a);
+        assert_eq!(s.raw(), 65534);
+        assert_eq!(s.format(), QFormat::new(3, 13));
+    }
+
+    #[test]
+    fn mul_full_exact() {
+        let a = Fx::from_f64(0.5, Q2_13, Rounding::HalfEven);
+        let b = Fx::from_f64(0.25, QFormat::new(0, 10), Rounding::HalfEven);
+        let p = a.mul_full(&b);
+        assert_eq!(p.to_f64(), 0.125);
+        assert_eq!(p.format().frac_bits, 23);
+    }
+
+    #[test]
+    fn sat_neg_of_min_saturates() {
+        let m = Fx::from_raw(Q2_13.min_raw(), Q2_13);
+        assert_eq!(m.sat_neg().raw(), Q2_13.max_raw());
+    }
+
+    #[test]
+    fn convert_widen_then_narrow_is_identity() {
+        let a = Fx::from_raw(-12345, Q2_13);
+        let wide = a.convert(QFormat::new(4, 20), Rounding::HalfEven);
+        let back = wide.convert(Q2_13, Rounding::HalfEven);
+        assert_eq!(back.raw(), a.raw());
+    }
+
+    #[test]
+    fn convert_narrowing_rounds() {
+        // 0.75 in Q0.2 (raw 3) -> Q0.1: 1.5 ulps -> half-even gives 2 (=1.0 sat to 0.5)
+        let a = Fx::from_raw(3, QFormat::new(0, 2));
+        let n = a.convert(QFormat::new(0, 1), Rounding::HalfEven);
+        // 3/4 = 0.75 -> nearest in halves: 1.0 -> saturates to 0.5 ulp=1? max_raw for Q0.1=0 -> 0.0
+        // Q0.1: width 2, max_raw = 0 -> the format can only hold 0 and -0.5; saturation applies.
+        assert_eq!(n.raw(), n.format().saturate(n.raw()));
+    }
+
+    #[test]
+    fn convert_truncate_vs_halfeven_differ() {
+        let a = Fx::from_raw(0b0111, QFormat::new(2, 4)); // 7/16
+        let t = a.convert(QFormat::new(2, 2), Rounding::Truncate);
+        let h = a.convert(QFormat::new(2, 2), Rounding::HalfEven);
+        assert_eq!(t.raw(), 1); // 4/16 floor
+        assert_eq!(h.raw(), 2); // 8/16 nearest
+    }
+}

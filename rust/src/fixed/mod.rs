@@ -1,0 +1,115 @@
+//! Signed fixed-point arithmetic, bit-accurate with the paper's datapath.
+//!
+//! The paper's normative format is **Q2.13**: 16-bit signed, 1 sign bit,
+//! 2 integer bits, 13 fraction bits, representing (−4, 4) with precision
+//! 2⁻¹³. Everything numeric in this repo — the approximation zoo, the
+//! hardware datapath simulator, the Pallas kernel's quantization model —
+//! is expressed through this module so there is exactly one definition of
+//! rounding and saturation.
+
+mod fx;
+mod qformat;
+mod rounding;
+
+pub use fx::Fx;
+pub use qformat::QFormat;
+pub use rounding::{round_shift, Rounding};
+
+/// The paper's I/O format: 16-bit signed, 2 integer bits, 13 fraction bits.
+pub const Q2_13: QFormat = QFormat::new(2, 13);
+
+/// Fraction bits of the paper's format, used for raw-integer fast paths.
+pub const FRAC_BITS: u32 = 13;
+
+/// One ULP of Q2.13 as f64 (2⁻¹³).
+pub const ULP: f64 = 1.0 / (1 << FRAC_BITS) as f64;
+
+/// Quantize an f64 to a raw Q2.13 integer with round-half-even and
+/// saturation to the 16-bit signed range. This is the *normative*
+/// quantizer: it matches `numpy.round` (banker's rounding), which the
+/// validated Table I/II model uses.
+#[inline]
+pub fn q13(v: f64) -> i32 {
+    let scaled = v * (1 << FRAC_BITS) as f64;
+    let r = round_half_even(scaled);
+    r.clamp(i16::MIN as f64, i16::MAX as f64) as i32
+}
+
+/// Value of a raw Q2.13 integer as f64.
+#[inline]
+pub fn q13_to_f64(raw: i32) -> f64 {
+    raw as f64 * ULP
+}
+
+/// Round-half-even on an f64 (ties to even integer), matching `numpy.round`.
+#[inline]
+pub fn round_half_even(v: f64) -> f64 {
+    // f64::round is half-away-from-zero; adjust exact .5 ties to even.
+    let floor = v.floor();
+    let diff = v - floor;
+    if diff > 0.5 {
+        floor + 1.0
+    } else if diff < 0.5 {
+        floor
+    } else {
+        // exact tie
+        if (floor as i64) % 2 == 0 {
+            floor
+        } else {
+            floor + 1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_half_even_matches_numpy_semantics() {
+        assert_eq!(round_half_even(0.5), 0.0);
+        assert_eq!(round_half_even(1.5), 2.0);
+        assert_eq!(round_half_even(2.5), 2.0);
+        assert_eq!(round_half_even(-0.5), -0.0);
+        assert_eq!(round_half_even(-1.5), -2.0);
+        assert_eq!(round_half_even(-2.5), -2.0);
+        assert_eq!(round_half_even(0.4999), 0.0);
+        assert_eq!(round_half_even(0.5001), 1.0);
+        assert_eq!(round_half_even(-3.7), -4.0);
+    }
+
+    #[test]
+    fn q13_basic_values() {
+        assert_eq!(q13(0.0), 0);
+        assert_eq!(q13(1.0), 8192);
+        assert_eq!(q13(-1.0), -8192);
+        // tanh(1) = 0.761594... * 8192 = 6238.98 -> 6239
+        assert_eq!(q13((1.0f64).tanh()), 6239);
+    }
+
+    #[test]
+    fn q13_saturates() {
+        assert_eq!(q13(10.0), i16::MAX as i32);
+        assert_eq!(q13(-10.0), i16::MIN as i32);
+        assert_eq!(q13(3.99993), 32767);
+    }
+
+    #[test]
+    fn q13_roundtrip_error_within_half_ulp() {
+        for i in -100..100 {
+            let v = i as f64 * 0.03;
+            let err = (q13_to_f64(q13(v)) - v).abs();
+            assert!(err <= ULP / 2.0 + 1e-12, "v={v} err={err}");
+        }
+    }
+
+    #[test]
+    fn q13_is_odd_symmetric() {
+        // round-half-even is symmetric, so q13(-v) == -q13(v) away from
+        // the saturation boundary.
+        for i in 0..4000 {
+            let v = i as f64 * 1e-3;
+            assert_eq!(q13(-v), -q13(v), "v={v}");
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Q-format descriptors for signed fixed-point values.
+
+/// A signed fixed-point format: 1 sign bit + `int_bits` + `frac_bits`.
+///
+/// A value with raw integer `r` represents the real number `r · 2^-frac_bits`;
+/// the representable range is `[-2^int_bits, 2^int_bits - 2^-frac_bits]`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct QFormat {
+    pub int_bits: u32,
+    pub frac_bits: u32,
+}
+
+impl QFormat {
+    pub const fn new(int_bits: u32, frac_bits: u32) -> Self {
+        Self { int_bits, frac_bits }
+    }
+
+    /// Total width in bits including the sign bit.
+    pub const fn width(&self) -> u32 {
+        1 + self.int_bits + self.frac_bits
+    }
+
+    /// Largest representable raw value: 2^(width-1) - 1.
+    pub const fn max_raw(&self) -> i64 {
+        (1i64 << (self.width() - 1)) - 1
+    }
+
+    /// Smallest representable raw value: -2^(width-1).
+    pub const fn min_raw(&self) -> i64 {
+        -(1i64 << (self.width() - 1))
+    }
+
+    /// Scale factor 2^frac_bits.
+    pub const fn scale(&self) -> i64 {
+        1i64 << self.frac_bits
+    }
+
+    /// One ULP as f64.
+    pub fn ulp(&self) -> f64 {
+        1.0 / self.scale() as f64
+    }
+
+    /// Largest representable value as f64.
+    pub fn max_value(&self) -> f64 {
+        self.max_raw() as f64 * self.ulp()
+    }
+
+    /// Smallest (most negative) representable value as f64.
+    pub fn min_value(&self) -> f64 {
+        self.min_raw() as f64 * self.ulp()
+    }
+
+    /// Saturate a raw value into this format's range.
+    #[inline]
+    pub fn saturate(&self, raw: i64) -> i64 {
+        raw.clamp(self.min_raw(), self.max_raw())
+    }
+
+    /// Format resulting from full-precision multiplication.
+    pub const fn mul_format(&self, other: &QFormat) -> QFormat {
+        QFormat::new(self.int_bits + other.int_bits + 1, self.frac_bits + other.frac_bits)
+    }
+
+    /// Format with one extra integer bit (for carry-safe addition).
+    pub const fn add_format(&self) -> QFormat {
+        QFormat::new(self.int_bits + 1, self.frac_bits)
+    }
+}
+
+impl std::fmt::Display for QFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Q{}.{}", self.int_bits, self.frac_bits)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q2_13_geometry() {
+        let q = QFormat::new(2, 13);
+        assert_eq!(q.width(), 16);
+        assert_eq!(q.max_raw(), 32767);
+        assert_eq!(q.min_raw(), -32768);
+        assert_eq!(q.scale(), 8192);
+        assert!((q.max_value() - 3.9998779296875).abs() < 1e-12);
+        assert_eq!(q.min_value(), -4.0);
+    }
+
+    #[test]
+    fn saturate_clamps() {
+        let q = QFormat::new(2, 13);
+        assert_eq!(q.saturate(40000), 32767);
+        assert_eq!(q.saturate(-40000), -32768);
+        assert_eq!(q.saturate(5), 5);
+    }
+
+    #[test]
+    fn mul_format_widths() {
+        let a = QFormat::new(2, 13);
+        let b = QFormat::new(0, 10);
+        let m = a.mul_format(&b);
+        assert_eq!(m.frac_bits, 23);
+        assert_eq!(m.int_bits, 3);
+        assert_eq!(m.width(), 27);
+    }
+
+    #[test]
+    fn display_format() {
+        assert_eq!(QFormat::new(2, 13).to_string(), "Q2.13");
+    }
+}

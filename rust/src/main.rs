@@ -1,0 +1,329 @@
+//! `crspline` — CLI for the Catmull-Rom tanh co-design stack.
+//!
+//! Subcommands regenerate every paper artifact and drive the serving demo:
+//!
+//! ```text
+//! crspline table1|table2|table3      # paper tables, measured vs published
+//! crspline figure1 [--out f.csv]     # Fig. 1 series
+//! crspline synth                     # §V trade-off + area breakdown
+//! crspline nn-eval                   # network-level activation impact
+//! crspline taylor-profile            # §II Taylor-series observation
+//! crspline serve [--requests N]      # end-to-end serving demo (PJRT)
+//! crspline error-profile [--out f]   # per-method error curves
+//! ```
+
+use crspline::analysis::{figures, tables};
+use crspline::approx::{self, TanhApprox};
+use crspline::coordinator::{
+    BatchPolicy, MockBackend, ModelKey, PjrtBackend, Router, Server, ServerConfig,
+};
+use crspline::hw::synth;
+use crspline::runtime::{artifacts, Manifest};
+use crspline::util::cli::{Args, Spec};
+use crspline::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "table1" => println!("{}", tables::table1()),
+        "table2" => println!("{}", tables::table2()),
+        "table3" => {
+            println!("{}", synth::table3());
+            let problems = synth::check_orderings(&synth::table3_rows());
+            if problems.is_empty() {
+                println!("\nordering checks: OK (paper's argument reproduces)");
+            } else {
+                for p in problems {
+                    println!("ordering check FAILED: {p}");
+                }
+            }
+        }
+        "figure1" => cmd_figure1(rest)?,
+        "synth" => {
+            println!("{}", synth::variant_tradeoff());
+            println!();
+            println!("{}", synth::cr_breakdown());
+        }
+        "nn-eval" => cmd_nn_eval()?,
+        "taylor-profile" => cmd_taylor_profile(),
+        "error-profile" => cmd_error_profile(rest)?,
+        "rtl" => cmd_rtl(rest)?,
+        "power" => cmd_power()?,
+        "serve" => cmd_serve(rest)?,
+        "help" | "--help" | "-h" => print_usage(),
+        other => {
+            print_usage();
+            anyhow::bail!("unknown command '{other}'");
+        }
+    }
+    Ok(())
+}
+
+fn print_usage() {
+    println!(
+        "crspline — Catmull-Rom spline tanh co-design stack\n\n\
+         commands:\n  \
+         table1           regenerate Table I (RMS error sweep)\n  \
+         table2           regenerate Table II (max error sweep)\n  \
+         table3           regenerate Table III (area & accuracy comparison)\n  \
+         figure1          emit Fig. 1 series as CSV\n  \
+         synth            §V configuration trade-off + area breakdown\n  \
+         nn-eval          network-level impact of activation accuracy\n  \
+         taylor-profile   §II Taylor 3-vs-4-term error profile\n  \
+         error-profile    per-method error curves as CSV\n  \
+         rtl              emit the synthesizable Verilog bundle (cr_tanh.v + TB)\n  \
+         power            switching-activity power report per variant\n  \
+         serve            end-to-end serving demo over AOT artifacts"
+    );
+}
+
+fn cmd_figure1(argv: &[String]) -> anyhow::Result<()> {
+    const SPECS: &[Spec] = &[
+        Spec::opt("out", "output CSV path (default: stdout)"),
+        Spec::opt("points", "number of samples (default 512)"),
+    ];
+    let args = Args::parse(argv, SPECS).map_err(|e| anyhow::anyhow!(e))?;
+    let points = args.get_usize("points", 512).map_err(|e| anyhow::anyhow!(e))?;
+    let csv = figures::figure1_csv(points);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &csv)?;
+            println!("wrote {} lines to {path}", csv.lines().count());
+        }
+        None => print!("{csv}"),
+    }
+    Ok(())
+}
+
+fn cmd_error_profile(argv: &[String]) -> anyhow::Result<()> {
+    const SPECS: &[Spec] = &[
+        Spec::opt("out", "output CSV path (default: stdout)"),
+        Spec::opt("points", "number of samples (default 1024)"),
+    ];
+    let args = Args::parse(argv, SPECS).map_err(|e| anyhow::anyhow!(e))?;
+    let points = args.get_usize("points", 1024).map_err(|e| anyhow::anyhow!(e))?;
+    let methods = approx::all_methods();
+    let refs: Vec<&dyn TanhApprox> = methods.iter().map(|m| m.as_ref()).collect();
+    let csv = figures::error_profile_csv(&refs, points);
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &csv)?;
+            println!("wrote {} lines to {path}", csv.lines().count());
+        }
+        None => print!("{csv}"),
+    }
+    Ok(())
+}
+
+fn cmd_nn_eval() -> anyhow::Result<()> {
+    use crspline::nn::{data, lstm, mlp};
+    let mut rng = Rng::new(2020);
+    let net = mlp::Mlp::new(&[8, 32, 32, 4], &mut rng);
+    let (xs, _) = data::gaussian_blobs(400, 8, 4, &mut rng);
+    let cell = lstm::Lstm::new(4, 24, &mut rng);
+    let seq = data::sine_sequence(96, 4, &mut rng);
+
+    println!("network-level impact of the activation block (ref = f64 tanh)\n");
+    println!(
+        "{:<14} {:>10} {:>12} | {:>12} {:>12}",
+        "method", "mlp-agree", "mlp-drift", "lstm-h-L2", "lstm-maxdiff"
+    );
+    for m in approx::all_methods() {
+        let me = mlp::evaluate_mlp(&net, &xs, m.as_ref());
+        let le = lstm::evaluate_lstm(&cell, &seq, m.as_ref());
+        println!(
+            "{:<14} {:>9.1}% {:>12.2e} | {:>12.2e} {:>12.2e}",
+            m.name(),
+            me.agreement * 100.0,
+            me.mean_output_l2,
+            le.final_h_l2,
+            le.max_traj_diff
+        );
+    }
+    Ok(())
+}
+
+fn cmd_taylor_profile() {
+    use crspline::approx::Taylor;
+    println!("Taylor-series error profile (§II): 3 vs 4 terms\n");
+    println!("{:>6} {:>12} {:>12} {:>8}", "x", "err(3-term)", "err(4-term)", "gain");
+    for i in 0..=24 {
+        let x = i as f64 * 0.1;
+        let e3 = (Taylor::new(3).poly(x) - x.tanh()).abs();
+        let e4 = (Taylor::new(4).poly(x) - x.tanh()).abs();
+        let gain = if e4 > 0.0 { e3 / e4 } else { f64::INFINITY };
+        println!("{x:>6.1} {e3:>12.3e} {e4:>12.3e} {gain:>8.2}");
+    }
+    println!(
+        "\nobservation (§II): the 4th term helps ~10x where the error was\n\
+         already small (|x| < 1) but only ~2x where it was large (|x| > 1)."
+    );
+}
+
+fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
+    const SPECS: &[Spec] = &[
+        Spec::opt("model", "model family: tanh | mlp | lstm (default tanh)"),
+        Spec::opt("variant", "activation variant: cr | pwl | exact (default cr)"),
+        Spec::opt("requests", "total requests to fire (default 256)"),
+        Spec::opt("clients", "concurrent client threads (default 4)"),
+        Spec::opt("workers", "PJRT worker threads (default 2)"),
+        Spec::opt("max-batch", "batcher max batch (default 32)"),
+        Spec::opt("max-wait-us", "batcher deadline in us (default 2000)"),
+        Spec::opt("artifacts", "artifacts dir (default ./artifacts)"),
+        Spec::flag("mock", "use the pure-Rust mock backend (no artifacts needed)"),
+    ];
+    let args = Args::parse(argv, SPECS).map_err(|e| anyhow::anyhow!(e))?;
+    let model = args.get_or("model", "tanh").to_string();
+    let variant = args.get_or("variant", "cr").to_string();
+    let requests = args.get_usize("requests", 256).map_err(|e| anyhow::anyhow!(e))?;
+    let clients = args.get_usize("clients", 4).map_err(|e| anyhow::anyhow!(e))?.max(1);
+    let workers = args.get_usize("workers", 2).map_err(|e| anyhow::anyhow!(e))?;
+    let max_batch = args.get_usize("max-batch", 32).map_err(|e| anyhow::anyhow!(e))?;
+    let max_wait =
+        Duration::from_micros(args.get_u64("max-wait-us", 2000).map_err(|e| anyhow::anyhow!(e))?);
+
+    let dir = std::path::PathBuf::from(
+        args.get("artifacts")
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| artifacts::default_dir().display().to_string()),
+    );
+
+    let (router, backend) = if args.flag("mock") {
+        let manifest = Manifest::load(&dir).unwrap_or_else(|_| mock_manifest());
+        let router = Router::from_manifest(&manifest);
+        (router.clone(), MockBackend::factory(router))
+    } else {
+        let manifest = Manifest::load(&dir)?;
+        let router = Router::from_manifest(&manifest);
+        (router, PjrtBackend::factory(dir))
+    };
+
+    let key = ModelKey::new(model, variant);
+    let family = router
+        .family(&key)
+        .ok_or_else(|| anyhow::anyhow!("no artifacts for {key}; run `make artifacts`"))?
+        .clone();
+
+    let mut cfg = ServerConfig::new(router, backend);
+    cfg.workers = workers;
+    cfg.policy = BatchPolicy { max_batch, max_wait };
+    let server = std::sync::Arc::new(Server::start(cfg)?);
+    println!(
+        "serving {key}: sample_in={} sample_out={} buckets={:?}",
+        family.sample_in, family.sample_out, family.buckets
+    );
+
+    let t0 = std::time::Instant::now();
+    let per_client = requests / clients;
+    let handles: Vec<_> = (0..clients)
+        .map(|c| {
+            let server = std::sync::Arc::clone(&server);
+            let key = key.clone();
+            let n_in = family.sample_in;
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(c as u64 + 1);
+                for _ in 0..per_client {
+                    let payload: Vec<f32> =
+                        (0..n_in).map(|_| rng.f64_range(-4.0, 4.0) as f32).collect();
+                    let resp = server.submit_wait(key.clone(), payload).expect("submit");
+                    resp.output().expect("inference ok");
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let elapsed = t0.elapsed();
+    let server = std::sync::Arc::try_unwrap(server).ok().expect("sole owner");
+    let m = server.shutdown();
+    println!("\n{m}");
+    let done = m.completed;
+    println!(
+        "\nthroughput: {:.0} req/s over {:.3}s ({done} requests)",
+        done as f64 / elapsed.as_secs_f64(),
+        elapsed.as_secs_f64()
+    );
+    Ok(())
+}
+
+/// Fallback manifest for `--mock` when artifacts have not been built.
+fn mock_manifest() -> Manifest {
+    Manifest::parse(
+        r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "tanh_cr_1", "model": "tanh", "variant": "cr",
+             "path": "none", "batch": 1, "inputs": [[1, 256]], "outputs": [[1, 256]]},
+            {"name": "tanh_cr_8", "model": "tanh", "variant": "cr",
+             "path": "none", "batch": 8, "inputs": [[8, 256]], "outputs": [[8, 256]]},
+            {"name": "tanh_cr_32", "model": "tanh", "variant": "cr",
+             "path": "none", "batch": 32, "inputs": [[32, 256]], "outputs": [[32, 256]]}
+        ]}"#,
+        std::path::PathBuf::from("."),
+    )
+    .expect("static manifest")
+}
+
+fn cmd_rtl(argv: &[String]) -> anyhow::Result<()> {
+    const SPECS: &[Spec] = &[
+        Spec::opt("out", "output directory (default rtl/)"),
+        Spec::opt("k", "sampling-period exponent, h = 2^-k (default 3)"),
+    ];
+    let args = Args::parse(argv, SPECS).map_err(|e| anyhow::anyhow!(e))?;
+    let k = args.get_usize("k", 3).map_err(|e| anyhow::anyhow!(e))? as u32;
+    let dir = std::path::PathBuf::from(args.get_or("out", "rtl"));
+    let cfg = crspline::hw::verilog::RtlConfig { k };
+    let files = crspline::hw::verilog::write_bundle(cfg, &dir)?;
+    println!("wrote {} files to {}:", files.len(), dir.display());
+    for f in files {
+        println!("  {f}");
+    }
+    println!("verify with: iverilog -g2012 -o sim {0}/tb_cr_tanh.v {0}/cr_tanh.v && (cd {0} && ../sim)", dir.display());
+    Ok(())
+}
+
+fn cmd_power() -> anyhow::Result<()> {
+    use crspline::hw::datapath::TVariant;
+    use crspline::hw::power::{estimate, measure_activity, trace_saturated, trace_transition, trace_uniform};
+    use crspline::hw::area::{catmull_rom_resources, catmull_rom_tlut_resources};
+    use crspline::hw::timing::{cr_poly_timing, cr_tlut_timing};
+    println!("switching-activity power model @ min(fmax, 500MHz), 8192-sample traces\n");
+    println!("{:<14} {:<12} {:>8} {:>8} {:>10} {:>12} {:>12}", "variant", "trace", "a_in", "a_out", "fmax", "dynamic uW", "leakage uW");
+    for (vname, variant, res, fmax) in [
+        ("t-polynomial", TVariant::Poly, catmull_rom_resources(34, 10, 16), cr_poly_timing(10, 16).fmax_mhz()),
+        ("t-LUT", TVariant::Lut { addr_bits: 8 }, catmull_rom_tlut_resources(34, 10, 16), cr_tlut_timing(10, 16).fmax_mhz()),
+    ] {
+        for (tname, trace) in [
+            ("uniform", trace_uniform(8192, 1)),
+            ("transition", trace_transition(8192, 1)),
+            ("saturated", trace_saturated(8192, 1)),
+        ] {
+            let a = measure_activity(3, variant, &trace);
+            let p = estimate(&res, &a, fmax.min(500.0));
+            println!(
+                "{vname:<14} {tname:<12} {:>8.3} {:>8.3} {:>8.0}MHz {:>12.1} {:>12.1}",
+                a.alpha_in, a.alpha_out, fmax, p.dynamic_uw, p.leakage_uw
+            );
+        }
+    }
+    println!("\nreading: saturated traffic toggles far less than transition-region\ntraffic -- activity-aware placement of the activation block matters.");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! Synthetic workloads for the NN experiments.
+
+use crate::util::rng::Rng;
+
+/// `n` points from `classes` gaussian blobs in `dim` dimensions.
+/// Returns (inputs, labels). Blob centers sit on coordinate axes at ±1.5
+/// so a tanh MLP separates them comfortably.
+pub fn gaussian_blobs(
+    n: usize,
+    dim: usize,
+    classes: usize,
+    rng: &mut Rng,
+) -> (Vec<Vec<f64>>, Vec<usize>) {
+    assert!(classes <= 2 * dim, "not enough axes for {classes} blob centers");
+    let mut xs = Vec::with_capacity(n);
+    let mut ys = Vec::with_capacity(n);
+    for _ in 0..n {
+        let label = rng.below(classes as u64) as usize;
+        let axis = label / 2;
+        let sign = if label % 2 == 0 { 1.5 } else { -1.5 };
+        let mut x: Vec<f64> = (0..dim).map(|_| rng.normal() * 0.4).collect();
+        x[axis] += sign;
+        xs.push(x);
+        ys.push(label);
+    }
+    (xs, ys)
+}
+
+/// A length-`t` sequence of `dim`-dimensional sinusoid + noise samples,
+/// the standard smoke workload for recurrent nets.
+pub fn sine_sequence(t: usize, dim: usize, rng: &mut Rng) -> Vec<Vec<f64>> {
+    let phases: Vec<f64> = (0..dim).map(|_| rng.f64_range(0.0, std::f64::consts::TAU)).collect();
+    let freqs: Vec<f64> = (0..dim).map(|_| rng.f64_range(0.05, 0.3)).collect();
+    (0..t)
+        .map(|step| {
+            (0..dim)
+                .map(|d| (freqs[d] * step as f64 + phases[d]).sin() + rng.normal() * 0.05)
+                .collect()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blobs_have_separated_means() {
+        let mut rng = Rng::new(11);
+        let (xs, ys) = gaussian_blobs(2000, 4, 4, &mut rng);
+        assert_eq!(xs.len(), 2000);
+        // class 0 center ~ +1.5 on axis 0, class 1 ~ -1.5 on axis 0
+        let mean0: f64 = xs
+            .iter()
+            .zip(&ys)
+            .filter(|(_, &y)| y == 0)
+            .map(|(x, _)| x[0])
+            .sum::<f64>()
+            / ys.iter().filter(|&&y| y == 0).count() as f64;
+        let mean1: f64 = xs
+            .iter()
+            .zip(&ys)
+            .filter(|(_, &y)| y == 1)
+            .map(|(x, _)| x[0])
+            .sum::<f64>()
+            / ys.iter().filter(|&&y| y == 1).count() as f64;
+        assert!(mean0 > 1.0 && mean1 < -1.0, "{mean0} {mean1}");
+    }
+
+    #[test]
+    fn all_labels_present() {
+        let mut rng = Rng::new(13);
+        let (_, ys) = gaussian_blobs(500, 4, 4, &mut rng);
+        for c in 0..4 {
+            assert!(ys.iter().any(|&y| y == c), "class {c} missing");
+        }
+    }
+
+    #[test]
+    fn sine_sequence_bounded() {
+        let mut rng = Rng::new(17);
+        let xs = sine_sequence(100, 3, &mut rng);
+        assert_eq!(xs.len(), 100);
+        for x in &xs {
+            assert_eq!(x.len(), 3);
+            for &v in x {
+                assert!(v.abs() < 2.0);
+            }
+        }
+    }
+}

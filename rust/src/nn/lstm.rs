@@ -1,0 +1,195 @@
+//! LSTM cell with a swappable hardware activation unit.
+//!
+//! §I motivates tanh hardware with RNN/LSTM workloads ("these neural
+//! networks continue to use tanh activation function"). An LSTM step uses
+//! the tanh block four times (candidate + output activation) and the
+//! sigmoid-via-tanh trick for the three gates, so activation error
+//! *accumulates through time* — the interesting regime for Table III's
+//! accuracy argument. `evaluate_lstm` measures hidden-state drift after T
+//! steps.
+
+use super::tensor::Matrix;
+use super::{hw_sigmoid, hw_tanh};
+use crate::approx::TanhApprox;
+use crate::util::rng::Rng;
+
+/// LSTM parameters (single layer).
+#[derive(Clone, Debug)]
+pub struct Lstm {
+    pub input: usize,
+    pub hidden: usize,
+    /// Gate weights [i, f, g, o], each (hidden × (input + hidden)).
+    pub w: [Matrix; 4],
+    pub b: [Vec<f64>; 4],
+}
+
+/// Per-step state.
+#[derive(Clone, Debug, Default)]
+pub struct LstmState {
+    pub h: Vec<f64>,
+    pub c: Vec<f64>,
+}
+
+/// Which activation path a step uses.
+enum Act<'a> {
+    Exact,
+    Hw(&'a dyn TanhApprox),
+}
+
+impl Lstm {
+    pub fn new(input: usize, hidden: usize, rng: &mut Rng) -> Self {
+        let mk = |rng: &mut Rng| Matrix::glorot(hidden, input + hidden, rng);
+        let w = [mk(rng), mk(rng), mk(rng), mk(rng)];
+        // forget-gate bias 1.0, the standard initialization
+        let b = [vec![0.0; hidden], vec![1.0; hidden], vec![0.0; hidden], vec![0.0; hidden]];
+        Self { input, hidden, w, b }
+    }
+
+    pub fn zero_state(&self) -> LstmState {
+        LstmState { h: vec![0.0; self.hidden], c: vec![0.0; self.hidden] }
+    }
+
+    fn step_inner(&self, x: &[f64], st: &LstmState, act: Act) -> LstmState {
+        assert_eq!(x.len(), self.input);
+        let mut xh = Vec::with_capacity(self.input + self.hidden);
+        xh.extend_from_slice(x);
+        xh.extend_from_slice(&st.h);
+        let gate = |k: usize| -> Vec<f64> {
+            let mut z = self.w[k].matvec(&xh);
+            for (zi, bi) in z.iter_mut().zip(&self.b[k]) {
+                *zi += bi;
+            }
+            z
+        };
+        let (zi, zf, zg, zo) = (gate(0), gate(1), gate(2), gate(3));
+        let sig = |v: f64| match &act {
+            Act::Exact => 1.0 / (1.0 + (-v).exp()),
+            Act::Hw(a) => hw_sigmoid(*a, v),
+        };
+        let th = |v: f64| match &act {
+            Act::Exact => v.tanh(),
+            Act::Hw(a) => hw_tanh(*a, v),
+        };
+        let mut c = vec![0.0; self.hidden];
+        let mut h = vec![0.0; self.hidden];
+        for j in 0..self.hidden {
+            let i = sig(zi[j]);
+            let f = sig(zf[j]);
+            let g = th(zg[j]);
+            let o = sig(zo[j]);
+            c[j] = f * st.c[j] + i * g;
+            h[j] = o * th(c[j]);
+        }
+        LstmState { h, c }
+    }
+
+    /// Exact-arithmetic step (float reference).
+    pub fn step_ref(&self, x: &[f64], st: &LstmState) -> LstmState {
+        self.step_inner(x, st, Act::Exact)
+    }
+
+    /// Accelerator step: tanh/sigmoid through the hardware block.
+    pub fn step_hw(&self, x: &[f64], st: &LstmState, a: &dyn TanhApprox) -> LstmState {
+        self.step_inner(x, st, Act::Hw(a))
+    }
+
+    /// Run a sequence, returning the final state.
+    pub fn run_ref(&self, xs: &[Vec<f64>]) -> LstmState {
+        xs.iter().fold(self.zero_state(), |st, x| self.step_ref(x, &st))
+    }
+
+    pub fn run_hw(&self, xs: &[Vec<f64>], a: &dyn TanhApprox) -> LstmState {
+        xs.iter().fold(self.zero_state(), |st, x| self.step_hw(x, &st, a))
+    }
+}
+
+/// Hidden-state drift between reference and hardware after a sequence.
+pub struct LstmEval {
+    /// L2 distance between final hidden states.
+    pub final_h_l2: f64,
+    /// Max absolute elementwise difference across the whole trajectory.
+    pub max_traj_diff: f64,
+}
+
+pub fn evaluate_lstm(lstm: &Lstm, xs: &[Vec<f64>], a: &dyn TanhApprox) -> LstmEval {
+    let mut st_r = lstm.zero_state();
+    let mut st_h = lstm.zero_state();
+    let mut max_diff = 0.0f64;
+    for x in xs {
+        st_r = lstm.step_ref(x, &st_r);
+        st_h = lstm.step_hw(x, &st_h, a);
+        for (r, h) in st_r.h.iter().zip(&st_h.h) {
+            max_diff = max_diff.max((r - h).abs());
+        }
+    }
+    let l2 = st_r
+        .h
+        .iter()
+        .zip(&st_h.h)
+        .map(|(r, h)| (r - h) * (r - h))
+        .sum::<f64>()
+        .sqrt();
+    LstmEval { final_h_l2: l2, max_traj_diff: max_diff }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{CatmullRom, PlainLut};
+    use crate::nn::data::sine_sequence;
+
+    fn setup() -> (Lstm, Vec<Vec<f64>>) {
+        let mut rng = Rng::new(7);
+        let lstm = Lstm::new(4, 16, &mut rng);
+        let xs = sine_sequence(64, 4, &mut rng);
+        (lstm, xs)
+    }
+
+    #[test]
+    fn state_stays_bounded() {
+        let (lstm, xs) = setup();
+        let st = lstm.run_ref(&xs);
+        for &h in &st.h {
+            assert!(h.abs() <= 1.0);
+        }
+    }
+
+    #[test]
+    fn cr_drift_stays_small_over_long_sequences() {
+        let (lstm, xs) = setup();
+        let e = evaluate_lstm(&lstm, &xs, &CatmullRom::paper_default());
+        assert!(e.final_h_l2 < 0.02, "l2={}", e.final_h_l2);
+        assert!(e.max_traj_diff < 0.02, "max={}", e.max_traj_diff);
+    }
+
+    #[test]
+    fn coarse_activation_drifts_more() {
+        let (lstm, xs) = setup();
+        let cr = evaluate_lstm(&lstm, &xs, &CatmullRom::paper_default());
+        let lut = evaluate_lstm(&lstm, &xs, &PlainLut::new(2));
+        assert!(
+            lut.final_h_l2 > 3.0 * cr.final_h_l2,
+            "cr={} lut={}",
+            cr.final_h_l2,
+            lut.final_h_l2
+        );
+    }
+
+    #[test]
+    fn hw_and_ref_identical_with_exact_block() {
+        // A hypothetical exact activation: drift must be ~0 except for
+        // the Q2.13 quantization floor.
+        struct Exact;
+        impl crate::approx::TanhApprox for Exact {
+            fn name(&self) -> String {
+                "exact".into()
+            }
+            fn eval_q13(&self, x: i32) -> i32 {
+                crate::fixed::q13(crate::fixed::q13_to_f64(x).tanh())
+            }
+        }
+        let (lstm, xs) = setup();
+        let e = evaluate_lstm(&lstm, &xs, &Exact);
+        assert!(e.final_h_l2 < 5e-3, "l2={}", e.final_h_l2);
+    }
+}

@@ -1,0 +1,163 @@
+//! Tanh MLP with a swappable hardware activation unit.
+
+use super::tensor::{argmax, quantize_vec, Matrix};
+use crate::approx::TanhApprox;
+use crate::util::rng::Rng;
+
+/// One dense layer.
+#[derive(Clone, Debug)]
+pub struct Dense {
+    pub w: Matrix,
+    pub b: Vec<f64>,
+}
+
+impl Dense {
+    pub fn new(inputs: usize, outputs: usize, rng: &mut Rng) -> Self {
+        Self { w: Matrix::glorot(outputs, inputs, rng), b: vec![0.0; outputs] }
+    }
+}
+
+/// Multi-layer perceptron with tanh hidden activations and linear output.
+#[derive(Clone, Debug)]
+pub struct Mlp {
+    pub layers: Vec<Dense>,
+}
+
+impl Mlp {
+    /// Build with the given layer sizes, e.g. `[16, 32, 32, 4]`.
+    pub fn new(sizes: &[usize], rng: &mut Rng) -> Self {
+        assert!(sizes.len() >= 2);
+        let layers = sizes.windows(2).map(|w| Dense::new(w[0], w[1], rng)).collect();
+        Self { layers }
+    }
+
+    /// Float reference forward pass (exact tanh).
+    pub fn forward_ref(&self, x: &[f64]) -> Vec<f64> {
+        let mut h = x.to_vec();
+        for (i, layer) in self.layers.iter().enumerate() {
+            let mut z = layer.w.matvec(&h);
+            for (zi, bi) in z.iter_mut().zip(&layer.b) {
+                *zi += bi;
+            }
+            if i + 1 < self.layers.len() {
+                for zi in z.iter_mut() {
+                    *zi = zi.tanh();
+                }
+            }
+            h = z;
+        }
+        h
+    }
+
+    /// Accelerator forward pass: Q2.13 weights & activations, hardware
+    /// tanh block. The matmul accumulates in high precision (as real
+    /// integer MACs do) and requantizes at the activation boundary.
+    pub fn forward_hw(&self, x: &[f64], act: &dyn TanhApprox) -> Vec<f64> {
+        let mut h = quantize_vec(x);
+        for (i, layer) in self.layers.iter().enumerate() {
+            let wq = layer.w.quantized();
+            let mut z = wq.matvec(&h);
+            for (zi, bi) in z.iter_mut().zip(&layer.b) {
+                *zi += bi;
+            }
+            if i + 1 < self.layers.len() {
+                for zi in z.iter_mut() {
+                    *zi = act.eval_f64(*zi);
+                }
+                h = z;
+            } else {
+                h = quantize_vec(&z);
+            }
+        }
+        h
+    }
+
+    /// Classification decision of the reference net.
+    pub fn classify_ref(&self, x: &[f64]) -> usize {
+        argmax(&self.forward_ref(x))
+    }
+
+    /// Classification decision of the accelerator net.
+    pub fn classify_hw(&self, x: &[f64], act: &dyn TanhApprox) -> usize {
+        argmax(&self.forward_hw(x, act))
+    }
+}
+
+/// Agreement rate between reference and hardware decisions, plus mean
+/// output drift — the `nn-eval` metric.
+pub struct MlpEval {
+    pub agreement: f64,
+    pub mean_output_l2: f64,
+}
+
+pub fn evaluate_mlp(
+    mlp: &Mlp,
+    inputs: &[Vec<f64>],
+    act: &dyn TanhApprox,
+) -> MlpEval {
+    let mut agree = 0usize;
+    let mut drift = 0.0f64;
+    for x in inputs {
+        let r = mlp.forward_ref(x);
+        let h = mlp.forward_hw(x, act);
+        if argmax(&r) == argmax(&h) {
+            agree += 1;
+        }
+        let l2: f64 = r.iter().zip(&h).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        drift += l2;
+    }
+    MlpEval {
+        agreement: agree as f64 / inputs.len() as f64,
+        mean_output_l2: drift / inputs.len() as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::{CatmullRom, PlainLut, QuantizedTanh};
+    use crate::nn::data::gaussian_blobs;
+
+    fn setup() -> (Mlp, Vec<Vec<f64>>) {
+        let mut rng = Rng::new(42);
+        let mlp = Mlp::new(&[8, 24, 24, 4], &mut rng);
+        let (xs, _) = gaussian_blobs(200, 8, 4, &mut rng);
+        (mlp, xs)
+    }
+
+    #[test]
+    fn ideal_activation_gives_near_perfect_agreement() {
+        let (mlp, xs) = setup();
+        let e = evaluate_mlp(&mlp, &xs, &QuantizedTanh);
+        assert!(e.agreement >= 0.99, "agreement={}", e.agreement);
+    }
+
+    #[test]
+    fn cr_spline_matches_ideal_closely() {
+        let (mlp, xs) = setup();
+        let e = evaluate_mlp(&mlp, &xs, &CatmullRom::paper_default());
+        assert!(e.agreement >= 0.98, "agreement={}", e.agreement);
+        assert!(e.mean_output_l2 < 0.02, "drift={}", e.mean_output_l2);
+    }
+
+    #[test]
+    fn coarse_lut_is_measurably_worse() {
+        let (mlp, xs) = setup();
+        let cr = evaluate_mlp(&mlp, &xs, &CatmullRom::paper_default());
+        let lut = evaluate_mlp(&mlp, &xs, &PlainLut::new(2)); // 16-entry nearest LUT
+        assert!(
+            lut.mean_output_l2 > 3.0 * cr.mean_output_l2,
+            "cr={} lut={}",
+            cr.mean_output_l2,
+            lut.mean_output_l2
+        );
+    }
+
+    #[test]
+    fn forward_shapes() {
+        let mut rng = Rng::new(1);
+        let mlp = Mlp::new(&[3, 5, 2], &mut rng);
+        assert_eq!(mlp.forward_ref(&[0.1, 0.2, 0.3]).len(), 2);
+        assert_eq!(mlp.forward_hw(&[0.1, 0.2, 0.3], &QuantizedTanh).len(), 2);
+    }
+}

@@ -1,0 +1,59 @@
+//! Fixed-point neural-network substrate.
+//!
+//! The paper's motivation (§I, ref [3]) is that activation-function
+//! accuracy affects network-level behaviour in accelerators. This module
+//! provides the experiment: an integer MLP and an integer LSTM whose
+//! activation unit is *any* [`crate::approx::TanhApprox`] — i.e. exactly
+//! the accelerator datapath the paper targets — plus float reference
+//! forward passes. `nn-eval` measures, per approximation method, how far
+//! the quantized network's outputs/decisions drift from the exact-tanh
+//! network.
+//!
+//! Sigmoid gates reuse the same tanh block through the identity
+//! σ(x) = (1 + tanh(x/2)) / 2 — standard practice in tanh-based
+//! accelerators and free in hardware (shift + add).
+
+pub mod data;
+pub mod lstm;
+pub mod mlp;
+pub mod tensor;
+
+use crate::approx::TanhApprox;
+use crate::fixed::q13_to_f64;
+
+/// Apply tanh through the Q2.13 hardware interface to an f64 activation.
+#[inline]
+pub fn hw_tanh(approx: &dyn TanhApprox, x: f64) -> f64 {
+    approx.eval_f64(x)
+}
+
+/// Hardware sigmoid via the tanh block: σ(x) = (1 + tanh(x/2)) / 2.
+/// The halving and the (1+·)/2 are bit shifts in the datapath.
+#[inline]
+pub fn hw_sigmoid(approx: &dyn TanhApprox, x: f64) -> f64 {
+    let t = q13_to_f64(approx.eval_q13(crate::fixed::q13(x / 2.0)));
+    (1.0 + t) / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::CatmullRom;
+
+    #[test]
+    fn hw_sigmoid_tracks_real_sigmoid() {
+        let cr = CatmullRom::paper_default();
+        for i in -60..=60 {
+            let x = i as f64 * 0.1;
+            let exact = 1.0 / (1.0 + (-x).exp());
+            assert!((hw_sigmoid(&cr, x) - exact).abs() < 2e-4, "x={x}");
+        }
+    }
+
+    #[test]
+    fn hw_sigmoid_saturates_correctly() {
+        let cr = CatmullRom::paper_default();
+        assert!(hw_sigmoid(&cr, 10.0) > 0.999);
+        assert!(hw_sigmoid(&cr, -10.0) < 0.001);
+    }
+}

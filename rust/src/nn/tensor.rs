@@ -1,0 +1,111 @@
+//! Minimal dense-matrix support for the NN substrate.
+//!
+//! Row-major f64 matrices with the handful of ops the MLP/LSTM forward
+//! passes need. Weights are quantized through Q2.13 when running the
+//! "accelerator" path so the only difference between reference and
+//! hardware runs is the activation unit and weight/activation precision —
+//! isolating the paper's variable.
+
+use crate::fixed::{q13, q13_to_f64};
+use crate::util::rng::Rng;
+
+/// Row-major matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Xavier/Glorot-ish init scaled for tanh networks.
+    pub fn glorot(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        let scale = (2.0 / (rows + cols) as f64).sqrt();
+        let data = (0..rows * cols).map(|_| rng.normal() * scale).collect();
+        Self { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+
+    /// y = W·x (x of length cols, y of length rows).
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec dims");
+        let mut y = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            let row = &self.data[r * self.cols..(r + 1) * self.cols];
+            y[r] = row.iter().zip(x).map(|(w, xi)| w * xi).sum();
+        }
+        y
+    }
+
+    /// Quantize every weight to Q2.13 (the accelerator's stored format).
+    pub fn quantized(&self) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&w| q13_to_f64(q13(w))).collect(),
+        }
+    }
+}
+
+/// Quantize an activation vector through Q2.13 (accelerator bus width).
+pub fn quantize_vec(xs: &[f64]) -> Vec<f64> {
+    xs.iter().map(|&v| q13_to_f64(q13(v))).collect()
+}
+
+/// Argmax index (classification decision).
+pub fn argmax(xs: &[f64]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, _)| i)
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matvec_known_values() {
+        let m = Matrix { rows: 2, cols: 3, data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] };
+        assert_eq!(m.matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+    }
+
+    #[test]
+    fn glorot_scale_reasonable() {
+        let mut rng = Rng::new(3);
+        let m = Matrix::glorot(64, 64, &mut rng);
+        let var: f64 = m.data.iter().map(|w| w * w).sum::<f64>() / m.data.len() as f64;
+        assert!((var - 2.0 / 128.0).abs() < 0.01, "var={var}");
+    }
+
+    #[test]
+    fn quantization_error_bounded() {
+        let mut rng = Rng::new(5);
+        let m = Matrix::glorot(8, 8, &mut rng);
+        let q = m.quantized();
+        for (a, b) in m.data.iter().zip(&q.data) {
+            assert!((a - b).abs() <= crate::fixed::ULP / 2.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn argmax_picks_largest() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.5]), 1);
+        assert_eq!(argmax(&[-3.0, -1.0, -2.0]), 1);
+    }
+}

@@ -1,0 +1,198 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (writer)
+//! and the Rust runtime (reader).
+//!
+//! `artifacts/manifest.json` lists every compiled program with its shapes:
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "artifacts": [
+//!     {"name": "tanh_cr_1024", "model": "tanh", "variant": "cr",
+//!      "path": "tanh_cr_1024.hlo.txt", "batch": 1024,
+//!      "inputs": [[1024]], "outputs": [[1024]]}
+//!   ]
+//! }
+//! ```
+
+use crate::util::json::{self, Json};
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One compiled program.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Logical model family: "tanh", "mlp", "lstm".
+    pub model: String,
+    /// Activation variant: "cr", "pwl", "exact".
+    pub variant: String,
+    /// HLO text file, relative to the manifest directory.
+    pub path: PathBuf,
+    /// Batch (leading) dimension this program was lowered for.
+    pub batch: usize,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+}
+
+impl ArtifactSpec {
+    /// Total f32 element count of input `i`.
+    pub fn input_elems(&self, i: usize) -> usize {
+        self.inputs[i].iter().product()
+    }
+    pub fn output_elems(&self, i: usize) -> usize {
+        self.outputs[i].iter().product()
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn shapes(v: &Json, key: &str) -> Result<Vec<Vec<usize>>> {
+    v.get(key)
+        .and_then(|a| a.as_arr())
+        .with_context(|| format!("manifest artifact missing '{key}'"))?
+        .iter()
+        .map(|shape| {
+            shape
+                .as_arr()
+                .context("shape must be an array")?
+                .iter()
+                .map(|d| {
+                    d.as_i64()
+                        .filter(|&d| d >= 0)
+                        .map(|d| d as usize)
+                        .context("dim must be a non-negative integer")
+                })
+                .collect()
+        })
+        .collect()
+}
+
+fn string_field(v: &Json, key: &str) -> Result<String> {
+    Ok(v.get(key)
+        .and_then(|s| s.as_str())
+        .with_context(|| format!("manifest artifact missing '{key}'"))?
+        .to_string())
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let root = json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let version = root.get("version").and_then(|v| v.as_i64()).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let arts = root
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .context("manifest missing 'artifacts'")?;
+        let mut artifacts = Vec::with_capacity(arts.len());
+        for a in arts {
+            artifacts.push(ArtifactSpec {
+                name: string_field(a, "name")?,
+                model: string_field(a, "model")?,
+                variant: string_field(a, "variant")?,
+                path: PathBuf::from(string_field(a, "path")?),
+                batch: a
+                    .get("batch")
+                    .and_then(|b| b.as_i64())
+                    .context("artifact missing 'batch'")? as usize,
+                inputs: shapes(a, "inputs")?,
+                outputs: shapes(a, "outputs")?,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// All artifacts of a model family, sorted by batch size.
+    pub fn family(&self, model: &str, variant: &str) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.model == model && a.variant == variant)
+            .collect();
+        v.sort_by_key(|a| a.batch);
+        v
+    }
+
+    /// Find by unique name.
+    pub fn by_name(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.path)
+    }
+}
+
+/// Default artifacts directory: `$CRSPLINE_ARTIFACTS` or `./artifacts`.
+pub fn default_dir() -> PathBuf {
+    std::env::var_os("CRSPLINE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "tanh_cr_256", "model": "tanh", "variant": "cr",
+             "path": "tanh_cr_256.hlo.txt", "batch": 256,
+             "inputs": [[256]], "outputs": [[256]]},
+            {"name": "tanh_cr_1024", "model": "tanh", "variant": "cr",
+             "path": "tanh_cr_1024.hlo.txt", "batch": 1024,
+             "inputs": [[1024]], "outputs": [[1024]]},
+            {"name": "mlp_cr_8", "model": "mlp", "variant": "cr",
+             "path": "mlp_cr_8.hlo.txt", "batch": 8,
+             "inputs": [[8, 64]], "outputs": [[8, 10]]}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from("/x")).unwrap();
+        assert_eq!(m.artifacts.len(), 3);
+        let a = m.by_name("mlp_cr_8").unwrap();
+        assert_eq!(a.input_elems(0), 512);
+        assert_eq!(a.output_elems(0), 80);
+        assert_eq!(m.hlo_path(a), PathBuf::from("/x/mlp_cr_8.hlo.txt"));
+    }
+
+    #[test]
+    fn family_sorted_by_batch() {
+        let m = Manifest::parse(SAMPLE, PathBuf::from(".")).unwrap();
+        let f = m.family("tanh", "cr");
+        assert_eq!(f.len(), 2);
+        assert!(f[0].batch < f[1].batch);
+        assert!(m.family("tanh", "nope").is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_version_and_missing_fields() {
+        assert!(Manifest::parse(r#"{"version": 9, "artifacts": []}"#, ".".into()).is_err());
+        assert!(Manifest::parse(r#"{"version": 1}"#, ".".into()).is_err());
+        assert!(Manifest::parse(
+            r#"{"version": 1, "artifacts": [{"name": "x"}]}"#,
+            ".".into()
+        )
+        .is_err());
+    }
+}

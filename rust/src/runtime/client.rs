@@ -1,0 +1,122 @@
+//! PJRT engine: compile HLO-text artifacts once, execute many times.
+
+use super::artifacts::{ArtifactSpec, Manifest};
+use anyhow::{bail, Context, Result};
+
+/// A compiled, loaded program plus its shape contract.
+pub struct LoadedModel {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl LoadedModel {
+    /// Execute with f32 inputs matching the spec's shapes; returns the
+    /// flat f32 outputs (one Vec per output).
+    ///
+    /// The AOT pipeline lowers with `return_tuple=True`, so the program
+    /// output is a tuple even when singular.
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, data) in inputs.iter().enumerate() {
+            if data.len() != self.spec.input_elems(i) {
+                bail!(
+                    "{}: input {i} has {} elems, expected {}",
+                    self.spec.name,
+                    data.len(),
+                    self.spec.input_elems(i)
+                );
+            }
+            let dims: Vec<i64> = self.spec.inputs[i].iter().map(|&d| d as i64).collect();
+            literals.push(xla::Literal::vec1(data).reshape(&dims)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: program returned {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut outs = Vec::with_capacity(parts.len());
+        for (i, lit) in parts.into_iter().enumerate() {
+            let v = lit.to_vec::<f32>()?;
+            if v.len() != self.spec.output_elems(i) {
+                bail!(
+                    "{}: output {i} has {} elems, expected {}",
+                    self.spec.name,
+                    v.len(),
+                    self.spec.output_elems(i)
+                );
+            }
+            outs.push(v);
+        }
+        Ok(outs)
+    }
+}
+
+/// A PJRT CPU client plus every artifact it has compiled.
+///
+/// Not `Send`: construct inside the thread that will run inference.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub models: Vec<LoadedModel>,
+}
+
+impl Engine {
+    /// Create a CPU engine with no models loaded.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, models: Vec::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact and keep it.
+    pub fn load(&mut self, manifest: &Manifest, spec: &ArtifactSpec) -> Result<usize> {
+        let path = manifest.hlo_path(spec);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        self.models.push(LoadedModel { spec: spec.clone(), exe });
+        Ok(self.models.len() - 1)
+    }
+
+    /// Compile every artifact in the manifest.
+    pub fn load_all(&mut self, manifest: &Manifest) -> Result<()> {
+        for spec in &manifest.artifacts {
+            self.load(manifest, spec)?;
+        }
+        Ok(())
+    }
+
+    /// Find a loaded model by artifact name.
+    pub fn by_name(&self, name: &str) -> Option<&LoadedModel> {
+        self.models.iter().find(|m| m.spec.name == name)
+    }
+
+    /// Smallest loaded model of a family with batch >= n (shape-bucket
+    /// routing policy; see coordinator::router).
+    pub fn bucket_for(&self, model: &str, variant: &str, n: usize) -> Option<&LoadedModel> {
+        self.models
+            .iter()
+            .filter(|m| m.spec.model == model && m.spec.variant == variant && m.spec.batch >= n)
+            .min_by_key(|m| m.spec.batch)
+    }
+}

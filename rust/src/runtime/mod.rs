@@ -1,0 +1,16 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and executes them on the CPU PJRT client via the `xla` crate.
+//!
+//! Interchange format is **HLO text** (see DESIGN.md / aot.py): jax ≥ 0.5
+//! serialized protos use 64-bit instruction ids that xla_extension 0.5.1
+//! rejects; the text parser reassigns ids, so text round-trips cleanly.
+//!
+//! PJRT handles are not `Send` (raw pointers under the hood), so the
+//! [`Engine`] is built *inside* whichever thread runs inference — the
+//! coordinator's workers each own one engine.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactSpec, Manifest};
+pub use client::{Engine, LoadedModel};

@@ -1,0 +1,156 @@
+//! Property-based testing framework (proptest stand-in).
+//!
+//! Seeded generators + a runner with simple shrinking for integer-vector
+//! inputs. Cases derive deterministically from a base seed so failures
+//! are reproducible: the runner prints the failing seed, and
+//! `CRSPLINE_PT_SEED` / `CRSPLINE_PT_CASES` override the defaults.
+//!
+//! ```ignore
+//! run_prop("add commutes", |g| {
+//!     let a = g.i64_range(-100, 100);
+//!     let b = g.i64_range(-100, 100);
+//!     prop_assert(a + b == b + a, format!("{a} {b}"))
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Per-case generator handle.
+pub struct Gen {
+    rng: Rng,
+    /// Log of generated scalars, used for shrinking reports.
+    trace: Vec<i64>,
+}
+
+impl Gen {
+    fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed), trace: Vec::new() }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        let v = self.rng.next_u64();
+        self.trace.push(v as i64);
+        v
+    }
+
+    pub fn i64_range(&mut self, lo: i64, hi: i64) -> i64 {
+        let v = self.rng.range_i64(lo, hi);
+        self.trace.push(v);
+        v
+    }
+
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        self.i64_range(lo as i64, hi as i64) as usize
+    }
+
+    pub fn f64_range(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.f64_range(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u64() & 1 == 1
+    }
+
+    /// A raw Q2.13 input (full i16 range) — the domain of every approx.
+    pub fn q13_raw(&mut self) -> i32 {
+        self.i64_range(i16::MIN as i64, i16::MAX as i64) as i32
+    }
+
+    /// Vector of length in [0, max_len] with elements from `f`.
+    pub fn vec<T>(&mut self, max_len: usize, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let n = self.usize_range(0, max_len);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// Pick one of the provided items.
+    pub fn choose<T: Clone>(&mut self, items: &[T]) -> T {
+        let i = self.usize_range(0, items.len() - 1);
+        items[i].clone()
+    }
+}
+
+/// Outcome of one property case.
+pub type PropResult = Result<(), String>;
+
+/// Assert inside a property.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Config from env: number of cases and base seed.
+fn config() -> (u64, u64) {
+    let cases = std::env::var("CRSPLINE_PT_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(256);
+    let seed = std::env::var("CRSPLINE_PT_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0x5EED_CA75_u64);
+    (cases, seed)
+}
+
+/// Run a property over `cases` deterministic seeds; panics with the
+/// failing seed + message on the first failure.
+pub fn run_prop(name: &str, prop: impl Fn(&mut Gen) -> PropResult) {
+    let (cases, base_seed) = config();
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen::new(seed);
+        if let Err(msg) = prop(&mut g) {
+            panic!(
+                "property '{name}' failed\n  case {case}/{cases}, seed {seed}\n  \
+                 {msg}\n  trace(first 16): {:?}\n  reproduce: CRSPLINE_PT_SEED={} CRSPLINE_PT_CASES=1",
+                &g.trace[..g.trace.len().min(16)],
+                base_seed.wrapping_add(case)
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        run_prop("sum symmetric", |g| {
+            let a = g.i64_range(-1000, 1000);
+            let b = g.i64_range(-1000, 1000);
+            prop_assert(a + b == b + a, "commutativity")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_seed() {
+        run_prop("always fails", |g| {
+            let v = g.i64_range(0, 10);
+            prop_assert(v > 100, format!("v={v}"))
+        });
+    }
+
+    #[test]
+    fn generators_stay_in_range() {
+        run_prop("ranges", |g| {
+            let v = g.i64_range(-5, 5);
+            prop_assert((-5..=5).contains(&v), format!("{v}"))?;
+            let u = g.usize_range(1, 3);
+            prop_assert((1..=3).contains(&u), format!("{u}"))?;
+            let x = g.q13_raw();
+            prop_assert((i16::MIN as i32..=i16::MAX as i32).contains(&x), format!("{x}"))
+        });
+    }
+
+    #[test]
+    fn vec_respects_max_len() {
+        run_prop("vec len", |g| {
+            let v = g.vec(7, |g| g.bool());
+            prop_assert(v.len() <= 7, format!("{}", v.len()))
+        });
+    }
+}

@@ -1,0 +1,176 @@
+//! Tiny command-line argument parser (clap stand-in).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments; unknown flags are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: options by name plus positionals in order.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+/// Option/flag specification used for validation and help text.
+#[derive(Debug, Clone)]
+pub struct Spec {
+    pub name: &'static str,
+    pub takes_value: bool,
+    pub help: &'static str,
+}
+
+impl Spec {
+    pub const fn flag(name: &'static str, help: &'static str) -> Self {
+        Self { name, takes_value: false, help }
+    }
+    pub const fn opt(name: &'static str, help: &'static str) -> Self {
+        Self { name, takes_value: true, help }
+    }
+}
+
+impl Args {
+    /// Parse `argv` (without the program name) against `specs`.
+    pub fn parse(argv: &[String], specs: &[Spec]) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (name, inline_val) = match body.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = specs
+                    .iter()
+                    .find(|s| s.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}"))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    out.opts.insert(name, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    out.flags.push(name);
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| format!("--{name}: expected number, got '{v}'")),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+/// Render help text for a subcommand.
+pub fn help(cmd: &str, about: &str, specs: &[Spec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for spec in specs {
+        let arg = if spec.takes_value {
+            format!("--{} <value>", spec.name)
+        } else {
+            format!("--{}", spec.name)
+        };
+        s.push_str(&format!("  {arg:<28} {}\n", spec.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    const SPECS: &[Spec] = &[
+        Spec::opt("depth", "LUT depth"),
+        Spec::flag("verbose", "chatty"),
+        Spec::opt("out", "output path"),
+    ];
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = Args::parse(&sv(&["--depth", "32", "--out=x.txt"]), SPECS).unwrap();
+        assert_eq!(a.get("depth"), Some("32"));
+        assert_eq!(a.get("out"), Some("x.txt"));
+        assert_eq!(a.get_usize("depth", 0).unwrap(), 32);
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = Args::parse(&sv(&["table1", "--verbose", "extra"]), SPECS).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional(), &["table1".to_string(), "extra".to_string()]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(Args::parse(&sv(&["--nope"]), SPECS).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(Args::parse(&sv(&["--depth"]), SPECS).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(Args::parse(&sv(&["--verbose=1"]), SPECS).is_err());
+    }
+
+    #[test]
+    fn defaults_and_bad_parse() {
+        let a = Args::parse(&sv(&["--depth", "xyz"]), SPECS).unwrap();
+        assert!(a.get_usize("depth", 1).is_err());
+        assert_eq!(a.get_f64("missing", 2.5).unwrap(), 2.5);
+    }
+}

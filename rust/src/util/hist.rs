@@ -1,0 +1,213 @@
+//! Latency histogram with logarithmic buckets (HdrHistogram-lite).
+//!
+//! Used by the coordinator's metrics and the bench harness for p50/p99
+//! reporting without storing every sample. Buckets are power-of-two
+//! ranges subdivided linearly (4 sub-buckets), giving <= ~19% relative
+//! error on quantiles — plenty for latency reporting.
+
+const SUB: u64 = 4; // sub-buckets per power of two
+
+/// Histogram over u64 values (typically nanoseconds).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+    sum: u128,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        // 64 powers of two * SUB sub-buckets
+        Self { counts: vec![0; (64 * SUB) as usize], total: 0, sum: 0, min: u64::MAX, max: 0 }
+    }
+
+    fn bucket(v: u64) -> usize {
+        if v == 0 {
+            return 0;
+        }
+        let exp = 63 - v.leading_zeros() as u64; // floor(log2 v)
+        // u128 intermediate: (v - 2^exp) * SUB overflows u64 for exp = 62+
+        let sub = if exp == 0 {
+            0
+        } else {
+            (((v - (1 << exp)) as u128 * SUB as u128) >> exp) as u64
+        };
+        (exp * SUB + sub) as usize
+    }
+
+    /// Representative (upper-bound) value for a bucket index.
+    fn bucket_upper(idx: usize) -> u64 {
+        let exp = idx as u64 / SUB;
+        let sub = idx as u64 % SUB;
+        if exp == 0 {
+            return sub + 1;
+        }
+        let base = 1u64 << exp;
+        // u128 intermediate: (sub+1) * 2^exp overflows u64 for exp = 62+
+        base + (((sub + 1) as u128 * base as u128) / SUB as u128) as u64
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let idx = Self::bucket(v).min(self.counts.len() - 1);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += v as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.total as f64
+        }
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile in [0,1]; returns an upper-bound estimate for the bucket
+    /// containing the q-th sample, clamped to the observed max.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * self.total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_upper(idx).min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Merge another histogram into this one.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    /// Human-readable summary line (values interpreted as nanoseconds).
+    pub fn summary_ns(&self) -> String {
+        format!(
+            "n={} mean={} p50={} p90={} p99={} max={}",
+            self.total,
+            fmt_ns(self.mean() as u64),
+            fmt_ns(self.quantile(0.50)),
+            fmt_ns(self.quantile(0.90)),
+            fmt_ns(self.quantile(0.99)),
+            fmt_ns(self.max())
+        )
+    }
+}
+
+/// Format nanoseconds human-readably.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_bracket_uniform_data() {
+        let mut h = Histogram::new();
+        for v in 1..=10_000u64 {
+            h.record(v);
+        }
+        let p50 = h.quantile(0.5);
+        assert!((4000..=6200).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((9000..=10_000).contains(&p99), "p99={p99}");
+        assert_eq!(h.max(), 10_000);
+        assert_eq!(h.min(), 1);
+        assert!((h.mean() - 5000.5).abs() < 1.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn record_zero_and_large() {
+        let mut h = Histogram::new();
+        h.record(0);
+        h.record(u64::MAX / 2);
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(1.0) >= u64::MAX / 4);
+    }
+
+    #[test]
+    fn merge_combines() {
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for v in 0..100 {
+            a.record(v);
+            b.record(v + 100);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert_eq!(a.max(), 199);
+        assert_eq!(a.min(), 0);
+    }
+
+    #[test]
+    fn bucket_monotone_in_value() {
+        let mut last = 0;
+        for v in [1u64, 2, 3, 5, 9, 17, 100, 1000, 1_000_000] {
+            let b = Histogram::bucket(v);
+            assert!(b >= last, "bucket not monotone at {v}");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(500), "500ns");
+        assert_eq!(fmt_ns(1_500), "1.50us");
+        assert_eq!(fmt_ns(2_500_000), "2.50ms");
+        assert_eq!(fmt_ns(3_000_000_000), "3.00s");
+    }
+}

@@ -1,0 +1,80 @@
+//! From-scratch substrates standing in for crates.io dependencies.
+//!
+//! The build image is offline and only ships the `xla` crate's vendored
+//! dependency closure, so the pieces a production service would pull from
+//! crates.io — PRNG, JSON, CLI parsing, thread pool, histograms — are
+//! implemented here as small, fully-tested modules.
+
+pub mod cli;
+pub mod hist;
+pub mod json;
+pub mod pool;
+pub mod rng;
+
+/// Format a float with a fixed number of significant decimals, matching the
+/// paper's table formatting (6 fractional digits).
+pub fn fmt6(v: f64) -> String {
+    format!("{v:.6}")
+}
+
+/// Render a simple aligned text table: `header` then `rows`.
+/// Used by every table-regeneration path so output formatting is uniform.
+pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let ncol = header.len();
+    let mut width = vec![0usize; ncol];
+    for (i, h) in header.iter().enumerate() {
+        width[i] = h.len();
+    }
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < ncol {
+                width[i] = width[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: &[String], width: &[usize]| -> String {
+        let mut line = String::from("|");
+        for (i, c) in cells.iter().enumerate() {
+            line.push_str(&format!(" {:<w$} |", c, w = width[i]));
+        }
+        line.push('\n');
+        line
+    };
+    let hcells: Vec<String> = header.iter().map(|s| s.to_string()).collect();
+    out.push_str(&fmt_row(&hcells, &width));
+    let mut sep = String::from("|");
+    for w in &width {
+        sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+    }
+    sep.push('\n');
+    out.push_str(&sep);
+    for row in rows {
+        out.push_str(&fmt_row(row, &width));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_table_aligns_columns() {
+        let t = render_table(
+            &["a", "long-header"],
+            &[vec!["xxxxx".into(), "1".into()], vec!["y".into(), "2".into()]],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all lines equal length
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+        assert!(lines[0].contains("long-header"));
+    }
+
+    #[test]
+    fn fmt6_fixed_digits() {
+        assert_eq!(fmt6(0.000152), "0.000152");
+        assert_eq!(fmt6(0.0082014), "0.008201");
+    }
+}

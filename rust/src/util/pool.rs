@@ -1,0 +1,194 @@
+//! Fixed-size thread pool over std channels (tokio stand-in for the
+//! CPU-bound parts of the stack: sweeps, property tests, batch workers).
+//!
+//! Deliberately simple: a shared injector queue guarded by Mutex+Condvar.
+//! The coordinator's latency-sensitive path uses its own dedicated worker
+//! threads (see `coordinator::worker`); this pool serves embarrassingly
+//! parallel analysis work where fairness and shutdown correctness matter
+//! more than nanosecond dispatch.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<State>,
+    cond: Condvar,
+}
+
+struct State {
+    jobs: VecDeque<Job>,
+    shutdown: bool,
+}
+
+/// A fixed-size worker pool. Dropping the pool joins all workers after
+/// draining outstanding jobs.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn `n` workers (n >= 1).
+    pub fn new(n: usize) -> Self {
+        let n = n.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(State { jobs: VecDeque::new(), shutdown: false }),
+            cond: Condvar::new(),
+        });
+        let workers = (0..n)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("pool-{i}"))
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Number of logical CPUs (best effort).
+    pub fn default_parallelism() -> usize {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+
+    /// Submit a job.
+    pub fn execute(&self, job: impl FnOnce() + Send + 'static) {
+        let mut st = self.shared.queue.lock().unwrap();
+        assert!(!st.shutdown, "execute after shutdown");
+        st.jobs.push_back(Box::new(job));
+        drop(st);
+        self.shared.cond.notify_one();
+    }
+
+    /// Map `f` over `items` in parallel, preserving order.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        let n = items.len();
+        let f = Arc::new(f);
+        let results: Arc<Mutex<Vec<Option<R>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        for (i, item) in items.into_iter().enumerate() {
+            let f = Arc::clone(&f);
+            let results = Arc::clone(&results);
+            let done = Arc::clone(&done);
+            self.execute(move || {
+                let r = f(item);
+                results.lock().unwrap()[i] = Some(r);
+                let (lock, cond) = &*done;
+                *lock.lock().unwrap() += 1;
+                cond.notify_one();
+            });
+        }
+        let (lock, cond) = &*done;
+        let mut count = lock.lock().unwrap();
+        while *count < n {
+            count = cond.wait(count).unwrap();
+        }
+        // Drain under the lock: workers may still hold their Arc clones
+        // briefly after bumping the done counter, so try_unwrap would race.
+        let mut guard = results.lock().unwrap();
+        guard
+            .iter_mut()
+            .map(|o| o.take().expect("job completed"))
+            .collect()
+    }
+}
+
+fn worker_loop(shared: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut st = shared.queue.lock().unwrap();
+            loop {
+                if let Some(job) = st.jobs.pop_front() {
+                    break job;
+                }
+                if st.shutdown {
+                    return;
+                }
+                st = shared.cond.wait(st).unwrap();
+            }
+        };
+        job();
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.queue.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.shared.cond.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            let d = Arc::clone(&done);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+                let (l, cv) = &*d;
+                *l.lock().unwrap() += 1;
+                cv.notify_one();
+            });
+        }
+        let (l, cv) = &*done;
+        let mut n = l.lock().unwrap();
+        while *n < 100 {
+            n = cv.wait(n).unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(8);
+        let out = pool.map((0..64).collect::<Vec<i64>>(), |x| x * x);
+        assert_eq!(out, (0..64).map(|x| x * x).collect::<Vec<i64>>());
+    }
+
+    #[test]
+    fn drop_drains_outstanding_jobs() {
+        let counter = Arc::new(AtomicUsize::new(0));
+        {
+            let pool = ThreadPool::new(2);
+            for _ in 0..50 {
+                let c = Arc::clone(&counter);
+                pool.execute(move || {
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                    c.fetch_add(1, Ordering::SeqCst);
+                });
+            }
+        } // drop joins
+        assert_eq!(counter.load(Ordering::SeqCst), 50);
+    }
+
+    #[test]
+    fn single_worker_is_serial_and_complete() {
+        let pool = ThreadPool::new(1);
+        let out = pool.map(vec![1, 2, 3], |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+}

@@ -1,0 +1,289 @@
+//! Integration: the full serving stack (submit → batcher → workers →
+//! responses) over the real PJRT backend, plus mock-backend stress runs
+//! that don't need artifacts.
+
+use crspline::coordinator::{
+    BatchPolicy, MockBackend, ModelKey, PjrtBackend, Router, Server, ServerConfig,
+};
+use crspline::runtime::Manifest;
+use crspline::util::rng::Rng;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(crspline::runtime::artifacts::default_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP coordinator+PJRT integration (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+/// End-to-end over PJRT: batched tanh requests come back bit-identical
+/// to the Rust reference, with batching actually happening.
+#[test]
+fn pjrt_serving_end_to_end() {
+    use crspline::approx::TanhApprox;
+    let Some(manifest) = manifest() else { return };
+    let router = Router::from_manifest(&manifest);
+    let dir = crspline::runtime::artifacts::default_dir();
+    let mut cfg = ServerConfig::new(router, PjrtBackend::factory(dir));
+    cfg.workers = 2;
+    cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(3) };
+    let server = Arc::new(Server::start(cfg).expect("server"));
+
+    let cr = crspline::approx::CatmullRom::paper_default();
+    let key = ModelKey::new("tanh", "cr");
+    let clients: Vec<_> = (0..4)
+        .map(|c| {
+            let server = Arc::clone(&server);
+            let key = key.clone();
+            let cr = cr.clone();
+            std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + c);
+                for _ in 0..24 {
+                    let payload: Vec<f32> =
+                        (0..256).map(|_| rng.f64_range(-4.0, 4.0) as f32).collect();
+                    let resp = server.submit_wait(key.clone(), payload.clone()).unwrap();
+                    let out = resp.output().unwrap();
+                    for (&x, &y) in payload.iter().zip(out) {
+                        assert_eq!(y, cr.eval_f64(x as f64) as f32, "x={x}");
+                    }
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    let m = Arc::try_unwrap(server).ok().expect("sole owner").shutdown();
+    assert_eq!(m.completed, 96);
+    assert_eq!(m.failed, 0);
+    assert!(m.mean_batch() > 1.0, "no batching happened: {}", m.mean_batch());
+}
+
+/// MLP and LSTM artifacts served concurrently through the same server.
+#[test]
+fn pjrt_serving_multiple_model_families() {
+    let Some(manifest) = manifest() else { return };
+    let router = Router::from_manifest(&manifest);
+    let dir = crspline::runtime::artifacts::default_dir();
+    let mut cfg = ServerConfig::new(router, PjrtBackend::factory(dir));
+    cfg.workers = 2;
+    cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) };
+    let server = Server::start(cfg).expect("server");
+
+    let mut rng = Rng::new(3);
+    for _ in 0..8 {
+        let mlp_in: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        let r = server.submit_wait(ModelKey::new("mlp", "cr"), mlp_in).unwrap();
+        assert_eq!(r.output().unwrap().len(), 10);
+
+        let lstm_in: Vec<f32> = (0..32 * 16).map(|_| rng.normal() as f32).collect();
+        let r = server.submit_wait(ModelKey::new("lstm", "cr"), lstm_in).unwrap();
+        assert_eq!(r.output().unwrap().len(), 32);
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 16);
+    assert_eq!(m.failed, 0);
+}
+
+/// Mock-backend stress: high concurrency, mixed variants, every response
+/// routed back to its submitter intact (ids embedded in payloads).
+#[test]
+fn mock_stress_no_crosstalk() {
+    let manifest = Manifest::parse(
+        r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "t1", "model": "tanh", "variant": "cr",
+             "path": "x", "batch": 1, "inputs": [[1, 4]], "outputs": [[1, 4]]},
+            {"name": "t8", "model": "tanh", "variant": "cr",
+             "path": "x", "batch": 8, "inputs": [[8, 4]], "outputs": [[8, 4]]},
+            {"name": "e8", "model": "tanh", "variant": "exact",
+             "path": "x", "batch": 8, "inputs": [[8, 4]], "outputs": [[8, 4]]}
+        ]}"#,
+        std::path::PathBuf::from("."),
+    )
+    .unwrap();
+    let router = Router::from_manifest(&manifest);
+    let mut cfg = ServerConfig::new(router.clone(), MockBackend::factory(router));
+    cfg.workers = 4;
+    cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(300) };
+    let server = Arc::new(Server::start(cfg).unwrap());
+
+    let clients: Vec<_> = (0..8)
+        .map(|c| {
+            let server = Arc::clone(&server);
+            std::thread::spawn(move || {
+                let variant = if c % 2 == 0 { "cr" } else { "exact" };
+                let key = ModelKey::new("tanh", variant);
+                for i in 0..50u32 {
+                    // payload encodes (client, i) so crosstalk would show
+                    let tag = (c as f32 * 1000.0 + i as f32) * 1e-4;
+                    let payload = vec![tag; 4];
+                    let resp = server.submit_wait(key.clone(), payload).unwrap();
+                    let out = resp.output().unwrap();
+                    let expect = (tag as f64).tanh() as f32;
+                    for &y in out {
+                        assert!((y - expect).abs() < 2e-4, "c={c} i={i} y={y} expect={expect}");
+                    }
+                }
+            })
+        })
+        .collect();
+    for c in clients {
+        c.join().unwrap();
+    }
+    let m = Arc::try_unwrap(server).ok().expect("sole owner").shutdown();
+    assert_eq!(m.completed, 400);
+    assert_eq!(m.failed, 0);
+    assert_eq!(m.submitted, 400);
+}
+
+/// Oversize batches split across buckets is not supported by design —
+/// the batcher caps at max_batch, so configure policy <= largest bucket.
+/// This test documents the contract: a policy larger than the biggest
+/// bucket produces failed responses, not hangs.
+#[test]
+fn oversize_policy_fails_cleanly() {
+    let manifest = Manifest::parse(
+        r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "t2", "model": "tanh", "variant": "cr",
+             "path": "x", "batch": 2, "inputs": [[2, 4]], "outputs": [[2, 4]]}
+        ]}"#,
+        std::path::PathBuf::from("."),
+    )
+    .unwrap();
+    let router = Router::from_manifest(&manifest);
+    let mut cfg = ServerConfig::new(router.clone(), MockBackend::factory(router));
+    cfg.workers = 1;
+    cfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(10) };
+    let server = Server::start(cfg).unwrap();
+    let key = ModelKey::new("tanh", "cr");
+    let rxs: Vec<_> = (0..4).map(|_| server.submit(key.clone(), vec![0.0; 4]).unwrap()).collect();
+    let mut failed = 0;
+    for rx in rxs {
+        if rx.recv().unwrap().output().is_err() {
+            failed += 1;
+        }
+    }
+    assert_eq!(failed, 4, "batch of 4 exceeds bucket 2: all fail cleanly");
+    server.shutdown();
+}
+
+/// Failure injection: a backend that errors on specific payload patterns
+/// must produce failed responses for exactly the affected requests —
+/// other requests in the same batch still cannot succeed (the batch is
+/// the unit of execution), but the server must neither hang nor crash,
+/// and the metrics must account for every request.
+struct FlakyBackend {
+    inner: MockBackend,
+    fail_every: u32,
+    calls: u32,
+}
+
+impl crspline::coordinator::Backend for FlakyBackend {
+    fn run(
+        &mut self,
+        key: &ModelKey,
+        bucket: usize,
+        flat: &[f32],
+    ) -> Result<Vec<f32>, String> {
+        self.calls += 1;
+        if self.calls % self.fail_every == 0 {
+            return Err("injected backend fault".into());
+        }
+        crspline::coordinator::Backend::run(&mut self.inner, key, bucket, flat)
+    }
+}
+
+#[test]
+fn injected_backend_faults_are_contained() {
+    let manifest = Manifest::parse(
+        r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "t4", "model": "tanh", "variant": "cr",
+             "path": "x", "batch": 4, "inputs": [[4, 4]], "outputs": [[4, 4]]}
+        ]}"#,
+        std::path::PathBuf::from("."),
+    )
+    .unwrap();
+    let router = Router::from_manifest(&manifest);
+    let router2 = router.clone();
+    let factory: crspline::coordinator::BackendFactory = Arc::new(move || {
+        Ok(Box::new(FlakyBackend {
+            inner: MockBackend::new(router2.clone()),
+            fail_every: 3,
+            calls: 0,
+        }) as Box<dyn crspline::coordinator::Backend>)
+    });
+    let mut cfg = ServerConfig::new(router, factory);
+    cfg.workers = 1; // deterministic fail_every counting
+    cfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) };
+    let server = Server::start(cfg).unwrap();
+    let key = ModelKey::new("tanh", "cr");
+    let (mut ok, mut failed) = (0u64, 0u64);
+    for _ in 0..60 {
+        let resp = server.submit_wait(key.clone(), vec![0.1; 4]).unwrap();
+        match resp.output() {
+            Ok(out) => {
+                ok += 1;
+                assert!((out[0] - 0.1f32.tanh()).abs() < 2e-4);
+            }
+            Err(e) => {
+                failed += 1;
+                assert!(e.to_string().contains("injected"), "{e}");
+            }
+        }
+    }
+    let m = server.shutdown();
+    assert!(failed > 0, "fault injection never fired");
+    assert!(ok > 0, "no request survived");
+    assert_eq!(m.completed + m.failed, 60);
+    assert_eq!(m.completed, ok);
+    assert_eq!(m.failed, failed);
+}
+
+/// Open-loop trace replay end to end: Poisson arrivals above and below
+/// the deadline-batching knee, no losses either way.
+#[test]
+fn open_loop_trace_replay_mock() {
+    use crspline::coordinator::{replay, Trace};
+    let manifest = Manifest::parse(
+        r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "t1", "model": "tanh", "variant": "cr",
+             "path": "x", "batch": 1, "inputs": [[1, 8]], "outputs": [[1, 8]]},
+            {"name": "t16", "model": "tanh", "variant": "cr",
+             "path": "x", "batch": 16, "inputs": [[16, 8]], "outputs": [[16, 8]]}
+        ]}"#,
+        std::path::PathBuf::from("."),
+    )
+    .unwrap();
+    let router = Router::from_manifest(&manifest);
+    let mut cfg = ServerConfig::new(router.clone(), MockBackend::factory(router));
+    cfg.workers = 2;
+    cfg.policy = BatchPolicy { max_batch: 16, max_wait: Duration::from_micros(400) };
+    let server = Server::start(cfg).unwrap();
+    let key = ModelKey::new("tanh", "cr");
+    let trace = Trace::poisson(key.clone(), 20_000.0, Duration::from_millis(80), 9)
+        .merge(Trace::bursts(key, 4, 16, Duration::from_millis(20)));
+    let report = replay(&server, &trace, |_| vec![0.5; 8]);
+    assert_eq!(report.completed, trace.len(), "failed={}", report.failed);
+    assert_eq!(report.failed, 0);
+    // under open-loop load the batcher actually batches
+    let m = server.shutdown();
+    assert!(m.mean_batch() > 2.0, "mean batch {}", m.mean_batch());
+    // p99 bounded by deadline + execution + queueing slack
+    assert!(
+        report.e2e.quantile(0.99) < 50_000_000,
+        "p99 {}ns",
+        report.e2e.quantile(0.99)
+    );
+}

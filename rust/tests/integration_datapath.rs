@@ -1,0 +1,97 @@
+//! Integration: the cycle-accurate Fig. 2/3 datapath simulator vs the
+//! reference implementation, plus the §V variant trade-off end to end.
+
+use crspline::approx::{CatmullRom, TanhApprox};
+use crspline::hw::area::{catmull_rom_resources, catmull_rom_tlut_resources};
+use crspline::hw::datapath::{CrDatapath, TVariant, LATENCY};
+use crspline::hw::timing::{cr_poly_timing, cr_tlut_timing};
+use crspline::util::rng::Rng;
+
+/// F2/F3 reproduction: the pipelined datapath (t-polynomial variant) is
+/// numerically identical to `approx::CatmullRom` on ALL 2^16 inputs.
+#[test]
+fn datapath_equivalence_exhaustive() {
+    let cr = CatmullRom::paper_default();
+    let xs: Vec<i32> = (i16::MIN as i32..=i16::MAX as i32).collect();
+    let mut dp = CrDatapath::paper_default();
+    let out = dp.run(&xs);
+    assert_eq!(out.len(), xs.len());
+    for (&x, &y) in xs.iter().zip(&out) {
+        assert_eq!(y, cr.eval_q13(x), "x={x}");
+    }
+    // one sample per cycle plus drain: full throughput
+    assert_eq!(dp.cycles(), 65536 + LATENCY as u64);
+}
+
+/// Random traffic with bubbles: order and values survive arbitrary stall
+/// patterns (the datapath has no hidden state across bubbles).
+#[test]
+fn datapath_random_traffic_with_bubbles() {
+    let cr = CatmullRom::paper_default();
+    let mut rng = Rng::new(0xF162_BEEF);
+    let mut dp = CrDatapath::paper_default();
+    let mut expected = Vec::new();
+    let mut got = Vec::new();
+    for _ in 0..5_000 {
+        let send = rng.f64() < 0.7;
+        let input = if send {
+            let x = rng.range_i64(i16::MIN as i64, i16::MAX as i64) as i32;
+            expected.push(cr.eval_q13(x));
+            Some(x)
+        } else {
+            None
+        };
+        if let Some(y) = dp.clock(input) {
+            got.push(y);
+        }
+    }
+    for _ in 0..LATENCY {
+        if let Some(y) = dp.clock(None) {
+            got.push(y);
+        }
+    }
+    assert_eq!(got, expected);
+}
+
+/// §V trade-off, all three axes at once: the t-LUT variant must be
+/// faster (timing model), larger (area model), and nearly as accurate
+/// (datapath simulation) — the full sentence the paper writes.
+#[test]
+fn section_v_tradeoff_holds_on_all_axes() {
+    // faster
+    let poly_t = cr_poly_timing(10, 16);
+    let tlut_t = cr_tlut_timing(10, 16);
+    assert!(tlut_t.fmax_mhz() > poly_t.fmax_mhz());
+    // the paper synthesized at 500 MHz: both variants must support it
+    assert!(poly_t.fmax_mhz() >= 500.0, "poly fmax {}", poly_t.fmax_mhz());
+    // larger
+    let poly_a = catmull_rom_resources(34, 10, 16);
+    let tlut_a = catmull_rom_tlut_resources(34, 10, 16);
+    assert!(tlut_a.gates() > poly_a.gates());
+    // nearly as accurate (8-bit t addressing)
+    let cr = CatmullRom::paper_default();
+    let mut dp = CrDatapath::new(3, TVariant::Lut { addr_bits: 8 });
+    let xs: Vec<i32> = (i16::MIN as i32..=i16::MAX as i32).step_by(3).collect();
+    let out = dp.run(&xs);
+    let mut max_err: f64 = 0.0;
+    for (&x, &y) in xs.iter().zip(&out) {
+        let exact = crspline::fixed::q13_to_f64(x).tanh();
+        max_err = max_err.max((crspline::fixed::q13_to_f64(y) - exact).abs());
+        assert!((y - cr.eval_q13(x)).abs() <= 8, "x={x}");
+    }
+    assert!(max_err < 0.0004, "t-LUT@8bit max err {max_err}");
+}
+
+/// The datapath works at every table configuration the paper sweeps.
+#[test]
+fn datapath_supports_all_sampling_periods() {
+    for k in 1..=4 {
+        let cr = CatmullRom::new(k, crspline::approx::Boundary::Extend);
+        let xs: Vec<i32> = (i16::MIN as i32..=i16::MAX as i32).step_by(11).collect();
+        let mut dp = CrDatapath::new(k, TVariant::Poly);
+        let out = dp.run(&xs);
+        for (&x, &y) in xs.iter().zip(&out) {
+            assert_eq!(y, cr.eval_q13(x), "k={k} x={x}");
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Integration: network-level activation-accuracy experiment (the
+//! paper's [3] motivation) across the whole method zoo.
+
+use crspline::approx::{self, TanhApprox};
+use crspline::nn::{data, lstm, mlp};
+use crspline::util::rng::Rng;
+
+/// Build one workload and measure every method against exact tanh.
+fn run_zoo() -> Vec<(String, f64, f64)> {
+    let mut rng = Rng::new(99);
+    let net = mlp::Mlp::new(&[8, 24, 24, 4], &mut rng);
+    let (xs, _) = data::gaussian_blobs(250, 8, 4, &mut rng);
+    let cell = lstm::Lstm::new(4, 16, &mut rng);
+    let seq = data::sine_sequence(80, 4, &mut rng);
+    approx::all_methods()
+        .iter()
+        .map(|m| {
+            let me = mlp::evaluate_mlp(&net, &xs, m.as_ref());
+            let le = lstm::evaluate_lstm(&cell, &seq, m.as_ref());
+            (m.name(), me.agreement, le.final_h_l2)
+        })
+        .collect()
+}
+
+#[test]
+fn accuracy_ordering_propagates_to_network_level() {
+    let rows = run_zoo();
+    let get = |prefix: &str| {
+        rows.iter()
+            .find(|(n, _, _)| n.starts_with(prefix))
+            .unwrap_or_else(|| panic!("{prefix} missing"))
+            .clone()
+    };
+    let (_, cr_agree, cr_drift) = get("cr-k3");
+    let (_, _, region_drift) = get("region");
+    let (_, _, ralut_drift) = get("ralut");
+
+    // The accurate methods keep decisions effectively intact…
+    assert!(cr_agree >= 0.99, "cr agreement {cr_agree}");
+    // …and the coarse methods drift at least an order of magnitude more
+    // through the recurrent state.
+    assert!(
+        region_drift > 5.0 * cr_drift,
+        "region {region_drift} vs cr {cr_drift}"
+    );
+    assert!(
+        ralut_drift > 5.0 * cr_drift,
+        "ralut {ralut_drift} vs cr {cr_drift}"
+    );
+}
+
+#[test]
+fn cr_is_within_noise_of_the_ideal_quantizer() {
+    let rows = run_zoo();
+    let drift = |prefix: &str| rows.iter().find(|(n, _, _)| n.starts_with(prefix)).unwrap().2;
+    let cr = drift("cr-k3");
+    let ideal = drift("ideal-q13");
+    // CR's extra error over the quantization floor is < 3x at network level
+    assert!(cr <= ideal * 3.0 + 1e-3, "cr {cr} ideal {ideal}");
+}
+
+#[test]
+fn every_method_keeps_lstm_state_bounded() {
+    let mut rng = Rng::new(5);
+    let cell = lstm::Lstm::new(4, 16, &mut rng);
+    let seq = data::sine_sequence(120, 4, &mut rng);
+    for m in approx::all_methods() {
+        let st = cell.run_hw(&seq, m.as_ref());
+        for &h in &st.h {
+            assert!(h.abs() <= 1.0, "{}: |h|={h}", m.name());
+        }
+    }
+}

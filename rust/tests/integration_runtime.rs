@@ -1,0 +1,158 @@
+//! Integration over the real PJRT runtime: load every AOT artifact,
+//! execute, and cross-check numerics against the Rust bit-accurate
+//! implementations — the L1 ↔ L3 consistency proof.
+//!
+//! Requires `make artifacts`; tests announce a skip (without failing) if
+//! the artifacts directory is missing so `cargo test` works standalone.
+
+use crspline::approx::{CatmullRom, Pwl, TanhApprox};
+use crspline::runtime::{Engine, Manifest};
+use crspline::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load(crspline::runtime::artifacts::default_dir()) {
+        Ok(m) => Some(m),
+        Err(e) => {
+            eprintln!("SKIP runtime integration (run `make artifacts`): {e:#}");
+            None
+        }
+    }
+}
+
+#[test]
+fn every_artifact_compiles_and_runs() {
+    let Some(manifest) = manifest() else { return };
+    let mut engine = Engine::cpu().expect("PJRT CPU client");
+    engine.load_all(&manifest).expect("compile all artifacts");
+    assert_eq!(engine.models.len(), 19);
+    let mut rng = Rng::new(1);
+    for m in &engine.models {
+        let inputs: Vec<Vec<f32>> = m
+            .spec
+            .inputs
+            .iter()
+            .enumerate()
+            .map(|(i, _)| {
+                (0..m.spec.input_elems(i))
+                    .map(|_| rng.f64_range(-2.0, 2.0) as f32)
+                    .collect()
+            })
+            .collect();
+        let out = m.run_f32(&inputs).unwrap_or_else(|e| panic!("{}: {e:#}", m.spec.name));
+        assert_eq!(out.len(), m.spec.outputs.len(), "{}", m.spec.name);
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(o.len(), m.spec.output_elems(i), "{}", m.spec.name);
+            assert!(o.iter().all(|v| v.is_finite()), "{}: non-finite output", m.spec.name);
+        }
+    }
+}
+
+/// The L1 kernel running under PJRT is bit-identical to the Rust
+/// CatmullRom / Pwl implementations (which are proven against the golden
+/// model, which reproduces the paper's tables — closing the loop).
+#[test]
+fn pjrt_tanh_kernels_bitexact_vs_rust() {
+    let Some(manifest) = manifest() else { return };
+    let mut engine = Engine::cpu().expect("client");
+    for name in ["tanh_cr_8", "tanh_pwl_8"] {
+        let spec = manifest.by_name(name).expect(name).clone();
+        engine.load(&manifest, &spec).expect(name);
+    }
+    let cr = CatmullRom::paper_default();
+    let pwl = Pwl::paper_default();
+
+    // 8×256 tile sweeping the whole range per run, multiple runs
+    let mut rng = Rng::new(7);
+    for run in 0..4 {
+        let input: Vec<f32> = (0..8 * 256)
+            .map(|i| {
+                if run == 0 {
+                    // structured sweep including the corners
+                    -4.0 + 8.0 * (i as f32 / 2047.0)
+                } else {
+                    rng.f64_range(-4.5, 4.5) as f32
+                }
+            })
+            .collect();
+        for (name, reference) in
+            [("tanh_cr_8", &cr as &dyn TanhApprox), ("tanh_pwl_8", &pwl as &dyn TanhApprox)]
+        {
+            let m = engine.by_name(name).unwrap();
+            let out = m.run_f32(&[input.clone()]).unwrap();
+            for (i, (&x, &y)) in input.iter().zip(&out[0]).enumerate() {
+                let want = reference.eval_f64(x as f64) as f32;
+                assert_eq!(y, want, "{name} run={run} i={i} x={x}");
+            }
+        }
+    }
+}
+
+/// CR-activation MLP/LSTM artifacts track their exact-tanh twins closely
+/// — the deployment-parity property the paper's use case needs.
+#[test]
+fn cr_models_track_exact_models() {
+    let Some(manifest) = manifest() else { return };
+    let mut engine = Engine::cpu().expect("client");
+    for name in ["mlp_cr_8", "mlp_exact_8", "lstm_cr_8", "lstm_exact_8"] {
+        let spec = manifest.by_name(name).expect(name).clone();
+        engine.load(&manifest, &spec).expect(name);
+    }
+    let mut rng = Rng::new(11);
+
+    let mlp_in: Vec<f32> = (0..8 * 64).map(|_| rng.normal() as f32).collect();
+    let a = engine.by_name("mlp_cr_8").unwrap().run_f32(&[mlp_in.clone()]).unwrap();
+    let b = engine.by_name("mlp_exact_8").unwrap().run_f32(&[mlp_in]).unwrap();
+    let max_diff = a[0]
+        .iter()
+        .zip(&b[0])
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 0.02, "mlp drift {max_diff}");
+    // classification decisions agree per batch row
+    for row in 0..8 {
+        let amax = |v: &[f32]| {
+            v.iter().enumerate().max_by(|p, q| p.1.total_cmp(q.1)).unwrap().0
+        };
+        assert_eq!(amax(&a[0][row * 10..(row + 1) * 10]), amax(&b[0][row * 10..(row + 1) * 10]));
+    }
+
+    let lstm_in: Vec<f32> = (0..8 * 32 * 16).map(|_| rng.normal() as f32).collect();
+    let a = engine.by_name("lstm_cr_8").unwrap().run_f32(&[lstm_in.clone()]).unwrap();
+    let b = engine.by_name("lstm_exact_8").unwrap().run_f32(&[lstm_in]).unwrap();
+    let max_diff = a[0]
+        .iter()
+        .zip(&b[0])
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff < 0.03, "lstm drift {max_diff}");
+}
+
+/// Shape-contract enforcement: wrong input counts/lengths are rejected.
+#[test]
+fn runtime_rejects_shape_violations() {
+    let Some(manifest) = manifest() else { return };
+    let mut engine = Engine::cpu().expect("client");
+    let spec = manifest.by_name("tanh_cr_1").expect("artifact").clone();
+    engine.load(&manifest, &spec).expect("load");
+    let m = engine.by_name("tanh_cr_1").unwrap();
+    assert!(m.run_f32(&[]).is_err());
+    assert!(m.run_f32(&[vec![0.0; 255]]).is_err());
+    assert!(m.run_f32(&[vec![0.0; 256], vec![0.0; 1]]).is_err());
+    assert!(m.run_f32(&[vec![0.0; 256]]).is_ok());
+}
+
+/// Bucket routing picks the smallest adequate compiled batch.
+#[test]
+fn engine_bucket_routing() {
+    let Some(manifest) = manifest() else { return };
+    let mut engine = Engine::cpu().expect("client");
+    for b in [1usize, 8, 32] {
+        let spec = manifest.by_name(&format!("tanh_cr_{b}")).unwrap().clone();
+        engine.load(&manifest, &spec).unwrap();
+    }
+    assert_eq!(engine.bucket_for("tanh", "cr", 1).unwrap().spec.batch, 1);
+    assert_eq!(engine.bucket_for("tanh", "cr", 2).unwrap().spec.batch, 8);
+    assert_eq!(engine.bucket_for("tanh", "cr", 9).unwrap().spec.batch, 32);
+    assert!(engine.bucket_for("tanh", "cr", 33).is_none());
+    assert!(engine.bucket_for("nope", "cr", 1).is_none());
+}

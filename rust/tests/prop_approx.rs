@@ -1,0 +1,141 @@
+//! Property tests: invariants every tanh approximation must satisfy,
+//! checked across the whole method zoo, plus CR-specific structure.
+
+use crspline::approx::{self, Boundary, CatmullRom, TanhApprox};
+use crspline::fixed::{q13, q13_to_f64};
+use crspline::testkit::{prop_assert, run_prop};
+
+#[test]
+fn all_methods_output_in_unit_range() {
+    let methods = approx::all_methods();
+    run_prop("output in [-1, 1]", move |g| {
+        let m = &methods[g.usize_range(0, methods.len() - 1)];
+        let x = g.q13_raw();
+        let y = m.eval_q13(x);
+        prop_assert(
+            (-8192..=8192).contains(&y),
+            format!("{} x={x} y={y}", m.name()),
+        )
+    });
+}
+
+#[test]
+fn all_methods_odd_symmetric() {
+    let methods = approx::all_methods();
+    run_prop("odd symmetry", move |g| {
+        let m = &methods[g.usize_range(0, methods.len() - 1)];
+        let x = g.i64_range(1, 32767) as i32;
+        prop_assert(
+            m.eval_q13(-x) == -m.eval_q13(x),
+            format!("{} x={x}", m.name()),
+        )
+    });
+}
+
+#[test]
+fn all_methods_error_bounded_by_declared_envelope() {
+    // Every method's pointwise error stays under a per-method envelope
+    // (loose but meaningful: it catches sign bugs, off-by-one segment
+    // indexing, broken folding etc. on random inputs).
+    let cases: Vec<(Box<dyn TanhApprox>, f64)> = vec![
+        (Box::new(CatmullRom::paper_default()), 0.0002),
+        (Box::new(approx::Pwl::paper_default()), 0.002),
+        (Box::new(approx::PlainLut::paper_default()), 0.04),
+        (Box::new(approx::Ralut::paper_default()), 0.02),
+        (Box::new(approx::RegionBased::paper_default()), 0.02),
+        (Box::new(approx::Gomar::paper_default()), 0.06),
+        (Box::new(approx::Dctif::paper_default()), 0.003),
+        (Box::new(approx::QuantizedTanh), 0.0001),
+    ];
+    run_prop("error envelope", move |g| {
+        let (m, bound) = &cases[g.usize_range(0, cases.len() - 1)];
+        let x = g.q13_raw();
+        let err = (q13_to_f64(m.eval_q13(x)) - q13_to_f64(x).tanh()).abs();
+        prop_assert(err <= *bound, format!("{} x={x} err={err}", m.name()))
+    });
+}
+
+#[test]
+fn cr_integer_equals_float_model_random() {
+    run_prop("cr int == float model", |g| {
+        let k = g.usize_range(1, 4) as u32;
+        let cr = CatmullRom::new(k, Boundary::Extend);
+        let x = g.q13_raw();
+        prop_assert(
+            cr.eval_q13(x) == cr.eval_model(x),
+            format!("k={k} x={x}"),
+        )
+    });
+}
+
+#[test]
+fn cr_near_monotone() {
+    // tanh is monotone; CR interpolation of monotone data can overshoot
+    // by at most one output ULP here.
+    run_prop("cr monotone within ulp", |g| {
+        let cr = CatmullRom::paper_default();
+        let x = g.i64_range(-32768, 32766) as i32;
+        let step = g.i64_range(1, 64) as i32;
+        let x2 = (x + step).min(32767);
+        let (a, b) = (cr.eval_q13(x), cr.eval_q13(x2));
+        prop_assert(b >= a - 1, format!("x={x} step={step}: {a} -> {b}"))
+    });
+}
+
+#[test]
+fn cr_interpolates_nodes_exactly_all_k() {
+    run_prop("cr exact at nodes", |g| {
+        let k = g.usize_range(1, 4) as u32;
+        let tbits = 13 - k;
+        let cr = CatmullRom::new(k, Boundary::Extend);
+        let seg = g.i64_range(0, (1 << (k + 2)) - 1);
+        let x = (seg << tbits) as i32;
+        let want = q13((x as f64 * crspline::fixed::ULP).tanh());
+        prop_assert(cr.eval_q13(x) == want, format!("k={k} seg={seg}"))
+    });
+}
+
+#[test]
+fn basis_truncation_monotone_in_budget() {
+    // More basis bits can't make the worst observed error larger.
+    run_prop("basis frac monotone", |g| {
+        let x = g.q13_raw();
+        let full = CatmullRom::paper_default();
+        let narrow = CatmullRom::paper_default().with_basis_frac(10);
+        let wide = CatmullRom::paper_default().with_basis_frac(20);
+        let exact = q13_to_f64(x).tanh();
+        let e_full = (q13_to_f64(full.eval_q13(x)) - exact).abs();
+        let e_wide = (q13_to_f64(wide.eval_q13(x)) - exact).abs();
+        let e_narrow = (q13_to_f64(narrow.eval_q13(x)) - exact).abs();
+        // pointwise: wide ~ full (within 1 ulp); narrow within its envelope
+        prop_assert(
+            (e_wide - e_full).abs() <= crspline::fixed::ULP + 1e-12,
+            format!("x={x} wide {e_wide} vs full {e_full}"),
+        )?;
+        prop_assert(e_narrow < 0.005, format!("x={x} narrow {e_narrow}"))
+    });
+}
+
+#[test]
+fn ralut_error_respects_construction_eps() {
+    run_prop("ralut eps", |g| {
+        let eps = g.f64_range(0.002, 0.05);
+        let r = approx::Ralut::new(eps);
+        let x = g.q13_raw();
+        let err = (q13_to_f64(r.eval_q13(x)) - q13_to_f64(x).tanh()).abs();
+        prop_assert(
+            err <= eps + crspline::fixed::ULP,
+            format!("eps={eps} x={x} err={err}"),
+        )
+    });
+}
+
+#[test]
+fn dctif_weights_partition_of_unity() {
+    run_prop("dctif weights sum 1", |g| {
+        let alpha = g.f64_range(0.0, 1.0);
+        let w = approx::dctif::dctif_weights(alpha);
+        let s: f64 = w.iter().sum();
+        prop_assert((s - 1.0).abs() < 1e-9, format!("alpha={alpha} sum={s}"))
+    });
+}

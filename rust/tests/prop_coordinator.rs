@@ -1,0 +1,141 @@
+//! Property tests: batcher and router invariants under arbitrary arrival
+//! patterns — no request lost, none duplicated, bounds respected.
+
+use crspline::coordinator::{BatchPolicy, Batcher, ModelKey, Router};
+use crspline::runtime::Manifest;
+use crspline::testkit::{prop_assert, run_prop};
+use std::collections::BTreeSet;
+use std::time::{Duration, Instant};
+
+#[test]
+fn batcher_conserves_items_exactly() {
+    run_prop("no loss, no duplication", |g| {
+        let max_batch = g.usize_range(1, 9);
+        let mut b: Batcher<u64> = Batcher::new(BatchPolicy {
+            max_batch,
+            max_wait: Duration::from_millis(g.usize_range(1, 20) as u64),
+        });
+        let t0 = Instant::now();
+        let n = g.usize_range(0, 120);
+        let keys = ["a", "b", "c"];
+        let mut emitted: Vec<u64> = Vec::new();
+        for item in 0..n as u64 {
+            let key = ModelKey::new(g.choose(&keys), "v");
+            let now = t0 + Duration::from_micros(item * 7);
+            if let Some(batch) = b.push(key, item, now) {
+                prop_assert(batch.items.len() <= max_batch, "size bound")?;
+                emitted.extend(&batch.items);
+            }
+            // occasionally advance time enough to expire queues
+            if g.usize_range(0, 9) == 0 {
+                let late = now + Duration::from_millis(50);
+                for batch in b.poll_expired(late) {
+                    prop_assert(batch.items.len() <= max_batch, "size bound")?;
+                    emitted.extend(&batch.items);
+                }
+            }
+        }
+        for batch in b.flush() {
+            emitted.extend(&batch.items);
+        }
+        prop_assert(b.pending() == 0, "flush drains")?;
+        let set: BTreeSet<u64> = emitted.iter().copied().collect();
+        prop_assert(
+            emitted.len() == n && set.len() == n,
+            format!("{} emitted of {n}, {} unique", emitted.len(), set.len()),
+        )
+    });
+}
+
+#[test]
+fn batcher_preserves_fifo_within_key() {
+    run_prop("per-key FIFO", |g| {
+        let mut b: Batcher<u64> = Batcher::new(BatchPolicy {
+            max_batch: g.usize_range(1, 6),
+            max_wait: Duration::from_secs(100),
+        });
+        let t0 = Instant::now();
+        let n = g.usize_range(1, 60) as u64;
+        let key = ModelKey::new("m", "v");
+        let mut emitted = Vec::new();
+        for item in 0..n {
+            if let Some(batch) = b.push(key.clone(), item, t0) {
+                emitted.extend(batch.items);
+            }
+        }
+        for batch in b.flush() {
+            emitted.extend(batch.items);
+        }
+        let sorted: Vec<u64> = (0..n).collect();
+        prop_assert(emitted == sorted, format!("{emitted:?}"))
+    });
+}
+
+#[test]
+fn batcher_deadline_never_before_max_wait() {
+    run_prop("deadline honours max_wait", |g| {
+        let wait_ms = g.usize_range(1, 50) as u64;
+        let mut b: Batcher<u8> = Batcher::new(BatchPolicy {
+            max_batch: 1000,
+            max_wait: Duration::from_millis(wait_ms),
+        });
+        let t0 = Instant::now();
+        b.push(ModelKey::new("m", "v"), 0, t0);
+        // strictly before the deadline nothing expires
+        let early = t0 + Duration::from_millis(wait_ms) - Duration::from_nanos(1);
+        prop_assert(b.poll_expired(early).is_empty(), "early expiry")?;
+        let due = t0 + Duration::from_millis(wait_ms);
+        prop_assert(b.poll_expired(due).len() == 1, "due expiry")
+    });
+}
+
+fn sample_router() -> Router {
+    let manifest = Manifest::parse(
+        r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "a1", "model": "m", "variant": "v",
+             "path": "x", "batch": 1, "inputs": [[1, 16]], "outputs": [[1, 4]]},
+            {"name": "a4", "model": "m", "variant": "v",
+             "path": "x", "batch": 4, "inputs": [[4, 16]], "outputs": [[4, 4]]},
+            {"name": "a16", "model": "m", "variant": "v",
+             "path": "x", "batch": 16, "inputs": [[16, 16]], "outputs": [[16, 4]]}
+        ]}"#,
+        std::path::PathBuf::from("."),
+    )
+    .unwrap();
+    Router::from_manifest(&manifest)
+}
+
+#[test]
+fn router_bucket_is_minimal_and_sufficient() {
+    let router = sample_router();
+    run_prop("bucket minimal sufficient", move |g| {
+        let key = ModelKey::new("m", "v");
+        let n = g.usize_range(1, 20);
+        match router.bucket(&key, n) {
+            Some(b) => {
+                prop_assert(b >= n, format!("bucket {b} < n {n}"))?;
+                // minimality: no smaller compiled bucket fits
+                for smaller in [1usize, 4, 16] {
+                    if smaller < b {
+                        prop_assert(smaller < n, format!("bucket {b} not minimal for {n}"))?;
+                    }
+                }
+                Ok(())
+            }
+            None => prop_assert(n > 16, format!("no bucket for n={n}")),
+        }
+    });
+}
+
+#[test]
+fn router_validate_accepts_exactly_sample_in() {
+    let router = sample_router();
+    run_prop("validate", move |g| {
+        let key = ModelKey::new("m", "v");
+        let len = g.usize_range(0, 40);
+        let ok = router.validate(&key, len).is_ok();
+        prop_assert(ok == (len == 16), format!("len={len} ok={ok}"))
+    });
+}

@@ -1,0 +1,130 @@
+//! Property tests: fixed-point arithmetic invariants.
+
+use crspline::fixed::{
+    q13, q13_to_f64, round_half_even, round_shift, Fx, QFormat, Rounding, Q2_13, ULP,
+};
+use crspline::testkit::{prop_assert, run_prop};
+
+#[test]
+fn q13_roundtrip_within_half_ulp() {
+    run_prop("q13 roundtrip", |g| {
+        let v = g.f64_range(-3.999, 3.999);
+        let err = (q13_to_f64(q13(v)) - v).abs();
+        prop_assert(err <= ULP / 2.0 + 1e-12, format!("v={v} err={err}"))
+    });
+}
+
+#[test]
+fn q13_monotone() {
+    run_prop("q13 monotone", |g| {
+        let a = g.f64_range(-5.0, 5.0);
+        let b = g.f64_range(-5.0, 5.0);
+        let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+        prop_assert(q13(lo) <= q13(hi), format!("{lo} {hi}"))
+    });
+}
+
+#[test]
+fn q13_odd_symmetric_away_from_saturation() {
+    run_prop("q13 odd", |g| {
+        let v = g.f64_range(0.0, 3.99);
+        prop_assert(q13(-v) == -q13(v), format!("v={v}"))
+    });
+}
+
+#[test]
+fn round_shift_halfeven_matches_float() {
+    run_prop("round_shift == float round", |g| {
+        let raw = g.i64_range(-1 << 40, 1 << 40);
+        let n = g.usize_range(1, 20) as u32;
+        let exact = raw as f64 / (1u64 << n) as f64;
+        let want = round_half_even(exact) as i64;
+        let got = round_shift(raw as i128, n, Rounding::HalfEven);
+        prop_assert(got == want, format!("raw={raw} n={n}: {got} vs {want}"))
+    });
+}
+
+#[test]
+fn round_modes_within_one_of_each_other() {
+    run_prop("rounding modes near", |g| {
+        let raw = g.i64_range(-1 << 30, 1 << 30);
+        let n = g.usize_range(1, 16) as u32;
+        let t = round_shift(raw as i128, n, Rounding::Truncate);
+        let he = round_shift(raw as i128, n, Rounding::HalfEven);
+        let hu = round_shift(raw as i128, n, Rounding::HalfUp);
+        prop_assert(
+            (he - t).abs() <= 1 && (hu - he).abs() <= 1,
+            format!("raw={raw} n={n}: t={t} he={he} hu={hu}"),
+        )
+    });
+}
+
+#[test]
+fn sat_add_commutes_and_bounds() {
+    run_prop("sat_add", |g| {
+        let a = Fx::from_raw(g.i64_range(-32768, 32767), Q2_13);
+        let b = Fx::from_raw(g.i64_range(-32768, 32767), Q2_13);
+        let ab = a.sat_add(&b);
+        let ba = b.sat_add(&a);
+        prop_assert(ab == ba, "commutativity")?;
+        prop_assert(
+            ab.raw() >= Q2_13.min_raw() && ab.raw() <= Q2_13.max_raw(),
+            "bounds",
+        )
+    });
+}
+
+#[test]
+fn wide_add_is_exact() {
+    run_prop("wide_add exact", |g| {
+        let a = Fx::from_raw(g.i64_range(-32768, 32767), Q2_13);
+        let b = Fx::from_raw(g.i64_range(-32768, 32767), Q2_13);
+        let s = a.wide_add(&b);
+        prop_assert(
+            (s.to_f64() - (a.to_f64() + b.to_f64())).abs() < 1e-12,
+            "exactness",
+        )
+    });
+}
+
+#[test]
+fn mul_full_matches_f64_product() {
+    run_prop("mul_full exact", |g| {
+        let fa = QFormat::new(2, 13);
+        let fb = QFormat::new(0, g.usize_range(4, 12) as u32);
+        let a = Fx::from_raw(g.i64_range(fa.min_raw(), fa.max_raw()), fa);
+        let b = Fx::from_raw(g.i64_range(fb.min_raw(), fb.max_raw()), fb);
+        let p = a.mul_full(&b);
+        prop_assert(
+            (p.to_f64() - a.to_f64() * b.to_f64()).abs() < 1e-12,
+            format!("{a} * {b} = {p}"),
+        )
+    });
+}
+
+#[test]
+fn convert_widen_narrow_roundtrip() {
+    run_prop("convert roundtrip", |g| {
+        let raw = g.i64_range(-32768, 32767);
+        let a = Fx::from_raw(raw, Q2_13);
+        let extra = g.usize_range(1, 10) as u32;
+        let wide = a.convert(QFormat::new(2 + extra, 13 + extra), Rounding::HalfEven);
+        let back = wide.convert(Q2_13, Rounding::HalfEven);
+        prop_assert(back.raw() == raw, format!("raw={raw} extra={extra}"))
+    });
+}
+
+#[test]
+fn saturate_is_idempotent_and_clamping() {
+    run_prop("saturate", |g| {
+        let f = QFormat::new(g.usize_range(0, 4) as u32, g.usize_range(4, 16) as u32);
+        let raw = g.i64_range(-1 << 30, 1 << 30);
+        let s = f.saturate(raw);
+        prop_assert(f.saturate(s) == s, "idempotent")?;
+        prop_assert(s >= f.min_raw() && s <= f.max_raw(), "in range")?;
+        if raw >= f.min_raw() && raw <= f.max_raw() {
+            prop_assert(s == raw, "identity inside range")?;
+        }
+        Ok(())
+    });
+}

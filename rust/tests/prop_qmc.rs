@@ -1,0 +1,118 @@
+//! Property tests: the Quine-McCluskey minimizer is exact (the LUT area
+//! numbers in Table III depend on it).
+
+use crspline::hw::qmc::{covers_area_ge, minimize, minimize_table, Implicant};
+use crspline::testkit::{prop_assert, run_prop};
+use std::collections::BTreeSet;
+
+fn random_onset(g: &mut crspline::testkit::Gen, n: u32, density: f64) -> BTreeSet<u32> {
+    (0..(1u32 << n))
+        .filter(|_| g.f64_range(0.0, 1.0) < density)
+        .collect()
+}
+
+#[test]
+fn cover_equals_function_exactly() {
+    run_prop("qmc exactness", |g| {
+        let n = g.usize_range(1, 7) as u32;
+        let density = g.f64_range(0.05, 0.95);
+        let on: BTreeSet<u32> =
+            (0..(1u32 << n)).filter(|_| g.f64_range(0.0, 1.0) < density).collect();
+        let cover = minimize(n, &on);
+        for x in 0..(1u32 << n) {
+            prop_assert(
+                cover.eval(x) == on.contains(&x),
+                format!("n={n} x={x} onset={on:?}"),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cover_never_bigger_than_onset() {
+    run_prop("qmc no blowup", |g| {
+        let n = g.usize_range(1, 6) as u32;
+        let density = g.f64_range(0.1, 0.9);
+        let on = random_onset(g, n, density);
+        let cover = minimize(n, &on);
+        prop_assert(
+            cover.terms.len() <= on.len().max(1),
+            format!("{} terms for {} minterms", cover.terms.len(), on.len()),
+        )
+    });
+}
+
+#[test]
+fn implicant_covers_its_own_cube() {
+    run_prop("implicant cube", |g| {
+        let n = 6u32;
+        let value = (g.u64() & 0x3F) as u32;
+        let mask = (g.u64() & 0x3F) as u32;
+        let imp = Implicant { value: value & !mask, mask };
+        // every assignment matching on non-masked bits is covered
+        let x = ((g.u64() & 0x3F) as u32 & mask) | (value & !mask);
+        prop_assert(imp.covers(x), format!("v={value:06b} m={mask:06b} x={x:06b}"))?;
+        prop_assert(imp.literals(n) == n - mask.count_ones(), "literal count")
+    });
+}
+
+#[test]
+fn area_monotone_under_function_growth_on_average() {
+    // Not a strict pointwise property (minimization is non-monotone), but
+    // the zero and full functions bound the area from below.
+    run_prop("area bounds", |g| {
+        let n = g.usize_range(2, 6) as u32;
+        let density = g.f64_range(0.2, 0.8);
+        let on = random_onset(g, n, density);
+        let cover = minimize(n, &on);
+        let area = covers_area_ge(&[cover]);
+        let empty = covers_area_ge(&[minimize(n, &BTreeSet::new())]);
+        let full = covers_area_ge(&[minimize(n, &(0..(1u32 << n)).collect())]);
+        prop_assert(empty == 0.0 && full == 0.0, "constants are free")?;
+        if !on.is_empty() && on.len() < (1 << n) as usize {
+            prop_assert(area >= 0.0, "non-negative")?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn table_minimization_matches_per_bit() {
+    run_prop("table == per-bit", |g| {
+        let n = g.usize_range(2, 5) as u32;
+        let bits = g.usize_range(1, 8) as u32;
+        let table: Vec<u64> = (0..(1usize << n))
+            .map(|_| g.u64() & ((1 << bits) - 1))
+            .collect();
+        let covers = minimize_table(n, bits, &table);
+        prop_assert(covers.len() == bits as usize, "one cover per bit")?;
+        for (b, c) in covers.iter().enumerate() {
+            for x in 0..(1u32 << n) {
+                let want = (table[x as usize] >> b) & 1 == 1;
+                prop_assert(c.eval(x) == want, format!("bit {b} x {x}"))?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn real_tanh_lut_minimizes_meaningfully() {
+    // The actual 32-entry control-point table: QMC should beat the naive
+    // sum-of-minterms form substantially (that's the paper's §IV premise
+    // that LUT-as-logic is cheap).
+    let lut = crspline::approx::tanh_ref::build_lut(3, 2);
+    let table: Vec<u64> = (0..64)
+        .map(|i| (lut[i.min(lut.len() - 1)] as u64) & 0x1FFF)
+        .collect();
+    let covers = minimize_table(6, 13, &table);
+    let literals: u32 = covers.iter().map(|c| c.literal_count()).sum();
+    // naive: every 1-bit is a 6-literal minterm; count the ones
+    let ones: u32 = table.iter().map(|w| w.count_ones()).sum();
+    let naive = ones * 6;
+    assert!(
+        literals * 2 < naive,
+        "QMC {literals} literals vs naive {naive}"
+    );
+}
