@@ -58,11 +58,36 @@ fn main() {
         });
     }
 
-    println!("\n# batch API (perf pass: contiguous taps + i64 MAC + buffer reuse)\n");
+    println!("\n# batch API: scalar eval_q13 loop vs tanh_slice (hoisted tables,");
+    println!("# no per-element bounds/sign re-derivation, buffer reuse)\n");
     {
-        let cr = CatmullRom::paper_default();
+        let slice_methods: Vec<Box<dyn TanhApprox>> = vec![
+            Box::new(CatmullRom::paper_default()),
+            Box::new(crspline::approx::Pwl::paper_default()),
+            Box::new(crspline::approx::PlainLut::paper_default()),
+            Box::new(crspline::approx::Ralut::paper_default()),
+            Box::new(crspline::approx::Dctif::paper_default()),
+        ];
         let mut out = vec![0i32; N];
-        b.bench_with_items("cr/eval_slice", N as u64, || {
+        for m in &slice_methods {
+            b.bench_with_items(&format!("scalar/{}", m.name()), N as u64, || {
+                for (o, &x) in out.iter_mut().zip(&xs) {
+                    *o = m.eval_q13(black_box(x));
+                }
+                black_box(&out);
+            });
+            b.bench_with_items(&format!("slice/{}", m.name()), N as u64, || {
+                m.tanh_slice(black_box(&xs), black_box(&mut out));
+            });
+            let scalar_ns = b.results[b.results.len() - 2].mean_ns();
+            let slice_ns = b.results[b.results.len() - 1].mean_ns();
+            let gain = scalar_ns / slice_ns;
+            println!("    -> {}: slice is {gain:.2}x scalar throughput\n", m.name());
+        }
+        // the inherent-method alias used by older callers stays on the
+        // same hot path
+        let cr = CatmullRom::paper_default();
+        b.bench_with_items("cr/eval_slice (alias)", N as u64, || {
             cr.eval_slice(black_box(&xs), black_box(&mut out));
         });
     }

@@ -24,7 +24,7 @@
 //! (verified exhaustively in `rust/tests/integration_tables.rs`).
 
 use super::{tanh_ref, TanhApprox};
-use crate::fixed::{round_shift, Rounding};
+use crate::fixed::{round_shift, round_shift_half_even_i64, Rounding};
 use crate::hw::area::Resources;
 
 /// How control points past x = 4 are provided.
@@ -61,9 +61,12 @@ pub struct CatmullRom {
 
 impl CatmullRom {
     /// Construct for sampling period h = 2^-k (k in 1..=4 covers the
-    /// paper's Table I/II configurations).
+    /// paper's Table I/II configurations; up to 10 leaves a meaningful
+    /// interpolation factor — tbits = 13 − k ≥ 3 — for oversampled
+    /// ablations. Beyond that t degenerates toward zero width and the
+    /// docs' Q2.13 index/t split stops making sense.)
     pub fn new(k: u32, boundary: Boundary) -> Self {
-        assert!((1..=12).contains(&k), "k={k} out of range");
+        assert!((1..=10).contains(&k), "k={k} out of range (supported: 1..=10)");
         let guard = match boundary {
             Boundary::Extend => 2,
             Boundary::Clamp => 1, // include tanh(4) itself, clamp beyond
@@ -71,14 +74,12 @@ impl CatmullRom {
         let lut = tanh_ref::build_lut(k, guard);
         let depth = 1usize << (k + 2);
         // Materialize P(-1)..P(depth+1) with the boundary policy applied.
-        let p_at = |idx: i64| -> i64 {
-            if idx < 0 {
-                -(lut[(-idx) as usize] as i64)
-            } else {
-                lut[(idx as usize).min(lut.len() - 1)] as i64
-            }
-        };
-        let lut_ext = (-1..=(depth as i64 + 1)).map(p_at).collect();
+        // Under Extend the guard rows make every positive read in-table by
+        // construction — extend_lut asserts instead of clamping so a
+        // broken table build fails loudly here rather than silently
+        // flattening the top segment. Clamp keeps the paper's literal
+        // "reads past tanh(4) return tanh(4)" semantics.
+        let lut_ext = tanh_ref::extend_lut(&lut, depth, matches!(boundary, Boundary::Clamp));
         Self {
             k,
             tbits: 13 - k,
@@ -171,30 +172,20 @@ impl CatmullRom {
             return y.clamp(-8192, 8192) as i32;
         }
         // Hot path (full precision): contiguous taps, i64-only MAC, and an
-        // inline round-half-even. The accumulator needs 13 + 3·tb + 3 bits
+        // i64 round-half-even. The accumulator needs 13 + 3·tb + 3 bits
         // (≤ 52 for k=1), so i64 is exact — no i128 on the hot path.
         let b = self.basis(tu);
         let taps = &self.lut_ext[seg..seg + 4];
         let acc: i64 = taps[0] * b[0] + taps[1] * b[1] + taps[2] * b[2] + taps[3] * b[3];
-        let n = 3 * tb + 1;
-        let floor = acc >> n;
-        let rem = acc - (floor << n);
-        let half = 1i64 << (n - 1);
-        let up = (rem > half) as i64 | ((rem == half) as i64 & floor & 1);
-        let y = floor + up;
+        let y = round_shift_half_even_i64(acc, 3 * tb + 1);
         y.clamp(-8192, 8192) as i32
     }
 
-    /// Batch evaluation into a caller-provided buffer — the L3 software
-    /// hot path (lets the compiler pipeline the folded loop; see
-    /// EXPERIMENTS.md §Perf).
+    /// Batch evaluation into a caller-provided buffer — kept as a named
+    /// inherent method for existing callers; forwards to the trait's
+    /// [`TanhApprox::tanh_slice`] hot path.
     pub fn eval_slice(&self, xs: &[i32], out: &mut [i32]) {
-        assert_eq!(xs.len(), out.len());
-        for (o, &x) in out.iter_mut().zip(xs) {
-            let (neg, u) = fold(x);
-            let y = self.eval_pos(u);
-            *o = if neg { -y } else { y };
-        }
+        <Self as TanhApprox>::tanh_slice(self, xs, out);
     }
 
     /// Float-pipeline model of the same computation (the Table I/II
@@ -225,13 +216,17 @@ impl CatmullRom {
 
 /// Fold a Q2.13 input through odd symmetry: returns (negate, magnitude).
 /// −32768 (x = −4.0) saturates to magnitude 32767, the hardware behaviour
-/// of a two's-complement negate feeding a 15-bit magnitude bus.
+/// of a two's-complement negate feeding a 15-bit magnitude bus. The
+/// positive side saturates to the same bus width: inputs are contracted
+/// to the i16 range (see `TanhApprox::eval_q13`), and clamping here keeps
+/// every out-of-contract i32 on the saturated-tanh path instead of
+/// letting it index past the tables in the bounds-free batch loops.
 #[inline]
 pub fn fold(x: i32) -> (bool, i64) {
     if x < 0 {
         (true, (-(x as i64)).min(32767))
     } else {
-        (false, x as i64)
+        (false, (x as i64).min(32767))
     }
 }
 
@@ -254,6 +249,47 @@ impl TanhApprox for CatmullRom {
             -y
         } else {
             y
+        }
+    }
+
+    /// Batch hot path: every loop-invariant (tbits, masks, the rounding
+    /// constants and the `lut_ext` base) is hoisted; the inner loop is
+    /// fold → contiguous 4-tap read → i64 MAC → inline round-half-even,
+    /// with no per-element bounds or sign re-derivation. Bit-identical to
+    /// `eval_q13` by construction (same arithmetic, same order).
+    fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
+        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
+        if self.basis_frac.is_some() {
+            // Ablation path stays scalar: its i128 rounding sequence is
+            // not worth duplicating for a config only used in sweeps.
+            for (o, &x) in out.iter_mut().zip(xs) {
+                *o = self.eval_q13(x);
+            }
+            return;
+        }
+        let tb = self.tbits;
+        let tmask = (1i64 << tb) - 1;
+        let one = 1i64 << (3 * tb);
+        let n = 3 * tb + 1;
+        // `lut_ext` stores P(-1)..=P(depth+1); the maximum folded segment
+        // index is depth−1, so `seg + 4 <= lut_ext.len()` always holds and
+        // the slice below never re-checks bounds per tap.
+        let lut_ext = &self.lut_ext[..];
+        for (o, &x) in out.iter_mut().zip(xs) {
+            let (neg, u) = fold(x);
+            let seg = (u >> tb) as usize;
+            let tu = u & tmask;
+            let t1 = tu << (2 * tb);
+            let t2 = (tu * tu) << tb;
+            let t3 = tu * tu * tu;
+            let b0 = -t3 + 2 * t2 - t1;
+            let b1 = 3 * t3 - 5 * t2 + 2 * one;
+            let b2 = -3 * t3 + 4 * t2 + t1;
+            let b3 = t3 - t2;
+            let taps = &lut_ext[seg..seg + 4];
+            let acc = taps[0] * b0 + taps[1] * b1 + taps[2] * b2 + taps[3] * b3;
+            let y = round_shift_half_even_i64(acc, n).clamp(-8192, 8192) as i32;
+            *o = if neg { -y } else { y };
         }
     }
 
@@ -367,5 +403,72 @@ mod tests {
         assert_eq!(fold(-1), (true, 1));
         assert_eq!(fold(0), (false, 0));
         assert_eq!(fold(32767), (false, 32767));
+    }
+
+    #[test]
+    fn fold_saturates_out_of_contract_i32s() {
+        // Inputs are contracted to the i16 range, but an out-of-range i32
+        // must still land on the 15-bit magnitude bus (not index past the
+        // tables in the bounds-free batch loops).
+        assert_eq!(fold(32768), (false, 32767));
+        assert_eq!(fold(i32::MAX), (false, 32767));
+        assert_eq!(fold(i32::MIN + 1), (true, 32767));
+    }
+
+    #[test]
+    fn k_boundary_keeps_nonzero_interpolation_factor() {
+        // Regression for the old `1..=12` assert: k = 10 is the last
+        // config with a meaningful t field (tbits = 3). The factor must
+        // be non-degenerate and the integer datapath must still agree
+        // with the float model at the boundary.
+        let cr = CatmullRom::new(10, Boundary::Extend);
+        assert!(cr.tbits >= 3, "tbits={} collapsed", cr.tbits);
+        assert!((1i64 << cr.tbits) - 1 > 0, "zero-width interpolation factor");
+        for x in (i16::MIN as i32..=i16::MAX as i32).step_by(101) {
+            assert_eq!(cr.eval_q13(x), cr.eval_model(x), "x={x}");
+        }
+        // mid-segment points actually interpolate (t != 0 reachable)
+        let mid = (1 << cr.tbits) / 2;
+        assert!(cr.eval_q13(mid) > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn k_above_ten_rejected() {
+        let _ = CatmullRom::new(11, Boundary::Extend);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn k_zero_rejected() {
+        let _ = CatmullRom::new(0, Boundary::Extend);
+    }
+
+    #[test]
+    fn extend_guard_rows_cover_all_reads_for_every_k() {
+        // Construction itself exercises the p_at assert for every index
+        // the datapath can reach; a missing guard row would panic here.
+        for k in 1..=10 {
+            let cr = CatmullRom::new(k, Boundary::Extend);
+            assert_eq!(cr.lut_ext.len(), cr.depth() + 3, "k={k}");
+            assert_eq!(cr.stored_entries(), cr.depth() + 2, "k={k}");
+        }
+    }
+
+    #[test]
+    fn slice_override_matches_scalar_including_ablation() {
+        let xs: Vec<i32> = (-32768..=32767).step_by(37).collect();
+        let mut out = vec![0i32; xs.len()];
+        for cr in [
+            CatmullRom::paper_default(),
+            CatmullRom::new(1, Boundary::Extend),
+            CatmullRom::new(3, Boundary::Clamp),
+            CatmullRom::paper_default().with_basis_frac(12),
+        ] {
+            cr.tanh_slice(&xs, &mut out);
+            for (&x, &y) in xs.iter().zip(&out) {
+                assert_eq!(y, cr.eval_q13(x), "{} x={x}", cr.name());
+            }
+        }
     }
 }

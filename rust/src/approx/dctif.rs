@@ -17,7 +17,7 @@
 
 use super::catmull_rom::fold;
 use super::{tanh_ref, TanhApprox};
-use crate::fixed::{round_shift, Rounding};
+use crate::fixed::{round_shift, round_shift_half_even_i64, Rounding};
 use crate::hw::area::Resources;
 
 /// DCT interpolation filter approximator.
@@ -32,6 +32,10 @@ pub struct Dctif {
     tbits: u32,
     /// Sample LUT (positive side + guards), Q2.13.
     lut: Vec<i32>,
+    /// Hot-path table: `lut_ext[i] = P(i - 1)` with the odd extension
+    /// materialized (same layout as `CatmullRom::lut_ext`), so the four
+    /// taps of segment `s` are the contiguous reads `lut_ext[s .. s+4]`.
+    lut_ext: Vec<i64>,
     /// Coefficient table: 2^abits rows of 4 signed coefficients.
     coeffs: Vec<[i32; 4]>,
 }
@@ -80,7 +84,11 @@ impl Dctif {
                 q
             })
             .collect();
-        Self { k, abits, cbits, tbits, lut: tanh_ref::build_lut(k, 2), coeffs }
+        let lut = tanh_ref::build_lut(k, 2);
+        // Two guard rows cover every read — assert (not clamp) like the
+        // CR Extend path, so a broken table build fails at construction.
+        let lut_ext = tanh_ref::extend_lut(&lut, 1usize << (k + 2), false);
+        Self { k, abits, cbits, tbits, lut, lut_ext, coeffs }
     }
 
     /// The 11-bit-precision configuration of Table III (22.17 Kbit memory):
@@ -134,6 +142,35 @@ impl TanhApprox for Dctif {
             -y
         } else {
             y
+        }
+    }
+
+    /// Batch hot path: coefficient row select + contiguous 4-tap read
+    /// from the materialized `lut_ext` (no per-element odd-extension
+    /// branch or bounds clamp), i64 MAC, one shared rounder. The folded
+    /// segment index is at most depth−1, so `seg + 4 <= lut_ext.len()`
+    /// always. Bit-identical to `eval_q13`: the i64 accumulator is exact
+    /// (|P·w| < 2^28, 4 taps) and feeds the same round-half-even.
+    fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
+        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
+        let tb = self.tbits;
+        let tmask = (1i64 << tb) - 1;
+        let ashift = tb - self.abits;
+        let cfrac = self.cbits - 2;
+        let lut_ext = &self.lut_ext[..];
+        let coeffs = &self.coeffs[..];
+        for (o, &x) in out.iter_mut().zip(xs) {
+            let (neg, u) = fold(x);
+            let seg = (u >> tb) as usize;
+            let tu = u & tmask;
+            let w = &coeffs[(tu >> ashift) as usize];
+            let taps = &lut_ext[seg..seg + 4];
+            let acc = taps[0] * w[0] as i64
+                + taps[1] * w[1] as i64
+                + taps[2] * w[2] as i64
+                + taps[3] * w[3] as i64;
+            let y = round_shift_half_even_i64(acc, cfrac).clamp(-8192, 8192) as i32;
+            *o = if neg { -y } else { y };
         }
     }
 

@@ -54,6 +54,22 @@ impl TanhApprox for PlainLut {
         }
     }
 
+    /// Batch hot path. The folded magnitude is < 2^15 and the table holds
+    /// depth+1 entries, so `(u + half) >> tbits <= depth` always — the
+    /// scalar path's `.min(len-1)` is dead and the loop is a bare
+    /// round-to-nearest index plus one read per element.
+    fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
+        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
+        let tb = self.tbits;
+        let half = 1i64 << (tb - 1);
+        let lut = &self.lut[..];
+        for (o, &x) in out.iter_mut().zip(xs) {
+            let (neg, u) = fold(x);
+            let y = lut[((u + half) >> tb) as usize];
+            *o = if neg { -y } else { y };
+        }
+    }
+
     fn resources(&self) -> Option<Resources> {
         Some(crate::hw::area::plain_lut_resources(self.lut.len()))
     }

@@ -57,6 +57,36 @@ pub trait TanhApprox: Send + Sync {
         q13_to_f64(self.eval_q13(q13(x)))
     }
 
+    /// Batch evaluation: raw Q2.13 in, raw Q2.13 out, one output per
+    /// input, written into a caller-provided buffer.
+    ///
+    /// This is the crate-wide software hot path: the coordinator's
+    /// workers, the NN activation layers and the bench harness all go
+    /// through it so per-call dispatch is amortized over whole vectors.
+    /// The default implementation loops over [`TanhApprox::eval_q13`] and
+    /// is always bit-identical to the scalar path; methods with a table
+    /// datapath override it with a hoisted inner loop (no per-element
+    /// bounds or sign re-derivation). Overrides MUST remain bit-identical
+    /// to the scalar entry point — `rust/tests/integration_slice.rs`
+    /// enforces this over the exhaustive 2^16-point domain.
+    ///
+    /// Panics if `xs.len() != out.len()`.
+    fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
+        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
+        for (o, &x) in out.iter_mut().zip(xs) {
+            *o = self.eval_q13(x);
+        }
+    }
+
+    /// Batch evaluation on f64 slices through the Q2.13 interface —
+    /// the vector analogue of [`TanhApprox::eval_f64`].
+    fn tanh_slice_f64(&self, xs: &[f64]) -> Vec<f64> {
+        let q: Vec<i32> = xs.iter().map(|&v| q13(v)).collect();
+        let mut out = vec![0i32; q.len()];
+        self.tanh_slice(&q, &mut out);
+        out.into_iter().map(q13_to_f64).collect()
+    }
+
     /// Hardware resource summary for the area model (gates, memory bits).
     /// Defaults to "unknown"; methods with a modelled datapath override it.
     fn resources(&self) -> Option<crate::hw::area::Resources> {
@@ -82,6 +112,36 @@ pub fn all_methods() -> Vec<Box<dyn TanhApprox>> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn tanh_slice_default_matches_scalar_for_every_method() {
+        let xs: Vec<i32> = (-32768..=32767).step_by(127).collect();
+        let mut out = vec![0i32; xs.len()];
+        for m in all_methods() {
+            m.tanh_slice(&xs, &mut out);
+            for (&x, &y) in xs.iter().zip(&out) {
+                assert_eq!(y, m.eval_q13(x), "{} x={x}", m.name());
+            }
+        }
+    }
+
+    #[test]
+    fn tanh_slice_f64_matches_eval_f64() {
+        for m in all_methods() {
+            let xs: Vec<f64> = (-40..=40).map(|i| i as f64 * 0.1).collect();
+            let ys = m.tanh_slice_f64(&xs);
+            for (&x, &y) in xs.iter().zip(&ys) {
+                assert_eq!(y, m.eval_f64(x), "{} x={x}", m.name());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn tanh_slice_rejects_mismatched_buffers() {
+        let mut out = vec![0i32; 3];
+        CatmullRom::paper_default().tanh_slice(&[0, 1], &mut out);
+    }
 
     #[test]
     fn all_methods_produce_sane_outputs() {

@@ -8,7 +8,7 @@
 
 use super::catmull_rom::fold;
 use super::{tanh_ref, TanhApprox};
-use crate::fixed::{round_shift, Rounding};
+use crate::fixed::{round_shift, round_shift_half_even_i64, Rounding};
 use crate::hw::area::Resources;
 
 /// PWL interpolator over a uniform LUT with step h = 2^-k.
@@ -60,6 +60,29 @@ impl TanhApprox for Pwl {
             -y
         } else {
             y
+        }
+    }
+
+    /// Batch hot path. The LUT stores depth+1 entries and the folded
+    /// magnitude is < depth·2^tbits, so `seg + 1 <= depth` always: the
+    /// top-entry clamp of the scalar path is provably dead and the inner
+    /// loop reads both taps unconditionally. Bit-identical to `eval_q13`
+    /// (same 2-tap integer dot product, same final round-half-even).
+    fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
+        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
+        let tb = self.tbits;
+        let tmask = (1i64 << tb) - 1;
+        let one = 1i64 << tb;
+        let lut = &self.lut[..];
+        for (o, &x) in out.iter_mut().zip(xs) {
+            let (neg, u) = fold(x);
+            let seg = (u >> tb) as usize;
+            let tu = u & tmask;
+            let p0 = lut[seg] as i64;
+            let p1 = lut[seg + 1] as i64;
+            let acc = p0 * (one - tu) + p1 * tu;
+            let y = round_shift_half_even_i64(acc, tb).clamp(-8192, 8192) as i32;
+            *o = if neg { -y } else { y };
         }
     }
 

@@ -105,6 +105,26 @@ impl TanhApprox for Ralut {
         }
     }
 
+    /// Batch hot path. `ranges` is sorted and `ranges[0].start == 0` by
+    /// construction, so for any folded magnitude the binary search's
+    /// `Err(i)` has `i >= 1` and `Ok(i)` is in range — the per-element
+    /// `.min(len-1)` clamp of the scalar `lookup` is dead and the loop is
+    /// search + read with the table borrow hoisted.
+    fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
+        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
+        let ranges = &self.ranges[..];
+        for (o, &x) in out.iter_mut().zip(xs) {
+            let (neg, u) = fold(x);
+            let u = u as i32;
+            let idx = match ranges.binary_search_by(|r| r.start.cmp(&u)) {
+                Ok(i) => i,
+                Err(i) => i - 1,
+            };
+            let y = ranges[idx].y;
+            *o = if neg { -y } else { y };
+        }
+    }
+
     fn resources(&self) -> Option<Resources> {
         Some(crate::hw::baselines::ralut_resources(self.entries()))
     }

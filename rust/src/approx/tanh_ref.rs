@@ -31,6 +31,34 @@ pub fn build_lut(k: u32, guard: usize) -> Vec<i32> {
     (0..depth + guard).map(|j| lut_entry(j as i64, h)).collect()
 }
 
+/// Materialize the 4-tap read table `ext[i] = P(i − 1)` over segments
+/// `-1..=depth+1`, with tanh's odd extension below zero — the shared
+/// builder behind the CR and DCTIF batch hot paths (contiguous
+/// `ext[seg..seg+4]` reads, no per-element sign branch or bounds clamp).
+///
+/// `clamp_top = false` (tables built with enough guard rows) asserts
+/// every positive read is in-table so a broken table build fails loudly
+/// at construction; `clamp_top = true` keeps the literal clamp-to-last
+/// semantics (`CatmullRom` with [`super::Boundary::Clamp`]).
+pub fn extend_lut(lut: &[i32], depth: usize, clamp_top: bool) -> Vec<i64> {
+    (-1..=(depth as i64 + 1))
+        .map(|idx| {
+            if idx < 0 {
+                -(lut[(-idx) as usize] as i64)
+            } else if clamp_top {
+                lut[(idx as usize).min(lut.len() - 1)] as i64
+            } else {
+                assert!(
+                    (idx as usize) < lut.len(),
+                    "guard rows must cover idx {idx} (lut len {})",
+                    lut.len()
+                );
+                lut[idx as usize] as i64
+            }
+        })
+        .collect()
+}
+
 /// The ideal 16-bit implementation: round(tanh(x)) in Q2.13.
 pub struct QuantizedTanh;
 

@@ -10,6 +10,7 @@ use super::batcher::Batch;
 use super::metrics::Metrics;
 use super::request::{ModelKey, Request, Response};
 use super::router::Router;
+use crate::approx::TanhApprox;
 use crate::runtime::{Engine, Manifest};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::Receiver;
@@ -63,10 +64,18 @@ impl Backend for PjrtBackend {
 /// Pure-Rust mock backend: computes the tanh family with
 /// `approx::CatmullRom`/`Pwl`/exact — bit-compatible with the L1 kernel's
 /// quantization model — and echoes shapes for other families.
+///
+/// The tanh variants run through [`TanhApprox::tanh_slice`] with reused
+/// quantization/output buffers, so a whole padded bucket is one batch
+/// evaluation rather than `bucket · sample_in` virtual calls — the same
+/// amortization the compiled artifacts get from static batch shapes.
 pub struct MockBackend {
     router: Router,
     cr: crate::approx::CatmullRom,
     pwl: crate::approx::Pwl,
+    /// Scratch buffers reused across `run` calls (quantized in / raw out).
+    q_in: Vec<i32>,
+    q_out: Vec<i32>,
 }
 
 impl MockBackend {
@@ -75,6 +84,8 @@ impl MockBackend {
             router,
             cr: crate::approx::CatmullRom::paper_default(),
             pwl: crate::approx::Pwl::paper_default(),
+            q_in: Vec::new(),
+            q_out: Vec::new(),
         }
     }
 
@@ -83,24 +94,33 @@ impl MockBackend {
     }
 }
 
+/// Bulk-evaluate `flat` through a Q2.13 approximation, reusing caller
+/// scratch buffers. Bit-identical to mapping `eval_f64` per element.
+fn run_tanh_slice(
+    approx: &dyn TanhApprox,
+    q_in: &mut Vec<i32>,
+    q_out: &mut Vec<i32>,
+    flat: &[f32],
+) -> Vec<f32> {
+    q_in.clear();
+    q_in.extend(flat.iter().map(|&v| crate::fixed::q13(v as f64)));
+    q_out.resize(flat.len(), 0);
+    approx.tanh_slice(q_in, q_out);
+    q_out.iter().map(|&y| crate::fixed::q13_to_f64(y) as f32).collect()
+}
+
 impl Backend for MockBackend {
     fn run(&mut self, key: &ModelKey, bucket: usize, flat: &[f32]) -> Result<Vec<f32>, String> {
-        use crate::approx::TanhApprox;
         let f = self.router.family(key).ok_or_else(|| format!("unknown {key}"))?;
         if flat.len() != bucket * f.sample_in {
             return Err(format!("bad flat len {}", flat.len()));
         }
         match key.model.as_str() {
-            "tanh" => {
-                let eval = |v: f32| -> f32 {
-                    match key.variant.as_str() {
-                        "cr" => self.cr.eval_f64(v as f64) as f32,
-                        "pwl" => self.pwl.eval_f64(v as f64) as f32,
-                        _ => v.tanh(),
-                    }
-                };
-                Ok(flat.iter().map(|&v| eval(v)).collect())
-            }
+            "tanh" => match key.variant.as_str() {
+                "cr" => Ok(run_tanh_slice(&self.cr, &mut self.q_in, &mut self.q_out, flat)),
+                "pwl" => Ok(run_tanh_slice(&self.pwl, &mut self.q_in, &mut self.q_out, flat)),
+                _ => Ok(flat.iter().map(|&v| v.tanh()).collect()),
+            },
             // Other families: deterministic shape-correct stand-in
             // (mean of each sample broadcast over the output width).
             _ => {

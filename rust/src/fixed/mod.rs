@@ -13,7 +13,7 @@ mod rounding;
 
 pub use fx::Fx;
 pub use qformat::QFormat;
-pub use rounding::{round_shift, Rounding};
+pub use rounding::{round_shift, round_shift_half_even_i64, Rounding};
 
 /// The paper's I/O format: 16-bit signed, 2 integer bits, 13 fraction bits.
 pub const Q2_13: QFormat = QFormat::new(2, 13);

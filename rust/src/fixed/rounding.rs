@@ -18,6 +18,19 @@ pub enum Rounding {
     HalfEven,
 }
 
+/// Hot-path round-half-even right shift on i64, no i128 widening — the
+/// shared inner-loop form of `round_shift(_, n, Rounding::HalfEven)` used
+/// by the batch datapaths (CR / PWL / DCTIF `tanh_slice` and the CR
+/// scalar MAC). Requires `n >= 1`; bit-identical to `round_shift` for
+/// any accumulator that fits i64 (pinned by tests below).
+#[inline(always)]
+pub fn round_shift_half_even_i64(raw: i64, n: u32) -> i64 {
+    let floor = raw >> n;
+    let rem = raw - (floor << n);
+    let half = 1i64 << (n - 1);
+    floor + ((rem > half) as i64 | ((rem == half) as i64 & floor & 1))
+}
+
 /// Shift `raw` right by `n` bits with the given rounding mode.
 ///
 /// `n == 0` returns `raw` unchanged. Implemented on i128 internally so
@@ -113,5 +126,86 @@ mod tests {
     #[test]
     fn zero_shift_is_identity() {
         assert_eq!(round_shift(12345, 0, Rounding::HalfEven), 12345);
+    }
+
+    #[test]
+    fn zero_shift_is_identity_for_all_modes_and_signs() {
+        for raw in [-12345i128, -1, 0, 1, 12345, i64::MAX as i128, i64::MIN as i128] {
+            for mode in [Rounding::Truncate, Rounding::HalfUp, Rounding::HalfEven] {
+                assert_eq!(round_shift(raw, 0, mode), raw as i64, "raw={raw} {mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn half_even_negative_raw_ties_exhaustive() {
+        // Negative raws with an exact .5 remainder must tie to the even
+        // quotient, mirroring the positive side. rem is computed from the
+        // arithmetic-shift floor, so e.g. raw=-6, n=2: floor=-2, rem=2
+        // (the half), floor even -> stays -2 (-1.5 -> -2).
+        for n in 1..=8u32 {
+            let half = 1i128 << (n - 1);
+            for q in -40i128..=40 {
+                let raw = (q << n) + half; // exact tie above floor q
+                let want = if q & 1 == 0 { q } else { q + 1 };
+                assert_eq!(
+                    round_shift(raw, n, Rounding::HalfEven),
+                    want as i64,
+                    "raw={raw} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn half_even_negative_raws_match_float_reference() {
+        // Dense sweep over negative raws (the CR datapath's folded
+        // magnitudes are positive, but the MAC accumulator is signed —
+        // the final round sees genuinely negative values near x=0-).
+        use crate::fixed::round_half_even;
+        for raw in -5000i128..0 {
+            for n in 1..=6u32 {
+                let exact = raw as f64 / (1i64 << n) as f64;
+                assert_eq!(
+                    round_shift(raw, n, Rounding::HalfEven),
+                    round_half_even(exact) as i64,
+                    "raw={raw} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn i64_fast_path_matches_round_shift_half_even() {
+        // The hot-path helper must stay bit-identical to the reference
+        // for every sign and shift the datapaths use.
+        for raw in (-200_000i64..200_000).step_by(97) {
+            for n in 1..=40u32 {
+                assert_eq!(
+                    round_shift_half_even_i64(raw, n),
+                    round_shift(raw as i128, n, Rounding::HalfEven),
+                    "raw={raw} n={n}"
+                );
+            }
+        }
+        for &raw in &[i64::MAX >> 2, -(i64::MAX >> 2), (1i64 << 53) + 1, -(1i64 << 53) - 1] {
+            for n in 1..=20u32 {
+                assert_eq!(
+                    round_shift_half_even_i64(raw, n),
+                    round_shift(raw as i128, n, Rounding::HalfEven),
+                    "raw={raw} n={n}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn negative_raw_mode_ordering() {
+        // On negative values: Truncate rounds toward -inf, HalfUp toward
+        // +inf on ties, HalfEven to even — all within one of each other.
+        assert_eq!(round_shift(-7, 1, Rounding::Truncate), -4);
+        assert_eq!(round_shift(-7, 1, Rounding::HalfUp), -3); // -3.5 -> -3
+        assert_eq!(round_shift(-7, 1, Rounding::HalfEven), -4); // -3.5 -> -4 (even)
+        assert_eq!(round_shift(-5, 1, Rounding::HalfEven), -2); // -2.5 -> -2 (even)
     }
 }

@@ -9,7 +9,6 @@
 //! steps.
 
 use super::tensor::Matrix;
-use super::{hw_sigmoid, hw_tanh};
 use crate::approx::TanhApprox;
 use crate::util::rng::Rng;
 
@@ -62,24 +61,29 @@ impl Lstm {
             z
         };
         let (zi, zf, zg, zo) = (gate(0), gate(1), gate(2), gate(3));
-        let sig = |v: f64| match &act {
-            Act::Exact => 1.0 / (1.0 + (-v).exp()),
-            Act::Hw(a) => hw_sigmoid(*a, v),
+        // Whole-gate activation: each of the five activation passes per
+        // step is one batch call through the tanh block (tanh_slice), not
+        // `hidden` scalar dispatches — this is how the hardware consumes
+        // a gate vector, and it amortizes the virtual call per step.
+        let sig_vec = |z: &[f64]| -> Vec<f64> {
+            match &act {
+                Act::Exact => z.iter().map(|&v| 1.0 / (1.0 + (-v).exp())).collect(),
+                Act::Hw(a) => super::hw_sigmoid_slice(*a, z),
+            }
         };
-        let th = |v: f64| match &act {
-            Act::Exact => v.tanh(),
-            Act::Hw(a) => hw_tanh(*a, v),
+        let tanh_vec = |z: &[f64]| -> Vec<f64> {
+            match &act {
+                Act::Exact => z.iter().map(|&v| v.tanh()).collect(),
+                Act::Hw(a) => super::hw_tanh_slice(*a, z),
+            }
         };
+        let (iv, fv, gv, ov) = (sig_vec(&zi), sig_vec(&zf), tanh_vec(&zg), sig_vec(&zo));
         let mut c = vec![0.0; self.hidden];
-        let mut h = vec![0.0; self.hidden];
         for j in 0..self.hidden {
-            let i = sig(zi[j]);
-            let f = sig(zf[j]);
-            let g = th(zg[j]);
-            let o = sig(zo[j]);
-            c[j] = f * st.c[j] + i * g;
-            h[j] = o * th(c[j]);
+            c[j] = fv[j] * st.c[j] + iv[j] * gv[j];
         }
+        let ct = tanh_vec(&c);
+        let h = (0..self.hidden).map(|j| ov[j] * ct[j]).collect();
         LstmState { h, c }
     }
 

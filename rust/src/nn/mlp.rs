@@ -51,7 +51,10 @@ impl Mlp {
 
     /// Accelerator forward pass: Q2.13 weights & activations, hardware
     /// tanh block. The matmul accumulates in high precision (as real
-    /// integer MACs do) and requantizes at the activation boundary.
+    /// integer MACs do) and requantizes at the activation boundary. Each
+    /// hidden layer's activations go through one `tanh_slice` batch call
+    /// — the whole layer is a single pass through the activation unit,
+    /// exactly like the hardware's vectorized datapath.
     pub fn forward_hw(&self, x: &[f64], act: &dyn TanhApprox) -> Vec<f64> {
         let mut h = quantize_vec(x);
         for (i, layer) in self.layers.iter().enumerate() {
@@ -61,10 +64,7 @@ impl Mlp {
                 *zi += bi;
             }
             if i + 1 < self.layers.len() {
-                for zi in z.iter_mut() {
-                    *zi = act.eval_f64(*zi);
-                }
-                h = z;
+                h = super::hw_tanh_slice(act, &z);
             } else {
                 h = quantize_vec(&z);
             }

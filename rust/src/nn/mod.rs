@@ -35,6 +35,22 @@ pub fn hw_sigmoid(approx: &dyn TanhApprox, x: f64) -> f64 {
     (1.0 + t) / 2.0
 }
 
+/// Vector tanh through the Q2.13 hardware interface — one
+/// [`TanhApprox::tanh_slice`] call per activation layer instead of one
+/// virtual dispatch per neuron. Bit-identical to mapping [`hw_tanh`].
+pub fn hw_tanh_slice(approx: &dyn TanhApprox, xs: &[f64]) -> Vec<f64> {
+    approx.tanh_slice_f64(xs)
+}
+
+/// Vector sigmoid via the tanh block — the batch analogue of
+/// [`hw_sigmoid`], bit-identical to mapping it per element.
+pub fn hw_sigmoid_slice(approx: &dyn TanhApprox, xs: &[f64]) -> Vec<f64> {
+    let q: Vec<i32> = xs.iter().map(|&v| crate::fixed::q13(v / 2.0)).collect();
+    let mut out = vec![0i32; q.len()];
+    approx.tanh_slice(&q, &mut out);
+    out.into_iter().map(|t| (1.0 + q13_to_f64(t)) / 2.0).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -55,5 +71,17 @@ mod tests {
         let cr = CatmullRom::paper_default();
         assert!(hw_sigmoid(&cr, 10.0) > 0.999);
         assert!(hw_sigmoid(&cr, -10.0) < 0.001);
+    }
+
+    #[test]
+    fn slice_helpers_bit_identical_to_scalar_wrappers() {
+        let cr = CatmullRom::paper_default();
+        let xs: Vec<f64> = (-50..=50).map(|i| i as f64 * 0.09).collect();
+        let t = hw_tanh_slice(&cr, &xs);
+        let s = hw_sigmoid_slice(&cr, &xs);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(t[i], hw_tanh(&cr, x), "tanh x={x}");
+            assert_eq!(s[i], hw_sigmoid(&cr, x), "sigmoid x={x}");
+        }
     }
 }

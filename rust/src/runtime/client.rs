@@ -1,6 +1,7 @@
 //! PJRT engine: compile HLO-text artifacts once, execute many times.
 
 use super::artifacts::{ArtifactSpec, Manifest};
+use super::xla;
 use anyhow::{bail, Context, Result};
 
 /// A compiled, loaded program plus its shape contract.

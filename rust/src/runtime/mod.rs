@@ -11,6 +11,7 @@
 
 pub mod artifacts;
 pub mod client;
+pub mod xla;
 
 pub use artifacts::{ArtifactSpec, Manifest};
 pub use client::{Engine, LoadedModel};

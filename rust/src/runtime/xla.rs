@@ -1,0 +1,117 @@
+//! Offline stand-in for the `xla` crate surface the runtime uses.
+//!
+//! The build image ships no PJRT plugin and no `xla` crate (anyhow is the
+//! crate's sole dependency), so the engine compiles against this stub and
+//! fails at *runtime* — with a clear, actionable error — the moment a
+//! PJRT code path is exercised. Everything that matters offline goes
+//! through [`crate::coordinator::MockBackend`] instead; the integration
+//! tests and benches already skip the PJRT paths when `artifacts/` is
+//! absent, so the stub is never reached in a default `cargo test`.
+//!
+//! The API mirrors the subset of `xla-rs` that `runtime::client` calls:
+//! construct a client, parse HLO text, compile, execute, read literals.
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    bail!(
+        "PJRT/XLA backend is not available in this offline build ({what}); \
+         serve with the mock backend (`crspline serve --mock`) or install \
+         the real runtime"
+    )
+}
+
+/// Host-side tensor value (stub).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Device buffer handle (stub).
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Compiled executable handle (stub).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+/// Parsed HLO module (stub).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// XLA computation wrapper (stub).
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// PJRT client handle (stub). Not `Send`, matching the real crate's
+/// contract that engines are built inside their worker thread.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_entry_point_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("mock backend"), "{err}");
+        let err = HloModuleProto::from_text_file("x.hlo.txt").unwrap_err();
+        assert!(err.to_string().contains("offline"), "{err}");
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_tuple().is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(PjRtLoadedExecutable.execute::<Literal>(&[]).is_err());
+        assert!(PjRtBuffer.to_literal_sync().is_err());
+    }
+}

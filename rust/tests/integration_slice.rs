@@ -1,0 +1,112 @@
+//! Integration: the batch-evaluation API (`TanhApprox::tanh_slice`) is
+//! bit-identical to the scalar entry point for every override, over the
+//! EXHAUSTIVE 2^16-point Q2.13 domain — the contract that lets the
+//! coordinator, the NN layers and the benches all move to bulk
+//! evaluation without renegotiating any accuracy claim.
+
+use crspline::approx::{self, Boundary, CatmullRom, Dctif, PlainLut, Pwl, Ralut, TanhApprox};
+
+fn full_domain() -> Vec<i32> {
+    (i16::MIN as i32..=i16::MAX as i32).collect()
+}
+
+fn assert_slice_matches_scalar_exhaustive(m: &dyn TanhApprox) {
+    let xs = full_domain();
+    let mut out = vec![0i32; xs.len()];
+    m.tanh_slice(&xs, &mut out);
+    for (&x, &y) in xs.iter().zip(&out) {
+        assert_eq!(y, m.eval_q13(x), "{} x={x}", m.name());
+    }
+}
+
+/// The acceptance-criteria case: CatmullRom's hoisted loop, every input.
+#[test]
+fn catmull_rom_slice_bitexact_exhaustive() {
+    assert_slice_matches_scalar_exhaustive(&CatmullRom::paper_default());
+}
+
+/// Every k the paper sweeps, plus the clamp boundary ablation.
+#[test]
+fn catmull_rom_slice_bitexact_all_configs() {
+    for k in 1..=4 {
+        assert_slice_matches_scalar_exhaustive(&CatmullRom::new(k, Boundary::Extend));
+        assert_slice_matches_scalar_exhaustive(&CatmullRom::new(k, Boundary::Clamp));
+    }
+    // oversampled boundary config from the widened-then-tightened assert
+    assert_slice_matches_scalar_exhaustive(&CatmullRom::new(10, Boundary::Extend));
+}
+
+#[test]
+fn pwl_slice_bitexact_exhaustive() {
+    for k in [1u32, 3, 4] {
+        assert_slice_matches_scalar_exhaustive(&Pwl::new(k));
+    }
+}
+
+#[test]
+fn plain_lut_slice_bitexact_exhaustive() {
+    for k in [2u32, 3, 4] {
+        assert_slice_matches_scalar_exhaustive(&PlainLut::new(k));
+    }
+}
+
+#[test]
+fn ralut_slice_bitexact_exhaustive() {
+    assert_slice_matches_scalar_exhaustive(&Ralut::paper_default());
+    assert_slice_matches_scalar_exhaustive(&Ralut::new(0.002));
+}
+
+#[test]
+fn dctif_slice_bitexact_exhaustive() {
+    assert_slice_matches_scalar_exhaustive(&Dctif::paper_default());
+    assert_slice_matches_scalar_exhaustive(&Dctif::high_precision());
+}
+
+/// Methods relying on the default (scalar-loop) implementation are
+/// trivially identical, but keep them covered so adding an override later
+/// inherits the exhaustive check for free.
+#[test]
+fn default_impl_methods_slice_bitexact_sampled() {
+    let xs: Vec<i32> = (i16::MIN as i32..=i16::MAX as i32).step_by(17).collect();
+    let mut out = vec![0i32; xs.len()];
+    for m in approx::all_methods() {
+        m.tanh_slice(&xs, &mut out);
+        for (&x, &y) in xs.iter().zip(&out) {
+            assert_eq!(y, m.eval_q13(x), "{} x={x}", m.name());
+        }
+    }
+}
+
+/// Inputs are contracted to the i16 range, but out-of-contract i32s must
+/// saturate through `fold` on every path — never index past a table in
+/// the bounds-free batch loops — and slice must still equal scalar.
+#[test]
+fn out_of_contract_inputs_saturate_not_panic() {
+    let xs = [32768, 40000, i32::MAX, -40000, i32::MIN + 1, i32::MIN];
+    let mut out = vec![0i32; xs.len()];
+    for m in approx::all_methods() {
+        m.tanh_slice(&xs, &mut out);
+        for (&x, &y) in xs.iter().zip(&out) {
+            assert_eq!(y, m.eval_q13(x), "{} x={x}", m.name());
+            // saturated region: |tanh| near 1
+            assert!(y.abs() >= 8000, "{} x={x} y={y}", m.name());
+        }
+    }
+}
+
+/// Chunked use (the coordinator's per-bucket pattern): evaluating a
+/// domain in arbitrary chunk sizes equals one whole-domain call.
+#[test]
+fn chunked_slices_equal_one_call() {
+    let cr = CatmullRom::paper_default();
+    let xs = full_domain();
+    let mut whole = vec![0i32; xs.len()];
+    cr.tanh_slice(&xs, &mut whole);
+    for chunk in [1usize, 7, 256, 4096] {
+        let mut out = vec![0i32; xs.len()];
+        for (xc, oc) in xs.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            cr.tanh_slice(xc, oc);
+        }
+        assert_eq!(out, whole, "chunk={chunk}");
+    }
+}
