@@ -6,9 +6,15 @@
 //! cargo bench --bench approx_methods          # full
 //! CRSPLINE_BENCH_FAST=1 cargo bench --bench approx_methods
 //! ```
+//!
+//! Besides the grep-able `bench ...` lines, the run writes every
+//! measurement to `BENCH_approx.json` (override the path with
+//! `CRSPLINE_BENCH_JSON`) so dashboards can diff runs without scraping
+//! stdout.
 
 use crspline::approx::{self, Boundary, CatmullRom, TanhApprox};
 use crspline::bench::{black_box, Bencher};
+use crspline::util::json::{self, Json};
 use crspline::util::rng::Rng;
 
 const N: usize = 4096;
@@ -109,4 +115,33 @@ fn main() {
         }
         black_box(acc);
     });
+
+    // Machine-readable results for run-over-run diffing.
+    let entries: Vec<Json> = b
+        .results
+        .iter()
+        .map(|m| {
+            Json::obj(vec![
+                ("name", Json::str(m.name.clone())),
+                ("mean_ns", Json::num(m.mean_ns())),
+                ("p50_ns", Json::num(m.percentile_ns(0.50))),
+                ("p99_ns", Json::num(m.percentile_ns(0.99))),
+                ("items_per_iter", match m.items_per_iter {
+                    Some(n) => Json::num(n as f64),
+                    None => Json::Null,
+                }),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::str("approx_methods")),
+        ("inputs_per_iter", Json::num(N as f64)),
+        ("results", Json::Arr(entries)),
+    ]);
+    let path = std::env::var("CRSPLINE_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_approx.json".into());
+    match std::fs::write(&path, json::write(&doc) + "\n") {
+        Ok(()) => println!("\nwrote {} measurements to {path}", b.results.len()),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
 }

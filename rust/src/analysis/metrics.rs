@@ -1,7 +1,10 @@
-//! Exhaustive error metrics over the Q2.13 input space.
+//! Exhaustive error metrics over an approximation's fixed-point input
+//! space. The sweep walks the raw domain of `approx.fmt()` — for the
+//! default Q2.13 methods that is the full 16-bit space -32768..=32767,
+//! exactly the paper's evaluation.
 
 use crate::approx::TanhApprox;
-use crate::fixed::q13_to_f64;
+use crate::fixed::QFormat;
 
 /// Error statistics of an approximation against f64 tanh.
 #[derive(Clone, Copy, Debug, Default)]
@@ -9,7 +12,7 @@ pub struct ErrorStats {
     pub rms: f64,
     pub max: f64,
     pub mean_abs: f64,
-    /// Input (raw Q2.13) where the max error occurs.
+    /// Raw input (in the swept format) where the max error occurs.
     pub max_at: i32,
 }
 
@@ -22,10 +25,21 @@ impl ErrorStats {
     pub fn gain_max(&self, other: &ErrorStats) -> f64 {
         other.max / self.max
     }
+
+    /// Max error in units of the format's LSB — the format-independent
+    /// way to compare a Q2.7 method against a Q2.21 one.
+    pub fn max_ulps(&self, fmt: QFormat) -> f64 {
+        self.max / fmt.ulp()
+    }
+    /// RMS error in units of the format's LSB.
+    pub fn rms_ulps(&self, fmt: QFormat) -> f64 {
+        self.rms / fmt.ulp()
+    }
 }
 
-/// Sweep the full 16-bit input space (-32768..=32767) — exactly the
-/// paper's evaluation — and collect error statistics.
+/// Sweep the approximation's full raw input space — the paper's
+/// evaluation (the entire 16-bit domain at Q2.13) — and collect error
+/// statistics.
 pub fn sweep_full(approx: &dyn TanhApprox) -> ErrorStats {
     sweep_stride(approx, 1)
 }
@@ -33,23 +47,24 @@ pub fn sweep_full(approx: &dyn TanhApprox) -> ErrorStats {
 /// Strided sweep for quick checks (stride 1 = exhaustive).
 pub fn sweep_stride(approx: &dyn TanhApprox, stride: usize) -> ErrorStats {
     assert!(stride >= 1);
+    let fmt = approx.fmt();
     let mut sq_sum = 0.0f64;
     let mut abs_sum = 0.0f64;
     let mut max = 0.0f64;
     let mut max_at = 0i32;
     let mut n = 0u64;
-    let mut x = i16::MIN as i32;
-    while x <= i16::MAX as i32 {
-        let exact = q13_to_f64(x).tanh();
-        let err = q13_to_f64(approx.eval_q13(x)) - exact;
+    let mut x = fmt.min_raw();
+    while x <= fmt.max_raw() {
+        let exact = fmt.to_f64(x).tanh();
+        let err = fmt.to_f64(approx.eval_raw(x)) - exact;
         sq_sum += err * err;
         abs_sum += err.abs();
         if err.abs() > max {
             max = err.abs();
-            max_at = x;
+            max_at = x as i32;
         }
         n += 1;
-        x += stride as i32;
+        x += stride as i64;
     }
     ErrorStats {
         rms: (sq_sum / n as f64).sqrt(),
@@ -59,9 +74,11 @@ pub fn sweep_stride(approx: &dyn TanhApprox, stride: usize) -> ErrorStats {
     }
 }
 
-/// Error of one point (helper for error-profile figures).
+/// Error of one point (helper for error-profile figures), in the
+/// approximation's own format.
 pub fn point_error(approx: &dyn TanhApprox, x: i32) -> f64 {
-    q13_to_f64(approx.eval_q13(x)) - q13_to_f64(x).tanh()
+    let fmt = approx.fmt();
+    fmt.to_f64(approx.eval_raw(x as i64)) - fmt.to_f64(x as i64).tanh()
 }
 
 #[cfg(test)]
@@ -100,5 +117,23 @@ mod tests {
         let b = ErrorStats { rms: 0.01, max: 0.01, mean_abs: 0.005, max_at: 0 };
         assert!((a.gain_rms(&b) - 10.0).abs() < 1e-12);
         assert!((a.gain_max(&b) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ulp_metrics_scale_by_format_lsb() {
+        let s = ErrorStats { rms: 0.001, max: 0.002, mean_abs: 0.0005, max_at: 0 };
+        let q = crate::fixed::Q2_13;
+        assert!((s.max_ulps(q) - 0.002 * 8192.0).abs() < 1e-9);
+        assert!((s.rms_ulps(q) - 0.001 * 8192.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sweep_follows_the_methods_format() {
+        // A Q2.10 method sweeps an 11-bit domain: coarser quantization
+        // floor than the same method at Q2.13, and max_at stays in range.
+        let fmt = crate::fixed::QFormat::new(2, 10);
+        let s = sweep_full(&CatmullRom::new_fmt(3, crate::approx::Boundary::Extend, fmt));
+        assert!(s.max < 8.0 * fmt.ulp(), "max={}", s.max);
+        assert!((s.max_at as i64) >= fmt.min_raw() && (s.max_at as i64) <= fmt.max_raw());
     }
 }

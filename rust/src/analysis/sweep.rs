@@ -1,7 +1,9 @@
-//! Configuration sweeps regenerating Tables I and II.
+//! Configuration sweeps regenerating Tables I and II, plus the
+//! wordlength (QFormat) sweep the format-parameterized pipeline adds.
 
-use super::metrics::{sweep_full, ErrorStats};
+use super::metrics::{sweep_full, sweep_stride, ErrorStats};
 use crate::approx::{CatmullRom, Boundary, Pwl};
+use crate::fixed::QFormat;
 
 /// One row of Table I/II: a (sampling period, LUT depth) configuration.
 #[derive(Clone, Copy, Debug)]
@@ -56,6 +58,61 @@ pub fn run_sweep() -> Vec<SweepRow> {
         .collect()
 }
 
+/// One row of the wordlength sweep: the paper's k=3 PWL-vs-CR comparison
+/// re-run at a different number format.
+#[derive(Clone, Copy, Debug)]
+pub struct WordlengthRow {
+    pub fmt: QFormat,
+    pub k: u32,
+    pub lut_depth: usize,
+    pub pwl: ErrorStats,
+    pub cr: ErrorStats,
+}
+
+impl WordlengthRow {
+    /// CR max error in LSBs of this row's format.
+    pub fn cr_max_ulps(&self) -> f64 {
+        self.cr.max_ulps(self.fmt)
+    }
+    /// CR RMS error in LSBs of this row's format.
+    pub fn cr_rms_ulps(&self) -> f64 {
+        self.cr.rms_ulps(self.fmt)
+    }
+    pub fn gain_rms(&self) -> f64 {
+        self.cr.gain_rms(&self.pwl)
+    }
+    pub fn gain_max(&self) -> f64 {
+        self.cr.gain_max(&self.pwl)
+    }
+}
+
+/// The new axis the format-parameterized pipeline opens: sweep *word
+/// length* at fixed sampling period. Each format gets its own LUTs,
+/// kernel plans, and raw domain; wide formats are sub-sampled to a
+/// 16-bit-equivalent grid so the sweep stays fast while remaining
+/// exhaustive for widths up to 16.
+pub fn run_wordlength_sweep(formats: &[QFormat], k: u32) -> Vec<WordlengthRow> {
+    formats
+        .iter()
+        .map(|&fmt| {
+            assert!(
+                fmt.frac_bits > k && fmt.frac_bits - k >= 3,
+                "{fmt} too narrow for k={k}"
+            );
+            let pwl = Pwl::new_fmt(k, fmt);
+            let cr = CatmullRom::new_fmt(k, Boundary::Extend, fmt);
+            let stride = (((1u64 << fmt.width()) >> 16).max(1)) as usize;
+            WordlengthRow {
+                fmt,
+                k,
+                lut_depth: 1 << (k + fmt.int_bits),
+                pwl: sweep_stride(&pwl, stride),
+                cr: sweep_stride(&cr, stride),
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,5 +149,34 @@ mod tests {
             assert!(row.cr.rms < row.pwl.rms);
             assert!(row.cr.max < row.pwl.max);
         }
+    }
+
+    #[test]
+    fn wordlength_sweep_covers_three_formats() {
+        let fmts =
+            [QFormat::new(2, 7), QFormat::new(2, 13), QFormat::new(2, 21)];
+        let rows = run_wordlength_sweep(&fmts, 3);
+        assert_eq!(rows.len(), 3);
+        // Absolute error shrinks as fractional bits grow (the quantization
+        // floor dominates once interpolation error is below one LSB).
+        assert!(rows[0].cr.max > rows[1].cr.max);
+        assert!(rows[1].cr.max > rows[2].cr.max);
+        // CR keeps beating PWL on every wordlength, not just Q2.13.
+        for row in &rows {
+            assert!(row.cr.rms < row.pwl.rms, "{}", row.fmt);
+            assert!(row.cr_max_ulps() > 0.0 && row.cr_rms_ulps() > 0.0);
+        }
+    }
+
+    #[test]
+    fn wordlength_row_at_q2_13_matches_table_sweep() {
+        // The Q2.13 row of the wordlength sweep is exactly the k=3 row of
+        // the paper sweep: stride 1, same builders, same stats.
+        let wl = &run_wordlength_sweep(&[QFormat::new(2, 13)], 3)[0];
+        let k3 = &run_sweep()[2];
+        assert_eq!(wl.lut_depth, k3.lut_depth);
+        assert_eq!(wl.cr.rms, k3.cr.rms);
+        assert_eq!(wl.cr.max, k3.cr.max);
+        assert_eq!(wl.pwl.rms, k3.pwl.rms);
     }
 }

@@ -1,12 +1,13 @@
 //! Catmull-Rom spline tanh — the paper's contribution (§III, §IV).
 //!
-//! The input is a 16-bit signed Q2.13 word. For x ≥ 0 the top bits select
-//! a LUT segment and the remaining `tbits = 13 - k` LSBs are the
-//! interpolation factor t (the paper: "msbs are used for addressing the
-//! LUT, the remaining bits (lsbs) can directly be used as t"). Negative
-//! inputs are folded through the odd symmetry of tanh, which halves the
-//! LUT ("the size of control points LUT can be reduced by storing them
-//! only for the positive range").
+//! The input is a signed fixed-point word (the paper's Q2.13 by default).
+//! For x ≥ 0 the top bits select a LUT segment and the remaining
+//! `tbits = frac_bits - k` LSBs are the interpolation factor t (the
+//! paper: "msbs are used for addressing the LUT, the remaining bits
+//! (lsbs) can directly be used as t"). Negative inputs are folded through
+//! the odd symmetry of tanh, which halves the LUT ("the size of control
+//! points LUT can be reduced by storing them only for the positive
+//! range").
 //!
 //! The spline (paper eq. 3) is evaluated as a 4-tap dot product
 //!
@@ -15,19 +16,21 @@
 //! b0 = -t³+2t²-t   b1 = 3t³-5t²+2   b2 = -3t³+4t²+t   b3 = t³-t²
 //! ```
 //!
-//! entirely in integer arithmetic: t is a `tbits`-bit fraction, t²/t³ are
-//! formed exactly, the basis is assembled at 3·tbits fraction bits, the
-//! MAC accumulates at 13 + 3·tbits fraction bits, and a single final
-//! round-half-even produces the Q2.13 output. Because every intermediate
-//! is exact, this integer datapath computes the same real number as the
+//! entirely in integer arithmetic, executed by the shared
+//! [`KernelPlan`] engine: t is a `tbits`-bit fraction, t²/t³ are formed
+//! exactly, the basis is assembled at 3·tbits fraction bits, the MAC
+//! accumulates at `frac_bits + 3·tbits` fraction bits, and a single final
+//! round-half-even produces the output. Because every intermediate is
+//! exact, this integer datapath computes the same real number as the
 //! float model that reproduces the paper's Tables I/II to the digit
 //! (verified exhaustively in `rust/tests/integration_tables.rs`).
 
 use super::{tanh_ref, TanhApprox};
-use crate::fixed::{round_shift, round_shift_half_even_i64, Rounding};
+use crate::fixed::kernel::{self, KernelPlan};
+use crate::fixed::{round_shift, QFormat, Rounding, Q2_13};
 use crate::hw::area::Resources;
 
-/// How control points past x = 4 are provided.
+/// How control points past the top of the domain are provided.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Boundary {
     /// Store two guard entries tanh(4+h), tanh(4+2h) (normative — matches
@@ -43,15 +46,18 @@ pub enum Boundary {
 pub struct CatmullRom {
     /// Sampling period h = 2^-k.
     k: u32,
-    /// Interpolation-factor width: 13 - k bits.
+    /// Interpolation-factor width: frac_bits - k bits.
     tbits: u32,
-    /// Positive-side control points, Q2.13 raw.
+    /// I/O format (Q2.13 unless constructed via [`CatmullRom::new_fmt`]).
+    fmt: QFormat,
+    /// Positive-side control points, raw in `fmt`.
     lut: Vec<i32>,
-    /// Hot-path table: `lut_ext[i] = P(i - 1)` with the odd extension and
-    /// boundary handling materialized, so the four taps of segment `s`
-    /// are the contiguous reads `lut_ext[s .. s+4]` — no sign branch, no
-    /// clamp in the inner loop (perf pass; see EXPERIMENTS.md §Perf).
-    lut_ext: Vec<i64>,
+    /// The shared-engine execution plan. Its tap table is
+    /// `taps[i] = P(i - 1)` with the odd extension and boundary handling
+    /// materialized, so the four taps of segment `s` are the contiguous
+    /// reads `taps[s .. s+4]` — no sign branch, no clamp in the inner
+    /// loop (perf pass; see EXPERIMENTS.md §Perf).
+    plan: KernelPlan,
     boundary: Boundary,
     /// Optional basis-bus truncation (fraction bits of b after rounding).
     /// `None` = full precision (3·tbits). Smaller values shrink the MAC
@@ -60,19 +66,33 @@ pub struct CatmullRom {
 }
 
 impl CatmullRom {
-    /// Construct for sampling period h = 2^-k (k in 1..=4 covers the
-    /// paper's Table I/II configurations; up to 10 leaves a meaningful
+    /// Construct for sampling period h = 2^-k at Q2.13 (k in 1..=4 covers
+    /// the paper's Table I/II configurations; up to 10 leaves a meaningful
     /// interpolation factor — tbits = 13 − k ≥ 3 — for oversampled
     /// ablations. Beyond that t degenerates toward zero width and the
     /// docs' Q2.13 index/t split stops making sense.)
     pub fn new(k: u32, boundary: Boundary) -> Self {
         assert!((1..=10).contains(&k), "k={k} out of range (supported: 1..=10)");
+        Self::new_fmt(k, boundary, Q2_13)
+    }
+
+    /// Format-parameterized constructor: same datapath, arbitrary signed
+    /// fixed-point I/O format. Bit-identical to [`CatmullRom::new`] at
+    /// Q2.13. The format must keep an interpolation factor of at least
+    /// 3 bits and fit the engine's i32 raw I/O.
+    pub fn new_fmt(k: u32, boundary: Boundary, fmt: QFormat) -> Self {
+        assert!(fmt.width() <= 31, "{fmt} raw values must fit i32");
+        assert!(
+            k >= 1 && fmt.frac_bits > k && fmt.frac_bits - k >= 3,
+            "k={k} out of range for {fmt} (needs tbits = frac_bits - k >= 3)"
+        );
+        let tbits = fmt.frac_bits - k;
         let guard = match boundary {
             Boundary::Extend => 2,
-            Boundary::Clamp => 1, // include tanh(4) itself, clamp beyond
+            Boundary::Clamp => 1, // include the top sample itself, clamp beyond
         };
-        let lut = tanh_ref::build_lut(k, guard);
-        let depth = 1usize << (k + 2);
+        let lut = tanh_ref::build_lut_fmt(k, guard, fmt);
+        let depth = 1usize << (k + fmt.int_bits);
         // Materialize P(-1)..P(depth+1) with the boundary policy applied.
         // Under Extend the guard rows make every positive read in-table by
         // construction — extend_lut asserts instead of clamping so a
@@ -80,11 +100,13 @@ impl CatmullRom {
         // flattening the top segment. Clamp keeps the paper's literal
         // "reads past tanh(4) return tanh(4)" semantics.
         let lut_ext = tanh_ref::extend_lut(&lut, depth, matches!(boundary, Boundary::Clamp));
+        let plan = KernelPlan::catmull_rom(fmt, tbits, lut_ext);
         Self {
             k,
-            tbits: 13 - k,
+            tbits,
+            fmt,
             lut,
-            lut_ext,
+            plan,
             boundary,
             basis_frac: None,
         }
@@ -107,9 +129,10 @@ impl CatmullRom {
         self.k
     }
 
-    /// LUT depth covering [0,4) — the paper's "LUT Depth" column.
+    /// LUT depth covering the positive domain — the paper's "LUT Depth"
+    /// column (32 for the Q2.13 paper default).
     pub fn depth(&self) -> usize {
-        1 << (self.k + 2)
+        1 << (self.k + self.fmt.int_bits)
     }
 
     /// Total stored entries including boundary guards.
@@ -119,6 +142,11 @@ impl CatmullRom {
 
     pub fn boundary(&self) -> Boundary {
         self.boundary
+    }
+
+    /// The executed kernel plan (shared fixed-point engine).
+    pub fn plan(&self) -> &KernelPlan {
+        &self.plan
     }
 
     /// Control point P(idx) with odd extension below zero and the
@@ -133,52 +161,25 @@ impl CatmullRom {
         }
     }
 
-    /// The four integer basis values at `tu` (a `tbits`-bit fraction),
-    /// expressed with `3·tbits` fraction bits. Exact.
+    /// Positive-side ablation evaluation: narrow the basis bus with
+    /// round-half-up (the cheap hardware rounder) before the MAC.
     #[inline]
-    fn basis(&self, tu: i64) -> [i64; 4] {
-        let tb = self.tbits;
-        let t1 = tu << (2 * tb); // t  at 3·tbits frac
-        let t2 = (tu * tu) << tb; // t² at 3·tbits frac
-        let t3 = tu * tu * tu; // t³ at 3·tbits frac
-        let one = 1i64 << (3 * tb);
-        [
-            -t3 + 2 * t2 - t1,
-            3 * t3 - 5 * t2 + 2 * one,
-            -3 * t3 + 4 * t2 + t1,
-            t3 - t2,
-        ]
-    }
-
-    /// Positive-side evaluation: `u` is the magnitude in [0, 32767].
-    #[inline]
-    fn eval_pos(&self, u: i64) -> i32 {
+    fn eval_pos_ablation(&self, u: i64, f: u32) -> i64 {
         let tb = self.tbits;
         let seg = (u >> tb) as usize;
         let tu = u & ((1i64 << tb) - 1);
-        if let Some(f) = self.basis_frac {
-            // Ablation path: narrow the basis bus with round-half-up (the
-            // cheap hardware rounder) before the MAC.
-            let mut b = self.basis(tu);
-            for bi in b.iter_mut() {
-                *bi = round_shift(*bi as i128, 3 * tb - f, Rounding::HalfUp);
-            }
-            let taps = &self.lut_ext[seg..seg + 4];
-            let acc: i128 = (taps[0] * b[0]) as i128
-                + (taps[1] * b[1]) as i128
-                + (taps[2] * b[2]) as i128
-                + (taps[3] * b[3]) as i128;
-            let y = round_shift(acc, f + 1, Rounding::HalfEven);
-            return y.clamp(-8192, 8192) as i32;
+        let mut b = kernel::cr_basis(tu, tb);
+        for bi in b.iter_mut() {
+            *bi = round_shift(*bi as i128, 3 * tb - f, Rounding::HalfUp);
         }
-        // Hot path (full precision): contiguous taps, i64-only MAC, and an
-        // i64 round-half-even. The accumulator needs 13 + 3·tb + 3 bits
-        // (≤ 52 for k=1), so i64 is exact — no i128 on the hot path.
-        let b = self.basis(tu);
-        let taps = &self.lut_ext[seg..seg + 4];
-        let acc: i64 = taps[0] * b[0] + taps[1] * b[1] + taps[2] * b[2] + taps[3] * b[3];
-        let y = round_shift_half_even_i64(acc, 3 * tb + 1);
-        y.clamp(-8192, 8192) as i32
+        let taps = &self.plan.taps()[seg..seg + 4];
+        let acc: i128 = taps[0] as i128 * b[0] as i128
+            + taps[1] as i128 * b[1] as i128
+            + taps[2] as i128 * b[2] as i128
+            + taps[3] as i128 * b[3] as i128;
+        let y = round_shift(acc, f + 1, Rounding::HalfEven);
+        let s = self.fmt.scale();
+        y.clamp(-s, s)
     }
 
     /// Batch evaluation into a caller-provided buffer — kept as a named
@@ -192,7 +193,7 @@ impl CatmullRom {
     /// validation model): quantized LUT, real-arithmetic basis, single
     /// final round. Used by tests to prove the integer datapath is exact.
     pub fn eval_model(&self, x: i32) -> i32 {
-        let (neg, u) = fold(x);
+        let (neg, u) = kernel::fold_mag(x as i64, self.fmt.max_raw());
         let tb = self.tbits;
         let seg = (u >> tb) as i64;
         let t = (u & ((1i64 << tb) - 1)) as f64 / (1i64 << tb) as f64;
@@ -205,7 +206,8 @@ impl CatmullRom {
         ];
         let acc: f64 = (0..4).map(|i| self.p(seg - 1 + i as i64) as f64 * b[i]).sum();
         let y = crate::fixed::round_half_even(acc * 0.5) as i64;
-        let y = y.clamp(-8192, 8192) as i32;
+        let s = self.fmt.scale();
+        let y = y.clamp(-s, s) as i32;
         if neg {
             -y
         } else {
@@ -221,13 +223,10 @@ impl CatmullRom {
 /// to the i16 range (see `TanhApprox::eval_q13`), and clamping here keeps
 /// every out-of-contract i32 on the saturated-tanh path instead of
 /// letting it index past the tables in the bounds-free batch loops.
+/// The format-generic form is [`kernel::fold_mag`].
 #[inline]
 pub fn fold(x: i32) -> (bool, i64) {
-    if x < 0 {
-        (true, (-(x as i64)).min(32767))
-    } else {
-        (false, (x as i64).min(32767))
-    }
+    kernel::fold_mag(x as i64, 32767)
 }
 
 impl TanhApprox for CatmullRom {
@@ -236,73 +235,70 @@ impl TanhApprox for CatmullRom {
             Boundary::Extend => "",
             Boundary::Clamp => ",clamp",
         };
-        match self.basis_frac {
+        let base = match self.basis_frac {
             Some(f) => format!("cr-k{}{b},b{}", self.k, f),
             None => format!("cr-k{}{b}", self.k),
+        };
+        if self.fmt == Q2_13 {
+            base
+        } else {
+            format!("{base}@{}", self.fmt)
         }
+    }
+
+    fn fmt(&self) -> QFormat {
+        self.fmt
     }
 
     fn eval_q13(&self, x: i32) -> i32 {
-        let (neg, u) = fold(x);
-        let y = self.eval_pos(u);
-        if neg {
-            -y
+        self.eval_raw(x as i64) as i32
+    }
+
+    fn eval_raw(&self, x: i64) -> i64 {
+        if let Some(f) = self.basis_frac {
+            let (neg, u) = kernel::fold_mag(x, self.fmt.max_raw());
+            let y = self.eval_pos_ablation(u, f);
+            if neg {
+                -y
+            } else {
+                y
+            }
         } else {
-            y
+            self.plan.eval(x)
         }
     }
 
-    /// Batch hot path: every loop-invariant (tbits, masks, the rounding
-    /// constants and the `lut_ext` base) is hoisted; the inner loop is
-    /// fold → contiguous 4-tap read → i64 MAC → inline round-half-even,
-    /// with no per-element bounds or sign re-derivation. Bit-identical to
-    /// `eval_q13` by construction (same arithmetic, same order).
+    /// Batch hot path: the shared engine's CR loop — every loop-invariant
+    /// hoisted, fold → contiguous 4-tap read → i64 MAC → inline
+    /// round-half-even, no per-element bounds or sign re-derivation.
+    /// Bit-identical to the scalar entry point by construction.
     fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
-        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
         if self.basis_frac.is_some() {
             // Ablation path stays scalar: its i128 rounding sequence is
             // not worth duplicating for a config only used in sweeps.
+            assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
             for (o, &x) in out.iter_mut().zip(xs) {
-                *o = self.eval_q13(x);
+                *o = self.eval_raw(x as i64) as i32;
             }
             return;
         }
-        let tb = self.tbits;
-        let tmask = (1i64 << tb) - 1;
-        let one = 1i64 << (3 * tb);
-        let n = 3 * tb + 1;
-        // `lut_ext` stores P(-1)..=P(depth+1); the maximum folded segment
-        // index is depth−1, so `seg + 4 <= lut_ext.len()` always holds and
-        // the slice below never re-checks bounds per tap.
-        let lut_ext = &self.lut_ext[..];
-        for (o, &x) in out.iter_mut().zip(xs) {
-            let (neg, u) = fold(x);
-            let seg = (u >> tb) as usize;
-            let tu = u & tmask;
-            let t1 = tu << (2 * tb);
-            let t2 = (tu * tu) << tb;
-            let t3 = tu * tu * tu;
-            let b0 = -t3 + 2 * t2 - t1;
-            let b1 = 3 * t3 - 5 * t2 + 2 * one;
-            let b2 = -3 * t3 + 4 * t2 + t1;
-            let b3 = t3 - t2;
-            let taps = &lut_ext[seg..seg + 4];
-            let acc = taps[0] * b0 + taps[1] * b1 + taps[2] * b2 + taps[3] * b3;
-            let y = round_shift_half_even_i64(acc, n).clamp(-8192, 8192) as i32;
-            *o = if neg { -y } else { y };
-        }
+        self.plan.eval_slice(xs, out);
     }
 
     fn resources(&self) -> Option<Resources> {
-        // The synthesized datapath carries a 16-fraction-bit basis bus
-        // (full precision in the *numerics* model; 16 bits in the *area*
-        // model — measured to shift the error tables by at most one unit
-        // in the 6th decimal, see EXPERIMENTS.md §T3). Explicit
-        // `with_basis_frac` configurations are priced as configured.
-        Some(crate::hw::area::catmull_rom_resources(
+        // The synthesized datapath carries a basis bus of
+        // `frac_bits + 3` fraction bits (full precision in the *numerics*
+        // model; 16 bits at Q2.13 in the *area* model — measured to shift
+        // the error tables by at most one unit in the 6th decimal, see
+        // EXPERIMENTS.md §T3). Explicit `with_basis_frac` configurations
+        // are priced as configured.
+        Some(crate::hw::area::catmull_rom_resources_fmt(
             self.stored_entries(),
             self.tbits,
-            self.basis_frac.unwrap_or(16).min(3 * self.tbits),
+            self.basis_frac
+                .unwrap_or(self.fmt.frac_bits + 3)
+                .min(3 * self.tbits),
+            self.fmt,
         ))
     }
 }
@@ -350,10 +346,43 @@ mod tests {
     }
 
     #[test]
+    fn integer_path_equals_float_model_other_formats() {
+        for fmt in [QFormat::new(2, 7), QFormat::new(2, 10), QFormat::new(2, 21)] {
+            let cr = CatmullRom::new_fmt(3, Boundary::Extend, fmt);
+            assert_eq!(cr.fmt(), fmt);
+            let span = (fmt.max_raw() - fmt.min_raw()) as usize;
+            let stride = (span / 4096).max(1);
+            let mut x = fmt.min_raw();
+            while x <= fmt.max_raw() {
+                assert_eq!(cr.eval_raw(x), cr.eval_model(x as i32) as i64, "{fmt} x={x}");
+                x += stride as i64;
+            }
+        }
+    }
+
+    #[test]
+    fn wider_format_is_more_accurate() {
+        let narrow = CatmullRom::new_fmt(3, Boundary::Extend, QFormat::new(2, 7));
+        let wide = CatmullRom::new_fmt(3, Boundary::Extend, QFormat::new(2, 21));
+        let max_err = |cr: &CatmullRom| {
+            let fmt = cr.fmt();
+            let mut max: f64 = 0.0;
+            let stride = ((fmt.max_raw() / 2048) as usize).max(1);
+            let mut x = fmt.min_raw();
+            while x <= fmt.max_raw() {
+                max = max.max((fmt.to_f64(cr.eval_raw(x)) - fmt.to_f64(x).tanh()).abs());
+                x += stride as i64;
+            }
+            max
+        };
+        let (en, ew) = (max_err(&narrow), max_err(&wide));
+        assert!(ew < en / 10.0, "narrow={en} wide={ew}");
+    }
+
+    #[test]
     fn max_error_matches_paper_headline() {
-        // Table II, h=0.125: max error 0.000122... wait, that's h=0.0625.
-        // h=0.125 row: 0.000152. Check the bound (exact digits verified in
-        // the integration test).
+        // Table II, h=0.125: max error 0.000152. Check the bound (exact
+        // digits verified in the integration test).
         let cr = CatmullRom::paper_default();
         let mut max_err: f64 = 0.0;
         for x in i16::MIN as i32..=i16::MAX as i32 {
@@ -445,12 +474,19 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "out of range")]
+    fn degenerate_format_rejected() {
+        // Q2.7 with k=5 leaves tbits = 2 < 3.
+        let _ = CatmullRom::new_fmt(5, Boundary::Extend, QFormat::new(2, 7));
+    }
+
+    #[test]
     fn extend_guard_rows_cover_all_reads_for_every_k() {
-        // Construction itself exercises the p_at assert for every index
-        // the datapath can reach; a missing guard row would panic here.
+        // Construction itself exercises the extend_lut assert for every
+        // index the datapath can reach; a missing guard row would panic.
         for k in 1..=10 {
             let cr = CatmullRom::new(k, Boundary::Extend);
-            assert_eq!(cr.lut_ext.len(), cr.depth() + 3, "k={k}");
+            assert_eq!(cr.plan.taps().len(), cr.depth() + 3, "k={k}");
             assert_eq!(cr.stored_entries(), cr.depth() + 2, "k={k}");
         }
     }
@@ -470,5 +506,14 @@ mod tests {
                 assert_eq!(y, cr.eval_q13(x), "{} x={x}", cr.name());
             }
         }
+    }
+
+    #[test]
+    fn name_carries_format_only_when_non_default() {
+        assert_eq!(CatmullRom::paper_default().name(), "cr-k3");
+        assert_eq!(
+            CatmullRom::new_fmt(3, Boundary::Extend, QFormat::new(2, 21)).name(),
+            "cr-k3@Q2.21"
+        );
     }
 }

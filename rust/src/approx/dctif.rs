@@ -13,11 +13,11 @@
 //! orthonormal DCT-II expansion is p(n) = Σ_k c(k)·φ_k(n); evaluating the
 //! basis at the continuous position x = 1 + α gives the interpolation
 //! weights W_n(α) = Σ_k φ_k(x)·φ_k(n). The weights are quantized to
-//! `cbits` and the fractional position to `abits`.
+//! `cbits` and the fractional position to `abits`; evaluation is a
+//! uniform-select / per-row-MAC plan on the shared [`KernelPlan`] engine.
 
-use super::catmull_rom::fold;
 use super::{tanh_ref, TanhApprox};
-use crate::fixed::{round_shift, round_shift_half_even_i64, Rounding};
+use crate::fixed::{KernelPlan, QFormat, Q2_13};
 use crate::hw::area::Resources;
 
 /// DCT interpolation filter approximator.
@@ -29,15 +29,10 @@ pub struct Dctif {
     abits: u32,
     /// Coefficient precision in bits (signed, `cbits - 2` fraction bits).
     cbits: u32,
-    tbits: u32,
-    /// Sample LUT (positive side + guards), Q2.13.
+    fmt: QFormat,
+    /// Sample LUT (positive side + guards), raw in `fmt`.
     lut: Vec<i32>,
-    /// Hot-path table: `lut_ext[i] = P(i - 1)` with the odd extension
-    /// materialized (same layout as `CatmullRom::lut_ext`), so the four
-    /// taps of segment `s` are the contiguous reads `lut_ext[s .. s+4]`.
-    lut_ext: Vec<i64>,
-    /// Coefficient table: 2^abits rows of 4 signed coefficients.
-    coeffs: Vec<[i32; 4]>,
+    plan: KernelPlan,
 }
 
 /// Ideal (unquantized) 4-tap DCTIF weights at fractional offset alpha.
@@ -62,33 +57,45 @@ pub fn dctif_weights(alpha: f64) -> [f64; 4] {
 
 impl Dctif {
     pub fn new(k: u32, abits: u32, cbits: u32) -> Self {
-        assert!((1..=6).contains(&k) && abits <= 13 - k && (4..=16).contains(&cbits));
-        let tbits = 13 - k;
+        Self::new_fmt(k, abits, cbits, Q2_13)
+    }
+
+    /// Format-parameterized constructor; bit-identical to [`Dctif::new`]
+    /// at Q2.13.
+    pub fn new_fmt(k: u32, abits: u32, cbits: u32, fmt: QFormat) -> Self {
+        assert!(fmt.width() <= 31, "{fmt} raw values must fit i32");
+        assert!(
+            (1..=6).contains(&k) && fmt.frac_bits > k && abits <= fmt.frac_bits - k,
+            "k={k}/abits={abits} out of range for {fmt}"
+        );
+        assert!((4..=16).contains(&cbits));
+        let tbits = fmt.frac_bits - k;
         let cfrac = cbits - 2; // weights are in (-0.2, 1.1): 2 int bits suffice
         let scale = (1i64 << cfrac) as f64;
-        let coeffs = (0..(1usize << abits))
+        let rows: Vec<[i64; 4]> = (0..(1usize << abits))
             .map(|i| {
                 let alpha = (i as f64 + 0.5) / (1u64 << abits) as f64;
                 let w = dctif_weights(alpha);
-                let mut q = [0i32; 4];
+                let mut q = [0i64; 4];
                 for (dst, &src) in q.iter_mut().zip(w.iter()) {
-                    *dst = crate::fixed::round_half_even(src * scale) as i32;
+                    *dst = crate::fixed::round_half_even(src * scale);
                 }
                 // Sum-preserving quantization (the published filters do
                 // this too): nudge the largest tap so Σw = 1 exactly,
                 // which kills the DC error in the flat regions.
-                let sum: i32 = q.iter().sum();
-                let target = 1i32 << cfrac;
+                let sum: i64 = q.iter().sum();
+                let target = 1i64 << cfrac;
                 let imax = (0..4).max_by_key(|&j| q[j]).unwrap();
                 q[imax] += target - sum;
                 q
             })
             .collect();
-        let lut = tanh_ref::build_lut(k, 2);
+        let lut = tanh_ref::build_lut_fmt(k, 2, fmt);
         // Two guard rows cover every read — assert (not clamp) like the
         // CR Extend path, so a broken table build fails at construction.
-        let lut_ext = tanh_ref::extend_lut(&lut, 1usize << (k + 2), false);
-        Self { k, abits, cbits, tbits, lut, lut_ext, coeffs }
+        let lut_ext = tanh_ref::extend_lut(&lut, 1usize << (k + fmt.int_bits), false);
+        let plan = KernelPlan::rows(fmt, tbits, abits, cfrac, rows, lut_ext);
+        Self { k, abits, cbits, fmt, lut, plan }
     }
 
     /// The 11-bit-precision configuration of Table III (22.17 Kbit memory):
@@ -104,74 +111,41 @@ impl Dctif {
     }
 
     /// Memory the published architecture keeps in macros: coefficient
-    /// table plus the sample memory.
+    /// table plus the sample memory (stored words are non-negative and
+    /// bounded by the format's 1.0, so `frac_bits + 1` bits each).
     pub fn memory_bits(&self) -> u64 {
         let coeff = (1u64 << self.abits) * 4 * self.cbits as u64;
-        let samples = self.lut.len() as u64 * 14;
+        let samples = self.lut.len() as u64 * (self.fmt.frac_bits + 1) as u64;
         coeff + samples
-    }
-
-    fn p(&self, idx: i64) -> i64 {
-        if idx < 0 {
-            -(self.lut[(-idx) as usize] as i64)
-        } else {
-            self.lut[(idx as usize).min(self.lut.len() - 1)] as i64
-        }
     }
 }
 
 impl TanhApprox for Dctif {
     fn name(&self) -> String {
-        format!("dctif-k{}a{}c{}", self.k, self.abits, self.cbits)
+        if self.fmt == Q2_13 {
+            format!("dctif-k{}a{}c{}", self.k, self.abits, self.cbits)
+        } else {
+            format!("dctif-k{}a{}c{}@{}", self.k, self.abits, self.cbits, self.fmt)
+        }
+    }
+
+    fn fmt(&self) -> QFormat {
+        self.fmt
     }
 
     fn eval_q13(&self, x: i32) -> i32 {
-        let (neg, u) = fold(x);
-        let tb = self.tbits;
-        let seg = (u >> tb) as i64;
-        let tu = u & ((1i64 << tb) - 1);
-        let aidx = (tu >> (tb - self.abits)) as usize;
-        let w = &self.coeffs[aidx];
-        let cfrac = self.cbits - 2;
-        let acc: i128 = (0..4)
-            .map(|i| (self.p(seg - 1 + i as i64) * w[i] as i64) as i128)
-            .sum();
-        let y = round_shift(acc, cfrac, Rounding::HalfEven);
-        let y = y.clamp(-8192, 8192) as i32;
-        if neg {
-            -y
-        } else {
-            y
-        }
+        self.plan.eval(x as i64) as i32
     }
 
-    /// Batch hot path: coefficient row select + contiguous 4-tap read
-    /// from the materialized `lut_ext` (no per-element odd-extension
-    /// branch or bounds clamp), i64 MAC, one shared rounder. The folded
-    /// segment index is at most depth−1, so `seg + 4 <= lut_ext.len()`
-    /// always. Bit-identical to `eval_q13`: the i64 accumulator is exact
-    /// (|P·w| < 2^28, 4 taps) and feeds the same round-half-even.
+    fn eval_raw(&self, x: i64) -> i64 {
+        self.plan.eval(x)
+    }
+
+    /// Batch hot path: the engine's row-MAC loop — coefficient row select
+    /// + contiguous 4-tap read from the extended table (no per-element
+    /// odd-extension branch), i64 MAC while it fits, one shared rounder.
     fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
-        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
-        let tb = self.tbits;
-        let tmask = (1i64 << tb) - 1;
-        let ashift = tb - self.abits;
-        let cfrac = self.cbits - 2;
-        let lut_ext = &self.lut_ext[..];
-        let coeffs = &self.coeffs[..];
-        for (o, &x) in out.iter_mut().zip(xs) {
-            let (neg, u) = fold(x);
-            let seg = (u >> tb) as usize;
-            let tu = u & tmask;
-            let w = &coeffs[(tu >> ashift) as usize];
-            let taps = &lut_ext[seg..seg + 4];
-            let acc = taps[0] * w[0] as i64
-                + taps[1] * w[1] as i64
-                + taps[2] * w[2] as i64
-                + taps[3] * w[3] as i64;
-            let y = round_shift_half_even_i64(acc, cfrac).clamp(-8192, 8192) as i32;
-            *o = if neg { -y } else { y };
-        }
+        self.plan.eval_slice(xs, out);
     }
 
     fn resources(&self) -> Option<Resources> {
@@ -247,5 +221,22 @@ mod tests {
         for x in (1..32768).step_by(97) {
             assert_eq!(d.eval_q13(-x), -d.eval_q13(x));
         }
+    }
+
+    #[test]
+    fn other_format_is_odd_accurate_and_batch_identical() {
+        let fmt = QFormat::new(2, 10);
+        let d = Dctif::new_fmt(3, 5, 11, fmt);
+        let xs: Vec<i32> = (-(fmt.max_raw() as i32)..=fmt.max_raw() as i32).step_by(7).collect();
+        let mut out = vec![0i32; xs.len()];
+        d.tanh_slice(&xs, &mut out);
+        let mut max_err: f64 = 0.0;
+        for (&x, &y) in xs.iter().zip(&out) {
+            assert_eq!(y as i64, d.eval_raw(x as i64), "x={x}");
+            assert_eq!(d.eval_raw(-(x as i64)), -(y as i64), "x={x}");
+            max_err = max_err.max((fmt.to_f64(y as i64) - fmt.to_f64(x as i64).tanh()).abs());
+        }
+        // interpolation error well under the coarse format's quantization floor
+        assert!(max_err < 4.0 * fmt.ulp(), "max={max_err}");
     }
 }

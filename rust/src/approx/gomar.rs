@@ -8,22 +8,31 @@
 //! 0.0177 for [9]; this model reproduces that magnitude (≈0.01–0.02,
 //! dominated by the Mitchell error, verified in tests).
 
-use super::catmull_rom::fold;
 use super::TanhApprox;
-use crate::fixed::q13_to_f64;
+use crate::fixed::kernel;
+use crate::fixed::{QFormat, Q2_13};
 use crate::hw::area::Resources;
 
 /// Gomar-style base-2 exponential approximation.
 #[derive(Clone, Debug)]
 pub struct Gomar {
-    /// Fraction bits used by the exponential/divide datapath.
+    /// Fraction bits used by the exponential/divide datapath (independent
+    /// of the I/O format).
     frac_bits: u32,
+    fmt: QFormat,
 }
 
 impl Gomar {
     pub fn new(frac_bits: u32) -> Self {
+        Self::new_fmt(frac_bits, Q2_13)
+    }
+
+    /// Format-parameterized constructor; bit-identical to [`Gomar::new`]
+    /// at Q2.13.
+    pub fn new_fmt(frac_bits: u32, fmt: QFormat) -> Self {
         assert!((8..=24).contains(&frac_bits));
-        Self { frac_bits }
+        assert!(fmt.width() <= 31, "{fmt} raw values must fit i32");
+        Self { frac_bits, fmt }
     }
 
     pub fn paper_default() -> Self {
@@ -63,27 +72,40 @@ impl Gomar {
 
 impl TanhApprox for Gomar {
     fn name(&self) -> String {
-        format!("gomar-f{}", self.frac_bits)
+        if self.fmt == Q2_13 {
+            format!("gomar-f{}", self.frac_bits)
+        } else {
+            format!("gomar-f{}@{}", self.frac_bits, self.fmt)
+        }
+    }
+
+    fn fmt(&self) -> QFormat {
+        self.fmt
     }
 
     fn eval_q13(&self, x: i32) -> i32 {
-        let (neg, u13) = fold(x);
+        self.eval_raw(x as i64) as i32
+    }
+
+    fn eval_raw(&self, x: i64) -> i64 {
+        let (neg, mag) = kernel::fold_mag(x, self.fmt.max_raw());
         let fb = self.frac_bits;
         // u = 2x·log2(e), converted to `fb` fraction bits.
         const LOG2E: f64 = std::f64::consts::LOG2_E;
         let scale = (1i64 << fb) as f64;
-        let u = ((2.0 * q13_to_f64(u13 as i32) * LOG2E) * scale) as i64;
+        let u = ((2.0 * self.fmt.to_f64(mag) * LOG2E) * scale) as i64;
         let e2x = self.exp2_mitchell(u);
         let one = 1i64 << fb;
         // tanh = (e2x - 1) / (e2x + 1)
         let q = self.divide(e2x - one, e2x + one);
-        // rescale quotient to Q2.13
-        let y = if fb >= 13 {
-            (q >> (fb - 13)) as i32
+        // rescale quotient from fb fraction bits to the I/O format
+        let ofb = self.fmt.frac_bits;
+        let y = if fb >= ofb {
+            q >> (fb - ofb)
         } else {
-            (q << (13 - fb)) as i32
+            q << (ofb - fb)
         };
-        let y = y.clamp(0, 8192);
+        let y = y.clamp(0, self.fmt.scale());
         if neg {
             -y
         } else {
@@ -152,5 +174,24 @@ mod tests {
             assert_eq!(g.eval_q13(-x), -g.eval_q13(x));
             assert!(g.eval_q13(x) <= 8192);
         }
+    }
+
+    #[test]
+    fn other_format_tracks_same_datapath() {
+        // Narrow I/O around the same 13-bit internal datapath: same
+        // Mitchell error profile, just coarser output quantization.
+        let fmt = QFormat::new(2, 10);
+        let g = Gomar::new_fmt(13, fmt);
+        let mut sq = 0.0;
+        let span = (2 * fmt.max_raw() + 1) as f64;
+        let mut x = fmt.min_raw();
+        while x <= fmt.max_raw() {
+            let e = fmt.to_f64(g.eval_raw(x)) - fmt.to_f64(x).tanh();
+            sq += e * e;
+            x += 1;
+        }
+        let rmse = (sq / span).sqrt();
+        assert!((0.005..0.03).contains(&rmse), "rmse={rmse}");
+        assert_eq!(g.eval_raw(-100), -g.eval_raw(100));
     }
 }

@@ -3,26 +3,40 @@
 //! with the lookup table value for the nearest input".
 //!
 //! Rounds the input to the nearest LUT node (uniform step h = 2^-k) and
-//! returns the stored value. Accuracy is bounded by the function's slope
-//! times h/2, which is why §II calls the uniform-step trade-off hard to
-//! balance — the motivation for RALUT and the interpolating methods.
+//! returns the stored value — a nearest-select / unit-coefficient plan on
+//! the shared [`KernelPlan`] engine. Accuracy is bounded by the
+//! function's slope times h/2, which is why §II calls the uniform-step
+//! trade-off hard to balance — the motivation for RALUT and the
+//! interpolating methods.
 
-use super::catmull_rom::fold;
 use super::{tanh_ref, TanhApprox};
+use crate::fixed::{KernelPlan, QFormat, Q2_13};
 use crate::hw::area::Resources;
 
 /// Nearest-entry LUT with uniform step h = 2^-k.
 #[derive(Clone, Debug)]
 pub struct PlainLut {
     k: u32,
-    tbits: u32,
-    lut: Vec<i32>, // depth + 1: include tanh(4) for rounding at the top
+    fmt: QFormat,
+    lut: Vec<i32>, // depth + 1: include the top sample for rounding up
+    plan: KernelPlan,
 }
 
 impl PlainLut {
     pub fn new(k: u32) -> Self {
         assert!((1..=12).contains(&k));
-        Self { k, tbits: 13 - k, lut: tanh_ref::build_lut(k, 1) }
+        Self::new_fmt(k, Q2_13)
+    }
+
+    /// Format-parameterized constructor; bit-identical to
+    /// [`PlainLut::new`] at Q2.13.
+    pub fn new_fmt(k: u32, fmt: QFormat) -> Self {
+        assert!(fmt.width() <= 31, "{fmt} raw values must fit i32");
+        assert!(k >= 1 && fmt.frac_bits > k, "k={k} out of range for {fmt}");
+        let tbits = fmt.frac_bits - k;
+        let lut = tanh_ref::build_lut_fmt(k, 1, fmt);
+        let plan = KernelPlan::nearest(fmt, tbits, lut.iter().map(|&p| p as i64).collect());
+        Self { k, fmt, lut, plan }
     }
 
     /// 64-entry LUT (h = 0.0625) — the depth a plain LUT needs to get
@@ -32,46 +46,40 @@ impl PlainLut {
     }
 
     pub fn depth(&self) -> usize {
-        1 << (self.k + 2)
+        1 << (self.k + self.fmt.int_bits)
     }
 }
 
 impl TanhApprox for PlainLut {
     fn name(&self) -> String {
-        format!("lut-k{}", self.k)
+        if self.fmt == Q2_13 {
+            format!("lut-k{}", self.k)
+        } else {
+            format!("lut-k{}@{}", self.k, self.fmt)
+        }
+    }
+
+    fn fmt(&self) -> QFormat {
+        self.fmt
     }
 
     fn eval_q13(&self, x: i32) -> i32 {
-        let (neg, u) = fold(x);
-        // nearest node: add half a step then truncate
-        let idx = (((u + (1i64 << (self.tbits - 1))) >> self.tbits) as usize)
-            .min(self.lut.len() - 1);
-        let y = self.lut[idx];
-        if neg {
-            -y
-        } else {
-            y
-        }
+        self.plan.eval(x as i64) as i32
     }
 
-    /// Batch hot path. The folded magnitude is < 2^15 and the table holds
-    /// depth+1 entries, so `(u + half) >> tbits <= depth` always — the
-    /// scalar path's `.min(len-1)` is dead and the loop is a bare
+    fn eval_raw(&self, x: i64) -> i64 {
+        self.plan.eval(x)
+    }
+
+    /// Batch hot path: the engine's nearest-node loop. The table holds
+    /// depth+1 entries so `(u + half) >> tbits <= depth` always — a bare
     /// round-to-nearest index plus one read per element.
     fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
-        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
-        let tb = self.tbits;
-        let half = 1i64 << (tb - 1);
-        let lut = &self.lut[..];
-        for (o, &x) in out.iter_mut().zip(xs) {
-            let (neg, u) = fold(x);
-            let y = lut[((u + half) >> tb) as usize];
-            *o = if neg { -y } else { y };
-        }
+        self.plan.eval_slice(xs, out);
     }
 
     fn resources(&self) -> Option<Resources> {
-        Some(crate::hw::area::plain_lut_resources(self.lut.len()))
+        Some(crate::hw::area::plain_lut_resources_fmt(self.lut.len(), self.fmt))
     }
 }
 
@@ -112,5 +120,16 @@ mod tests {
         for x in (1..32768).step_by(119) {
             assert_eq!(l.eval_q13(-x), -l.eval_q13(x));
         }
+    }
+
+    #[test]
+    fn other_format_returns_nearest_node() {
+        let fmt = QFormat::new(2, 10);
+        let l = PlainLut::new_fmt(3, fmt);
+        // one quarter step above node 1: still node 1
+        let tb = fmt.frac_bits - 3;
+        let x = (1i64 << tb) + (1i64 << (tb - 2));
+        assert_eq!(l.eval_raw(x), l.lut[1] as i64);
+        assert_eq!(l.eval_raw(-x), -(l.lut[1] as i64));
     }
 }

@@ -14,8 +14,12 @@
 //! | `gomar` | [9] | base-2 exponential approximation |
 //! | `dctif` | [10] | DCT interpolation filter |
 //!
-//! All methods implement [`TanhApprox`]: a bit-accurate Q2.13 entry point
-//! (`eval_q13`, the hardware semantics) plus a convenience float wrapper.
+//! All methods implement [`TanhApprox`]: a bit-accurate fixed-point entry
+//! point over the method's [`QFormat`] (`eval_raw`, with `eval_q13` the
+//! paper-default Q2.13 specialization) plus a convenience float wrapper.
+//! Table-driven methods execute on the shared
+//! [`crate::fixed::KernelPlan`] engine rather than re-deriving fold /
+//! select / MAC / round / saturate per method.
 
 pub mod catmull_rom;
 pub mod dctif;
@@ -39,9 +43,15 @@ pub use sigmoid::Sigmoid;
 pub use tanh_ref::QuantizedTanh;
 pub use taylor::Taylor;
 
-use crate::fixed::{q13, q13_to_f64};
+use crate::fixed::{QFormat, Q2_13};
 
-/// A hardware tanh approximation operating on the paper's Q2.13 I/O format.
+/// A hardware tanh approximation operating on a signed fixed-point I/O
+/// format. The paper's normative format is Q2.13 and remains the default:
+/// an implementation that only provides [`TanhApprox::eval_q13`] gets the
+/// whole contract (fmt = Q2.13, `eval_raw` routed through `eval_q13`).
+/// Format-parameterized methods instead override [`TanhApprox::fmt`] and
+/// [`TanhApprox::eval_raw`] and define `eval_q13` as the narrowing
+/// wrapper over `eval_raw`.
 pub trait TanhApprox: Send + Sync {
     /// Short method name used in tables and CLI.
     fn name(&self) -> String;
@@ -50,15 +60,31 @@ pub trait TanhApprox: Send + Sync {
     ///
     /// Input is interpreted as a 16-bit signed integer (passed as i32 for
     /// convenience); implementations must accept the full i16 range.
+    /// For methods constructed at a non-default format this is replaced
+    /// by the raw entry point in that format (raw values still travel as
+    /// i32; every supported format has `width() <= 31`).
     fn eval_q13(&self, x: i32) -> i32;
 
-    /// Evaluate on an f64 by quantizing through the Q2.13 interface.
-    fn eval_f64(&self, x: f64) -> f64 {
-        q13_to_f64(self.eval_q13(q13(x)))
+    /// The fixed-point I/O format this instance evaluates in.
+    fn fmt(&self) -> QFormat {
+        Q2_13
     }
 
-    /// Batch evaluation: raw Q2.13 in, raw Q2.13 out, one output per
-    /// input, written into a caller-provided buffer.
+    /// Bit-accurate evaluation over this instance's [`TanhApprox::fmt`]:
+    /// raw in, raw out. The default forwards to [`TanhApprox::eval_q13`],
+    /// which is exact for Q2.13-only implementations.
+    fn eval_raw(&self, x: i64) -> i64 {
+        self.eval_q13(x as i32) as i64
+    }
+
+    /// Evaluate on an f64 by quantizing through the fixed-point interface.
+    fn eval_f64(&self, x: f64) -> f64 {
+        let fmt = self.fmt();
+        fmt.to_f64(self.eval_raw(fmt.quantize(x)))
+    }
+
+    /// Batch evaluation: raw values in this instance's format in, raw
+    /// out, one output per input, written into a caller-provided buffer.
     ///
     /// This is the crate-wide software hot path: the coordinator's
     /// workers, the NN activation layers and the bench harness all go
@@ -78,13 +104,14 @@ pub trait TanhApprox: Send + Sync {
         }
     }
 
-    /// Batch evaluation on f64 slices through the Q2.13 interface —
+    /// Batch evaluation on f64 slices through the fixed-point interface —
     /// the vector analogue of [`TanhApprox::eval_f64`].
     fn tanh_slice_f64(&self, xs: &[f64]) -> Vec<f64> {
-        let q: Vec<i32> = xs.iter().map(|&v| q13(v)).collect();
+        let fmt = self.fmt();
+        let q: Vec<i32> = xs.iter().map(|&v| fmt.quantize(v) as i32).collect();
         let mut out = vec![0i32; q.len()];
         self.tanh_slice(&q, &mut out);
-        out.into_iter().map(q13_to_f64).collect()
+        out.into_iter().map(|r| fmt.to_f64(r as i64)).collect()
     }
 
     /// Hardware resource summary for the area model (gates, memory bits).

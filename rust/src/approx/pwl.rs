@@ -1,14 +1,13 @@
 //! Piecewise-linear tanh interpolation — the paper's main comparison
 //! baseline (ref [7], the "PWL" columns of Tables I/II).
 //!
-//! Shares the uniform Q2.13 LUT and index/t split with the Catmull-Rom
-//! method; the interpolation is the 2-tap dot product
+//! Shares the uniform LUT and index/t split with the Catmull-Rom method;
+//! the interpolation is the 2-tap dot product
 //! `f = P(s)·(1-t) + P(s+1)·t`, computed exactly in integer arithmetic
-//! with one final round-half-even.
+//! with one final round-half-even by the shared [`KernelPlan`] engine.
 
-use super::catmull_rom::fold;
 use super::{tanh_ref, TanhApprox};
-use crate::fixed::{round_shift, round_shift_half_even_i64, Rounding};
+use crate::fixed::{KernelPlan, QFormat, Q2_13};
 use crate::hw::area::Resources;
 
 /// PWL interpolator over a uniform LUT with step h = 2^-k.
@@ -16,13 +15,26 @@ use crate::hw::area::Resources;
 pub struct Pwl {
     k: u32,
     tbits: u32,
+    fmt: QFormat,
     lut: Vec<i32>, // depth + 1 entries: needs P(depth) = tanh(4) at the top
+    plan: KernelPlan,
 }
 
 impl Pwl {
     pub fn new(k: u32) -> Self {
         assert!((1..=12).contains(&k));
-        Self { k, tbits: 13 - k, lut: tanh_ref::build_lut(k, 1) }
+        Self::new_fmt(k, Q2_13)
+    }
+
+    /// Format-parameterized constructor; bit-identical to [`Pwl::new`]
+    /// at Q2.13.
+    pub fn new_fmt(k: u32, fmt: QFormat) -> Self {
+        assert!(fmt.width() <= 31, "{fmt} raw values must fit i32");
+        assert!(k >= 1 && fmt.frac_bits > k, "k={k} out of range for {fmt}");
+        let tbits = fmt.frac_bits - k;
+        let lut = tanh_ref::build_lut_fmt(k, 1, fmt);
+        let plan = KernelPlan::linear(fmt, tbits, lut.iter().map(|&p| p as i64).collect());
+        Self { k, tbits, fmt, lut, plan }
     }
 
     /// Same LUT depth as the paper's chosen CR configuration (h = 0.125).
@@ -31,63 +43,41 @@ impl Pwl {
     }
 
     pub fn depth(&self) -> usize {
-        1 << (self.k + 2)
-    }
-
-    #[inline]
-    fn eval_pos(&self, u: i64) -> i32 {
-        let tb = self.tbits;
-        let seg = (u >> tb) as usize;
-        let tu = u & ((1i64 << tb) - 1);
-        let one = 1i64 << tb;
-        let p0 = self.lut[seg] as i64;
-        let p1 = self.lut[(seg + 1).min(self.lut.len() - 1)] as i64;
-        // acc carries 13 + tbits fraction bits, exact.
-        let acc = p0 * (one - tu) + p1 * tu;
-        round_shift(acc as i128, tb, Rounding::HalfEven).clamp(-8192, 8192) as i32
+        1 << (self.k + self.fmt.int_bits)
     }
 }
 
 impl TanhApprox for Pwl {
     fn name(&self) -> String {
-        format!("pwl-k{}", self.k)
+        if self.fmt == Q2_13 {
+            format!("pwl-k{}", self.k)
+        } else {
+            format!("pwl-k{}@{}", self.k, self.fmt)
+        }
+    }
+
+    fn fmt(&self) -> QFormat {
+        self.fmt
     }
 
     fn eval_q13(&self, x: i32) -> i32 {
-        let (neg, u) = fold(x);
-        let y = self.eval_pos(u);
-        if neg {
-            -y
-        } else {
-            y
-        }
+        self.plan.eval(x as i64) as i32
     }
 
-    /// Batch hot path. The LUT stores depth+1 entries and the folded
-    /// magnitude is < depth·2^tbits, so `seg + 1 <= depth` always: the
-    /// top-entry clamp of the scalar path is provably dead and the inner
-    /// loop reads both taps unconditionally. Bit-identical to `eval_q13`
-    /// (same 2-tap integer dot product, same final round-half-even).
+    fn eval_raw(&self, x: i64) -> i64 {
+        self.plan.eval(x)
+    }
+
+    /// Batch hot path: the engine's 2-tap linear loop. The LUT stores
+    /// depth+1 entries and the folded magnitude is < depth·2^tbits, so
+    /// `seg + 1 <= depth` always — both taps are read unconditionally.
+    /// Bit-identical to the scalar entry point.
     fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
-        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
-        let tb = self.tbits;
-        let tmask = (1i64 << tb) - 1;
-        let one = 1i64 << tb;
-        let lut = &self.lut[..];
-        for (o, &x) in out.iter_mut().zip(xs) {
-            let (neg, u) = fold(x);
-            let seg = (u >> tb) as usize;
-            let tu = u & tmask;
-            let p0 = lut[seg] as i64;
-            let p1 = lut[seg + 1] as i64;
-            let acc = p0 * (one - tu) + p1 * tu;
-            let y = round_shift_half_even_i64(acc, tb).clamp(-8192, 8192) as i32;
-            *o = if neg { -y } else { y };
-        }
+        self.plan.eval_slice(xs, out);
     }
 
     fn resources(&self) -> Option<Resources> {
-        Some(crate::hw::area::pwl_resources(self.lut.len(), self.tbits))
+        Some(crate::hw::area::pwl_resources_fmt(self.lut.len(), self.tbits, self.fmt))
     }
 }
 
@@ -151,5 +141,19 @@ mod tests {
             cmax = cmax.max((q13_to_f64(c.eval_q13(x)) - t).abs());
         }
         assert!(pmax / cmax > 8.0, "gain {}", pmax / cmax);
+    }
+
+    #[test]
+    fn other_formats_stay_exact_at_nodes_and_odd() {
+        for fmt in [QFormat::new(2, 7), QFormat::new(2, 21)] {
+            let p = Pwl::new_fmt(3, fmt);
+            let tb = fmt.frac_bits - 3;
+            for seg in 0..32i64 {
+                let x = seg << tb;
+                let expect = fmt.quantize(fmt.to_f64(x).tanh());
+                assert_eq!(p.eval_raw(x), expect, "{fmt} seg={seg}");
+                assert_eq!(p.eval_raw(-x), -expect, "{fmt} seg={seg}");
+            }
+        }
     }
 }

@@ -7,59 +7,78 @@
 //! table is built greedily for a target max error ε: each segment is
 //! grown as far as a single output value can cover within ε, which is the
 //! minimal-entry construction for piecewise-constant approximation.
+//! Lookup executes as a ranges/unit plan on the shared [`KernelPlan`]
+//! engine (binary search models the comparator/priority-encoder).
 //!
 //! [5]'s 10-bit design reports max error 0.0189 with 515 gates; our
 //! paper-default targets that ε and reproduces both the accuracy and the
 //! entry count (~20 ranges), which the area model prices with comparators
 //! + priority encoding like the published RALUT structure.
 
-use super::catmull_rom::fold;
 use super::TanhApprox;
-use crate::fixed::{q13, q13_to_f64};
+use crate::fixed::{KernelPlan, QFormat, Q2_13};
 use crate::hw::area::Resources;
 
 /// One stored range: inputs with magnitude in [start, next.start) map to `y`.
 #[derive(Clone, Copy, Debug)]
 pub struct Range {
-    pub start: i32, // raw Q2.13 magnitude
-    pub y: i32,     // raw Q2.13 output
+    pub start: i32, // raw magnitude in the instance's format
+    pub y: i32,     // raw output in the instance's format
 }
 
 /// Range-addressable LUT tanh.
 #[derive(Clone, Debug)]
 pub struct Ralut {
     eps: f64,
+    fmt: QFormat,
     ranges: Vec<Range>,
+    plan: KernelPlan,
 }
 
 impl Ralut {
     /// Build the minimal piecewise-constant table with max error <= eps
     /// (over the positive half; the negative half folds through symmetry).
     pub fn new(eps: f64) -> Self {
-        assert!(eps > 2.0 * crate::fixed::ULP, "eps too tight for Q2.13");
+        Self::new_fmt(eps, Q2_13)
+    }
+
+    /// Format-parameterized constructor; bit-identical to [`Ralut::new`]
+    /// at Q2.13.
+    pub fn new_fmt(eps: f64, fmt: QFormat) -> Self {
+        assert!(fmt.width() <= 31, "{fmt} raw values must fit i32");
+        assert!(eps > 2.0 * fmt.ulp(), "eps too tight for {fmt}");
+        let max = fmt.max_raw();
         let mut ranges = Vec::new();
-        let mut u = 0i32;
-        while u <= 32767 {
-            let lo = q13_to_f64(u).tanh();
+        let mut u = 0i64;
+        while u <= max {
+            let lo = fmt.to_f64(u).tanh();
             // Longest segment [u, end] with tanh(end)-tanh(u) <= 2*eps:
             // tanh is monotone, so binary-search the endpoint.
-            let (mut a, mut b) = (u, 32767i32);
+            let (mut a, mut b) = (u, max);
             while a < b {
                 let mid = (a + b + 1) / 2;
-                if q13_to_f64(mid).tanh() - lo <= 2.0 * eps {
+                if fmt.to_f64(mid).tanh() - lo <= 2.0 * eps {
                     a = mid;
                 } else {
                     b = mid - 1;
                 }
             }
-            let hi = q13_to_f64(a).tanh();
-            ranges.push(Range { start: u, y: q13((lo + hi) / 2.0) });
-            if a == 32767 {
+            let hi = fmt.to_f64(a).tanh();
+            ranges.push(Range {
+                start: u as i32,
+                y: fmt.quantize((lo + hi) / 2.0) as i32,
+            });
+            if a == max {
                 break;
             }
             u = a + 1;
         }
-        Self { eps, ranges }
+        let plan = KernelPlan::ranges(
+            fmt,
+            ranges.iter().map(|r| r.start as i64).collect(),
+            ranges.iter().map(|r| r.y as i64).collect(),
+        );
+        Self { eps, fmt, ranges, plan }
     }
 
     /// Target the accuracy [5] reports for its 10-bit RALUT.
@@ -78,51 +97,34 @@ impl Ralut {
     pub fn ranges(&self) -> &[Range] {
         &self.ranges
     }
-
-    /// Locate the covering range (models the comparator/priority-encoder).
-    fn lookup(&self, u: i32) -> i32 {
-        let mut idx = match self.ranges.binary_search_by(|r| r.start.cmp(&u)) {
-            Ok(i) => i,
-            Err(i) => i - 1,
-        };
-        idx = idx.min(self.ranges.len() - 1);
-        self.ranges[idx].y
-    }
 }
 
 impl TanhApprox for Ralut {
     fn name(&self) -> String {
-        format!("ralut-e{:.4}", self.eps)
+        if self.fmt == Q2_13 {
+            format!("ralut-e{:.4}", self.eps)
+        } else {
+            format!("ralut-e{:.4}@{}", self.eps, self.fmt)
+        }
+    }
+
+    fn fmt(&self) -> QFormat {
+        self.fmt
     }
 
     fn eval_q13(&self, x: i32) -> i32 {
-        let (neg, u) = fold(x);
-        let y = self.lookup(u as i32);
-        if neg {
-            -y
-        } else {
-            y
-        }
+        self.plan.eval(x as i64) as i32
     }
 
-    /// Batch hot path. `ranges` is sorted and `ranges[0].start == 0` by
-    /// construction, so for any folded magnitude the binary search's
-    /// `Err(i)` has `i >= 1` and `Ok(i)` is in range — the per-element
-    /// `.min(len-1)` clamp of the scalar `lookup` is dead and the loop is
-    /// search + read with the table borrow hoisted.
+    fn eval_raw(&self, x: i64) -> i64 {
+        self.plan.eval(x)
+    }
+
+    /// Batch hot path: the engine's range-search loop. `starts` is sorted
+    /// with `starts[0] == 0` by construction, so the binary search's
+    /// `Err(i)` has `i >= 1` and every read is in range.
     fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
-        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
-        let ranges = &self.ranges[..];
-        for (o, &x) in out.iter_mut().zip(xs) {
-            let (neg, u) = fold(x);
-            let u = u as i32;
-            let idx = match ranges.binary_search_by(|r| r.start.cmp(&u)) {
-                Ok(i) => i,
-                Err(i) => i - 1,
-            };
-            let y = ranges[idx].y;
-            *o = if neg { -y } else { y };
-        }
+        self.plan.eval_slice(xs, out);
     }
 
     fn resources(&self) -> Option<Resources> {
@@ -133,6 +135,7 @@ impl TanhApprox for Ralut {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fixed::q13_to_f64;
 
     #[test]
     fn construction_meets_error_target() {
@@ -188,5 +191,18 @@ mod tests {
         for x in (1..32768).step_by(211) {
             assert_eq!(r.eval_q13(-x), -r.eval_q13(x));
         }
+    }
+
+    #[test]
+    fn other_format_meets_error_target() {
+        let fmt = QFormat::new(2, 10);
+        let r = Ralut::new_fmt(0.01, fmt);
+        let mut max_err: f64 = 0.0;
+        let mut x = fmt.min_raw();
+        while x <= fmt.max_raw() {
+            max_err = max_err.max((fmt.to_f64(r.eval_raw(x)) - fmt.to_f64(x).tanh()).abs());
+            x += 1;
+        }
+        assert!(max_err <= 0.01 + fmt.ulp(), "max={max_err}");
     }
 }

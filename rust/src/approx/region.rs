@@ -6,7 +6,8 @@
 //! **processing region** in between where the output is a "simple
 //! bit-level mapping" — here modelled as a truncated-input lookup
 //! realized as minimized combinational logic, which is exactly what their
-//! bit-mapping synthesizes to.
+//! bit-mapping synthesizes to. Evaluation runs as a regions/unit plan on
+//! the shared [`KernelPlan`] engine.
 //!
 //! The published 6-bit-precision design reports max error 0.0196 with
 //! 129 gates; the paper-default configuration below is re-derived for the
@@ -14,43 +15,46 @@
 //! budget), saturate from 2.0 (where (1 − tanh)/2 fits the budget with a
 //! centered constant), and a 2⁻⁵-step mapping in between.
 
-use super::catmull_rom::fold;
 use super::TanhApprox;
-use crate::fixed::{q13, q13_to_f64};
+use crate::fixed::{KernelPlan, QFormat, Q2_13};
 use crate::hw::area::Resources;
 
 /// Region-based approximator.
 #[derive(Clone, Debug)]
 pub struct RegionBased {
-    /// End of the pass region (raw Q2.13 magnitude).
-    pass_end: i32,
-    /// Start of the saturation region (raw Q2.13 magnitude).
-    sat_start: i32,
-    /// Constant output in the saturation region (raw Q2.13).
-    sat_value: i32,
-    /// log2 of the processing-region input step (in raw LSBs).
-    step_shift: u32,
-    /// Processing-region table: entry per step from pass_end.
-    table: Vec<i32>,
+    fmt: QFormat,
+    table_entries: usize,
+    plan: KernelPlan,
 }
 
 impl RegionBased {
     /// Build for the given region boundaries and step (values in x units).
     pub fn new(pass_end: f64, sat_start: f64, step_shift: u32) -> Self {
-        let pe = q13(pass_end);
-        let ss = q13(sat_start);
-        let step = 1i32 << step_shift;
+        Self::new_fmt(pass_end, sat_start, step_shift, Q2_13)
+    }
+
+    /// Format-parameterized constructor; bit-identical to
+    /// [`RegionBased::new`] at Q2.13. `step_shift` counts raw LSBs of the
+    /// target format.
+    pub fn new_fmt(pass_end: f64, sat_start: f64, step_shift: u32, fmt: QFormat) -> Self {
+        assert!(fmt.width() <= 31, "{fmt} raw values must fit i32");
+        let pe = fmt.quantize(pass_end);
+        let ss = fmt.quantize(sat_start);
+        let step = 1i64 << step_shift;
+        assert!(ss > pe, "saturation must start after the pass region");
         let n = ((ss - pe) as usize).div_ceil(step as usize);
         // Each table entry represents inputs [pe + i*step, pe + (i+1)*step):
         // store tanh at the interval midpoint (minimax for a constant).
-        let table = (0..n)
+        let table: Vec<i64> = (0..n)
             .map(|i| {
-                let mid = pe + i as i32 * step + step / 2;
-                q13(q13_to_f64(mid).tanh())
+                let mid = pe + i as i64 * step + step / 2;
+                fmt.quantize(fmt.to_f64(mid).tanh())
             })
             .collect();
-        let sat_value = q13((1.0 + sat_start.tanh()) / 2.0);
-        Self { pass_end: pe, sat_start: ss, sat_value, step_shift, table }
+        let sat_value = fmt.quantize((1.0 + sat_start.tanh()) / 2.0);
+        let table_entries = table.len();
+        let plan = KernelPlan::regions(fmt, pe, ss, sat_value, step_shift, table);
+        Self { fmt, table_entries, plan }
     }
 
     /// Error budget ~0.0196 (the published design's accuracy).
@@ -59,31 +63,33 @@ impl RegionBased {
     }
 
     pub fn table_entries(&self) -> usize {
-        self.table.len()
+        self.table_entries
     }
 }
 
 impl TanhApprox for RegionBased {
     fn name(&self) -> String {
-        "region".into()
+        if self.fmt == Q2_13 {
+            "region".into()
+        } else {
+            format!("region@{}", self.fmt)
+        }
+    }
+
+    fn fmt(&self) -> QFormat {
+        self.fmt
     }
 
     fn eval_q13(&self, x: i32) -> i32 {
-        let (neg, u) = fold(x);
-        let u = u as i32;
-        let y = if u < self.pass_end {
-            u // pass region: "the data is simply shifted" through
-        } else if u >= self.sat_start {
-            self.sat_value // saturation region: fixed
-        } else {
-            let idx = ((u - self.pass_end) >> self.step_shift) as usize;
-            self.table[idx.min(self.table.len() - 1)]
-        };
-        if neg {
-            -y
-        } else {
-            y
-        }
+        self.plan.eval(x as i64) as i32
+    }
+
+    fn eval_raw(&self, x: i64) -> i64 {
+        self.plan.eval(x)
+    }
+
+    fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
+        self.plan.eval_slice(xs, out);
     }
 
     fn resources(&self) -> Option<Resources> {
@@ -94,6 +100,7 @@ impl TanhApprox for RegionBased {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fixed::{q13, q13_to_f64};
 
     #[test]
     fn max_error_matches_published_budget() {
@@ -146,5 +153,20 @@ mod tests {
         }
         // [6]'s design is tiny; the table must stay around 50 entries
         assert!((30..=70).contains(&r.table_entries()), "{}", r.table_entries());
+    }
+
+    #[test]
+    fn other_format_keeps_region_structure() {
+        let fmt = QFormat::new(2, 10);
+        let r = RegionBased::new_fmt(0.39, 2.0, 5, fmt);
+        // pass region identity
+        let small = fmt.quantize(0.2);
+        assert_eq!(r.eval_raw(small), small);
+        // saturation constant
+        let v = r.eval_raw(fmt.quantize(2.5));
+        assert_eq!(r.eval_raw(fmt.max_raw()), v);
+        assert!(v > fmt.quantize(0.96) && v < fmt.scale());
+        // odd
+        assert_eq!(r.eval_raw(-small), -small);
     }
 }

@@ -6,13 +6,24 @@
 //! module makes that wrapper a first-class, bit-accurate citizen so the
 //! NN substrate and the L2 models use the exact same semantics.
 //!
-//! Fixed-point contract: input raw Q2.13 (interpreted over (−4,4), so
-//! the effective sigmoid domain is (−8,8) pre-halving is NOT applied
-//! here — callers pass x and we halve internally, saturating the halved
-//! value); output raw **Q1.14 would be natural, but we keep Q2.13** for
-//! bus uniformity: σ ∈ (0,1) uses only the positive half of the range.
+//! Fixed-point contract: input/output raw in the wrapped block's format
+//! (the halving and `(1+·)/2` are format-agnostic shifts); the sigmoid
+//! output uses only the positive half of the range, kept in the tanh
+//! format for bus uniformity rather than regaining the spare sign bit.
 
 use super::TanhApprox;
+
+/// Halve with round-half-even on the dropped LSB — the one-bit shift the
+/// hardware wrapper performs on both sides of the tanh block.
+#[inline]
+fn halve_even(v: i64) -> i64 {
+    let fl = v >> 1;
+    if (v & 1) == 1 && (fl & 1) == 1 {
+        fl + 1
+    } else {
+        fl
+    }
+}
 
 /// Sigmoid wrapper over any tanh implementation.
 pub struct Sigmoid<'a> {
@@ -24,34 +35,24 @@ impl<'a> Sigmoid<'a> {
         Self { tanh }
     }
 
-    /// Bit-accurate: raw Q2.13 in (x over (−8,8) conceptually, halved
-    /// with round-to-even on the dropped bit), raw Q2.13 out in [0, 1].
-    pub fn eval_q13(&self, x: i32) -> i32 {
-        // halve with round-half-even on the dropped LSB
-        let half = {
-            let fl = x >> 1;
-            let rem = x & 1;
-            if rem == 1 && (fl & 1) == 1 {
-                fl + 1
-            } else {
-                fl
-            }
-        };
-        let t = self.tanh.eval_q13(half);
-        // (8192 + t) / 2, exact: both terms even or rounded half-even
-        let sum = 8192 + t; // in [0, 16384]
-        let fl = sum >> 1;
-        let rem = sum & 1;
-        if rem == 1 && (fl & 1) == 1 {
-            fl + 1
-        } else {
-            fl
-        }
+    /// Bit-accurate at the wrapped block's format: raw in (halved with
+    /// round-to-even on the dropped bit), raw out in [0, scale].
+    pub fn eval_raw(&self, x: i64) -> i64 {
+        let t = self.tanh.eval_raw(halve_even(x));
+        // (scale + t) / 2, exact: both terms even or rounded half-even
+        halve_even(self.tanh.fmt().scale() + t)
     }
 
-    /// Float convenience.
+    /// Q2.13 entry point (the wrapped block's format must be Q2.13-sized
+    /// or narrower for the i32 raw I/O to be meaningful).
+    pub fn eval_q13(&self, x: i32) -> i32 {
+        self.eval_raw(x as i64) as i32
+    }
+
+    /// Float convenience in the wrapped block's format.
     pub fn eval_f64(&self, x: f64) -> f64 {
-        crate::fixed::q13_to_f64(self.eval_q13(crate::fixed::q13(x)))
+        let fmt = self.tanh.fmt();
+        fmt.to_f64(self.eval_raw(fmt.quantize(x)))
     }
 }
 
@@ -120,6 +121,18 @@ mod tests {
             let x = i as f64 * 0.04;
             let err = (s.eval_f64(x) - exact_sigmoid(x)).abs();
             assert!(err < 1.5 * crate::fixed::ULP, "x={x} err={err}");
+        }
+    }
+
+    #[test]
+    fn other_format_keeps_midpoint_and_complementarity() {
+        let fmt = crate::fixed::QFormat::new(2, 10);
+        let cr = CatmullRom::new_fmt(3, crate::approx::Boundary::Extend, fmt);
+        let s = Sigmoid::new(&cr);
+        assert_eq!(s.eval_raw(0), fmt.scale() / 2);
+        for x in (-(fmt.max_raw())..fmt.max_raw()).step_by(97) {
+            let sum = s.eval_raw(x) + s.eval_raw(-x);
+            assert!((sum - fmt.scale()).abs() <= 1, "x={x} sum={sum}");
         }
     }
 }

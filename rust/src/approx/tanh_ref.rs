@@ -8,7 +8,7 @@
 //! Table III.
 
 use super::TanhApprox;
-use crate::fixed::{q13, q13_to_f64};
+use crate::fixed::{q13, q13_to_f64, QFormat, Q2_13};
 
 /// True tanh on f64 (libm).
 #[inline]
@@ -22,13 +22,25 @@ pub fn lut_entry(i: i64, h: f64) -> i32 {
     q13((i as f64 * h).tanh())
 }
 
+/// Format-generic [`lut_entry`]: tanh(i·h) quantized into `fmt`.
+pub fn lut_entry_fmt(i: i64, h: f64, fmt: QFormat) -> i32 {
+    fmt.quantize((i as f64 * h).tanh()) as i32
+}
+
 /// Build the positive-side control-point table for step `h = 2^-k`
 /// covering x ∈ [0, 4), with `guard` extra entries past x = 4 (the CR
 /// datapath reads P[seg+2] at the top segment). Entry j = q13(tanh(j·h)).
 pub fn build_lut(k: u32, guard: usize) -> Vec<i32> {
+    build_lut_fmt(k, guard, Q2_13)
+}
+
+/// Format-generic [`build_lut`]: the table covers the format's positive
+/// domain x ∈ [0, 2^int_bits), so its depth is `2^(k + int_bits)`.
+/// Bit-identical to [`build_lut`] at Q2.13.
+pub fn build_lut_fmt(k: u32, guard: usize, fmt: QFormat) -> Vec<i32> {
     let h = 0.5f64.powi(k as i32);
-    let depth = 1usize << (k + 2); // 4 / h
-    (0..depth + guard).map(|j| lut_entry(j as i64, h)).collect()
+    let depth = 1usize << (k + fmt.int_bits); // 2^int_bits / h
+    (0..depth + guard).map(|j| lut_entry_fmt(j as i64, h, fmt)).collect()
 }
 
 /// Materialize the 4-tap read table `ext[i] = P(i − 1)` over segments

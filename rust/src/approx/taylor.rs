@@ -12,21 +12,29 @@
 //! round, i.e. the most favourable implementation; its accuracy is still
 //! far off the interpolating methods, which is the point of the baseline.
 
-use super::catmull_rom::fold;
 use super::TanhApprox;
-use crate::fixed::{q13, q13_to_f64};
+use crate::fixed::kernel;
+use crate::fixed::{QFormat, Q2_13};
 use crate::hw::area::Resources;
 
 /// Truncated Taylor approximation with `terms` odd terms (2..=4).
 #[derive(Clone, Debug)]
 pub struct Taylor {
     terms: u32,
+    fmt: QFormat,
 }
 
 impl Taylor {
     pub fn new(terms: u32) -> Self {
+        Self::new_fmt(terms, Q2_13)
+    }
+
+    /// Format-parameterized constructor; bit-identical to [`Taylor::new`]
+    /// at Q2.13.
+    pub fn new_fmt(terms: u32, fmt: QFormat) -> Self {
         assert!((2..=4).contains(&terms));
-        Self { terms }
+        assert!(fmt.width() <= 31, "{fmt} raw values must fit i32");
+        Self { terms, fmt }
     }
 
     /// Three terms, the configuration [8] implements.
@@ -53,12 +61,24 @@ impl Taylor {
 
 impl TanhApprox for Taylor {
     fn name(&self) -> String {
-        format!("taylor-{}t", self.terms)
+        if self.fmt == Q2_13 {
+            format!("taylor-{}t", self.terms)
+        } else {
+            format!("taylor-{}t@{}", self.terms, self.fmt)
+        }
+    }
+
+    fn fmt(&self) -> QFormat {
+        self.fmt
     }
 
     fn eval_q13(&self, x: i32) -> i32 {
-        let (neg, u) = fold(x);
-        let y = q13(self.poly(q13_to_f64(u as i32)));
+        self.eval_raw(x as i64) as i32
+    }
+
+    fn eval_raw(&self, x: i64) -> i64 {
+        let (neg, u) = kernel::fold_mag(x, self.fmt.max_raw());
+        let y = self.fmt.quantize(self.poly(self.fmt.to_f64(u)));
         if neg {
             -y
         } else {
@@ -119,5 +139,18 @@ mod tests {
             assert_eq!(t.eval_q13(-x), -t.eval_q13(x));
         }
         assert!(t.eval_q13(32767).abs() <= 8192);
+    }
+
+    #[test]
+    fn other_format_is_odd_and_clamped() {
+        let fmt = QFormat::new(2, 10);
+        let t = Taylor::new_fmt(3, fmt);
+        for x in (1..=fmt.max_raw()).step_by(13) {
+            assert_eq!(t.eval_raw(-x), -t.eval_raw(x));
+            assert!(t.eval_raw(x) <= fmt.scale());
+        }
+        // near zero the polynomial tracks tanh to quantization accuracy
+        let x = fmt.quantize(0.25);
+        assert_eq!(t.eval_raw(x), fmt.quantize(t.poly(fmt.to_f64(x))));
     }
 }

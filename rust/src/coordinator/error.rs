@@ -1,0 +1,56 @@
+//! Typed serving errors.
+//!
+//! The submit path and the shutdown path race by design (a caller may
+//! submit while another thread drops the server), so "the server is gone"
+//! is an expected condition, not a panic. Every fallible coordinator
+//! entry point returns [`ServeError`] instead of unwinding; callers that
+//! live in `anyhow` land convert for free through `?`.
+
+/// Why a coordinator operation could not complete.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The server has shut down (submit channel closed).
+    ShutDown,
+    /// The request was rejected before queueing (unknown model, payload
+    /// size mismatch, ...).
+    InvalidRequest(String),
+    /// The reply channel closed before a response arrived — the batch was
+    /// dropped mid-flight (worker exited during shutdown).
+    ChannelClosed,
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::ShutDown => write!(f, "server shut down"),
+            ServeError::InvalidRequest(why) => write!(f, "invalid request: {why}"),
+            ServeError::ChannelClosed => {
+                write!(f, "reply channel closed before a response arrived")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_is_descriptive() {
+        assert_eq!(ServeError::ShutDown.to_string(), "server shut down");
+        assert!(ServeError::InvalidRequest("bad len".into())
+            .to_string()
+            .contains("bad len"));
+        assert!(ServeError::ChannelClosed.to_string().contains("reply channel"));
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn fails() -> anyhow::Result<()> {
+            Err(ServeError::ShutDown)?
+        }
+        assert!(fails().unwrap_err().to_string().contains("shut down"));
+    }
+}

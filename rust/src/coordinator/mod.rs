@@ -14,6 +14,7 @@
 //! ```
 
 pub mod batcher;
+pub mod error;
 pub mod metrics;
 pub mod request;
 pub mod router;
@@ -22,6 +23,7 @@ pub mod trace;
 pub mod worker;
 
 pub use batcher::{BatchPolicy, Batcher};
+pub use error::ServeError;
 pub use metrics::{Metrics, MetricsSnapshot};
 pub use request::{ModelKey, Request, Response};
 pub use router::Router;

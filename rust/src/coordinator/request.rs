@@ -1,26 +1,45 @@
 //! Request/response types of the serving layer.
 
+use crate::fixed::{QFormat, Q2_13};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-/// Routing key: one queue + one executable family per (model, variant).
+/// Routing key: one queue + one executable family per
+/// (model, variant, number format).
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct ModelKey {
     /// Model family: "tanh", "mlp", "lstm".
     pub model: String,
     /// Activation variant: "cr", "pwl", "exact".
     pub variant: String,
+    /// Datapath number format the artifact was built for. Q2.13 — the
+    /// paper's format — is the default, so existing manifests and call
+    /// sites never have to mention it.
+    pub fmt: QFormat,
 }
 
 impl ModelKey {
     pub fn new(model: impl Into<String>, variant: impl Into<String>) -> Self {
-        Self { model: model.into(), variant: variant.into() }
+        Self { model: model.into(), variant: variant.into(), fmt: Q2_13 }
+    }
+
+    /// A key for an artifact compiled at a non-default number format.
+    pub fn with_fmt(
+        model: impl Into<String>,
+        variant: impl Into<String>,
+        fmt: QFormat,
+    ) -> Self {
+        Self { model: model.into(), variant: variant.into(), fmt }
     }
 }
 
 impl std::fmt::Display for ModelKey {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "{}/{}", self.model, self.variant)
+        write!(f, "{}/{}", self.model, self.variant)?;
+        if self.fmt != Q2_13 {
+            write!(f, "@{}", self.fmt)?;
+        }
+        Ok(())
     }
 }
 
@@ -72,6 +91,18 @@ mod tests {
         let b = ModelKey::new("tanh", "cr");
         assert!(a < b);
         assert_eq!(a, ModelKey::new("mlp", "cr"));
+    }
+
+    #[test]
+    fn model_key_format_distinguishes_and_displays() {
+        let q10 = crate::fixed::QFormat::new(2, 10);
+        let a = ModelKey::new("tanh", "cr");
+        let b = ModelKey::with_fmt("tanh", "cr", q10);
+        assert_ne!(a, b);
+        // Default-format keys keep the historical display exactly.
+        assert_eq!(a.to_string(), "tanh/cr");
+        assert_eq!(b.to_string(), "tanh/cr@Q2.10");
+        assert_eq!(a, ModelKey::with_fmt("tanh", "cr", crate::fixed::Q2_13));
     }
 
     #[test]

@@ -47,6 +47,15 @@ impl Router {
         Router { families }
     }
 
+    /// Register a family directly (tests, and artifacts built outside a
+    /// manifest — e.g. per-[`crate::fixed::QFormat`] kernel builds).
+    /// Buckets are sorted/deduped; an existing entry is replaced.
+    pub fn register(&mut self, key: ModelKey, mut info: FamilyInfo) {
+        info.buckets.sort_unstable();
+        info.buckets.dedup();
+        self.families.insert(key, info);
+    }
+
     pub fn family(&self, key: &ModelKey) -> Option<&FamilyInfo> {
         self.families.get(key)
     }

@@ -1,11 +1,12 @@
 //! The serving loop: glues submit channel → batcher thread → worker pool.
 
 use super::batcher::{BatchPolicy, Batcher};
+use super::error::ServeError;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::{ModelKey, Request, Response};
 use super::router::Router;
 use super::worker::{spawn_workers, BackendFactory};
-use anyhow::{bail, Result};
+use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -54,8 +55,7 @@ impl Server {
         let policy = config.policy;
         let batcher_thread = std::thread::Builder::new()
             .name("batcher".into())
-            .spawn(move || batcher_loop(submit_rx, batch_tx, router, policy))
-            .expect("spawn batcher");
+            .spawn(move || batcher_loop(submit_rx, batch_tx, router, policy))?;
         Ok(Server {
             submit_tx: Some(submit_tx),
             batcher_thread: Some(batcher_thread),
@@ -71,14 +71,19 @@ impl Server {
     }
 
     /// Submit one sample; returns the channel the response arrives on.
+    ///
+    /// Fails with a typed [`ServeError`] — never panics — even when racing
+    /// a concurrent shutdown: a closed submit channel is
+    /// [`ServeError::ShutDown`], a contract violation is
+    /// [`ServeError::InvalidRequest`].
     pub fn submit(
         &self,
         key: ModelKey,
         payload: Vec<f32>,
-    ) -> Result<Receiver<Response>> {
+    ) -> Result<Receiver<Response>, ServeError> {
         self.router
             .validate(&key, payload.len())
-            .map_err(|e| anyhow::anyhow!(e))?;
+            .map_err(ServeError::InvalidRequest)?;
         let (reply, rx) = mpsc::channel();
         let req = Request {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
@@ -89,16 +94,18 @@ impl Server {
         };
         self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
         match &self.submit_tx {
-            Some(tx) => tx.send(req).map_err(|_| anyhow::anyhow!("server shut down"))?,
-            None => bail!("server shut down"),
+            Some(tx) => tx.send(req).map_err(|_| ServeError::ShutDown)?,
+            None => return Err(ServeError::ShutDown),
         }
         Ok(rx)
     }
 
-    /// Submit and block for the response.
-    pub fn submit_wait(&self, key: ModelKey, payload: Vec<f32>) -> Result<Response> {
+    /// Submit and block for the response. A reply channel that closes
+    /// before a response arrives (batch dropped mid-shutdown) surfaces as
+    /// [`ServeError::ChannelClosed`] rather than a panic.
+    pub fn submit_wait(&self, key: ModelKey, payload: Vec<f32>) -> Result<Response, ServeError> {
         let rx = self.submit(key, payload)?;
-        Ok(rx.recv()?)
+        rx.recv().map_err(|_| ServeError::ChannelClosed)
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -249,8 +256,14 @@ mod tests {
     fn invalid_payload_rejected_at_submit() {
         let s = start(4, 2);
         let key = ModelKey::new("tanh", "cr");
-        assert!(s.submit(key.clone(), vec![0.0; 7]).is_err());
-        assert!(s.submit(ModelKey::new("nope", "cr"), vec![0.0; 8]).is_err());
+        assert!(matches!(
+            s.submit(key.clone(), vec![0.0; 7]),
+            Err(ServeError::InvalidRequest(_))
+        ));
+        assert!(matches!(
+            s.submit(ModelKey::new("nope", "cr"), vec![0.0; 8]),
+            Err(ServeError::InvalidRequest(_))
+        ));
         s.shutdown();
     }
 

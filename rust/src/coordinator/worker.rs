@@ -162,7 +162,12 @@ pub fn spawn_workers(
                     };
                     loop {
                         let batch = {
-                            let guard = rx.lock().unwrap();
+                            // A sibling worker panicking mid-recv poisons
+                            // the mutex; the receiver itself is still
+                            // sound, so recover the guard instead of
+                            // cascading the panic through the whole pool.
+                            let guard =
+                                rx.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
                             match guard.recv() {
                                 Ok(b) => b,
                                 Err(_) => return, // channel closed: shutdown

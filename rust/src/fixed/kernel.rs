@@ -1,0 +1,486 @@
+//! Shared fixed-point kernel engine: one evaluation pipeline for every
+//! table-driven approximation method.
+//!
+//! Each method in `approx/` used to re-derive the same structure — fold
+//! the signed input to a magnitude, select table taps, run a coefficient
+//! MAC, round, saturate, restore the sign. A [`KernelPlan`] captures that
+//! structure as data (taps + tap-selection rule + coefficient rule +
+//! rounding/saturation policy) over an arbitrary [`QFormat`], and this
+//! module executes it: scalar [`KernelPlan::eval`] and the batch hot loop
+//! [`KernelPlan::eval_slice`]. At Q2.13 the engine is bit-identical to
+//! the seed per-method implementations (the exhaustive regression lives
+//! in `tests/integration_bitident.rs`); wider formats transparently move
+//! the MAC to i128 when the accumulator no longer fits 63 bits.
+
+use super::{round_shift, round_shift_half_even_i64, QFormat, Rounding};
+
+/// How a folded magnitude selects table taps.
+#[derive(Clone, Debug)]
+pub enum Select {
+    /// Uniform segments: `seg = u >> tbits`, interpolation factor is the
+    /// low `tbits` bits (CR, PWL, DCTIF).
+    Uniform { tbits: u32 },
+    /// Round to the nearest table node: `idx = (u + half) >> tbits`
+    /// (plain LUT).
+    Nearest { tbits: u32 },
+    /// Variable-width ranges: binary search over sorted `starts`
+    /// (`starts[0] == 0`), taps hold one output per range (RALUT).
+    Ranges { starts: Vec<i64> },
+    /// Pass-through / processing / saturation regions (region-based):
+    /// identity below `pass_end`, `sat_value` at or above `sat_start`,
+    /// table lookup at stride `2^step_shift` in between.
+    Regions { pass_end: i64, sat_start: i64, sat_value: i64, step_shift: u32 },
+}
+
+/// How the selected taps combine into an output.
+#[derive(Clone, Debug)]
+pub enum Coeff {
+    /// 4-tap Catmull-Rom cubic basis at `3·tbits` fraction bits.
+    CrBasis,
+    /// 2-tap linear interpolation at `tbits` fraction bits.
+    Linear,
+    /// 4-tap per-row coefficient MAC, row addressed by the top `abits`
+    /// of the interpolation factor (DCTIF).
+    Rows { rows: Vec<[i64; 4]>, abits: u32 },
+    /// Single-tap passthrough (plain LUT / RALUT / region table).
+    Unit,
+}
+
+/// A fully-specified fixed-point tanh kernel: format, taps, selection,
+/// coefficients, and the rounding/saturation policy applied after the MAC.
+#[derive(Clone, Debug)]
+pub struct KernelPlan {
+    fmt: QFormat,
+    taps: Vec<i64>,
+    select: Select,
+    coeff: Coeff,
+    /// Fraction bits dropped after the MAC (0 for Unit coefficients).
+    post_shift: u32,
+    rounding: Rounding,
+    /// Output magnitude saturation (the format's 1.0, for tanh).
+    clamp: i64,
+}
+
+/// Fold a signed raw input to `(negative, magnitude)` with the magnitude
+/// saturated to `max_mag` — tanh's odd symmetry lets every plan evaluate
+/// on the positive half-domain only.
+#[inline]
+pub fn fold_mag(x: i64, max_mag: i64) -> (bool, i64) {
+    if x < 0 {
+        (true, (-x).min(max_mag))
+    } else {
+        (false, x.min(max_mag))
+    }
+}
+
+/// The Catmull-Rom basis polynomials at integer `tu` with `tbits`
+/// fraction bits, scaled to `3·tbits` fraction bits. Requires
+/// `3·tbits <= 60` so every basis value fits i64.
+#[inline]
+pub fn cr_basis(tu: i64, tbits: u32) -> [i64; 4] {
+    let t1 = tu << (2 * tbits);
+    let t2 = (tu * tu) << tbits;
+    let t3 = tu * tu * tu;
+    let one = 1i64 << (3 * tbits);
+    [
+        -t3 + 2 * t2 - t1,
+        3 * t3 - 5 * t2 + 2 * one,
+        -3 * t3 + 4 * t2 + t1,
+        t3 - t2,
+    ]
+}
+
+impl KernelPlan {
+    /// Catmull-Rom cubic plan. `taps` is the extended 4-tap read table
+    /// (`taps[i] = P(i - 1)`, odd-extended below zero), rounded half-even
+    /// at `3·tbits + 1` dropped bits.
+    pub fn catmull_rom(fmt: QFormat, tbits: u32, taps: Vec<i64>) -> Self {
+        assert!(tbits >= 1 && 3 * tbits <= 60, "tbits={tbits} out of range for the CR basis");
+        assert!(
+            (fmt.max_raw() >> tbits) as usize + 4 <= taps.len(),
+            "CR tap table too short for {fmt}"
+        );
+        Self {
+            fmt,
+            taps,
+            select: Select::Uniform { tbits },
+            coeff: Coeff::CrBasis,
+            post_shift: 3 * tbits + 1,
+            rounding: Rounding::HalfEven,
+            clamp: fmt.scale(),
+        }
+    }
+
+    /// Piecewise-linear plan over `taps[seg]..taps[seg+1]`.
+    pub fn linear(fmt: QFormat, tbits: u32, taps: Vec<i64>) -> Self {
+        assert!(tbits >= 1, "linear plan needs tbits >= 1");
+        assert!(
+            (fmt.max_raw() >> tbits) as usize + 2 <= taps.len(),
+            "PWL tap table too short for {fmt}"
+        );
+        Self {
+            fmt,
+            taps,
+            select: Select::Uniform { tbits },
+            coeff: Coeff::Linear,
+            post_shift: tbits,
+            rounding: Rounding::HalfEven,
+            clamp: fmt.scale(),
+        }
+    }
+
+    /// Nearest-node lookup plan.
+    pub fn nearest(fmt: QFormat, tbits: u32, taps: Vec<i64>) -> Self {
+        assert!(tbits >= 1, "nearest plan needs tbits >= 1");
+        assert!(
+            (((fmt.max_raw() + (1 << (tbits - 1))) >> tbits) as usize) < taps.len(),
+            "LUT too short for {fmt}"
+        );
+        Self {
+            fmt,
+            taps,
+            select: Select::Nearest { tbits },
+            coeff: Coeff::Unit,
+            post_shift: 0,
+            rounding: Rounding::HalfEven,
+            clamp: fmt.scale(),
+        }
+    }
+
+    /// Range-addressable plan: `starts` sorted ascending from 0, `ys`
+    /// the per-range outputs.
+    pub fn ranges(fmt: QFormat, starts: Vec<i64>, ys: Vec<i64>) -> Self {
+        assert_eq!(starts.len(), ys.len(), "ranges/outputs length mismatch");
+        assert!(!starts.is_empty() && starts[0] == 0, "ranges must start at 0");
+        assert!(starts.windows(2).all(|w| w[0] < w[1]), "range starts must be sorted");
+        Self {
+            fmt,
+            taps: ys,
+            select: Select::Ranges { starts },
+            coeff: Coeff::Unit,
+            post_shift: 0,
+            rounding: Rounding::HalfEven,
+            clamp: fmt.scale(),
+        }
+    }
+
+    /// Three-region plan (pass / table / saturation).
+    pub fn regions(
+        fmt: QFormat,
+        pass_end: i64,
+        sat_start: i64,
+        sat_value: i64,
+        step_shift: u32,
+        taps: Vec<i64>,
+    ) -> Self {
+        assert!(pass_end <= sat_start, "pass region must precede saturation");
+        assert!(!taps.is_empty(), "processing region table is empty");
+        Self {
+            fmt,
+            taps,
+            select: Select::Regions { pass_end, sat_start, sat_value, step_shift },
+            coeff: Coeff::Unit,
+            post_shift: 0,
+            rounding: Rounding::HalfEven,
+            clamp: fmt.scale(),
+        }
+    }
+
+    /// Per-row coefficient MAC plan (DCTIF): 4 taps from the extended
+    /// table, weights from `rows[tu >> (tbits - abits)]` at `cfrac`
+    /// fraction bits.
+    pub fn rows(fmt: QFormat, tbits: u32, abits: u32, cfrac: u32, rows: Vec<[i64; 4]>, taps: Vec<i64>) -> Self {
+        assert!(abits <= tbits, "abits={abits} exceeds tbits={tbits}");
+        assert_eq!(rows.len(), 1usize << abits, "need one coefficient row per address");
+        assert!(cfrac >= 1, "rows plan needs cfrac >= 1");
+        assert!(
+            (fmt.max_raw() >> tbits) as usize + 4 <= taps.len(),
+            "DCTIF tap table too short for {fmt}"
+        );
+        Self {
+            fmt,
+            taps,
+            select: Select::Uniform { tbits },
+            coeff: Coeff::Rows { rows, abits },
+            post_shift: cfrac,
+            rounding: Rounding::HalfEven,
+            clamp: fmt.scale(),
+        }
+    }
+
+    pub fn fmt(&self) -> QFormat {
+        self.fmt
+    }
+
+    /// The extended tap table (CR ablation paths index it directly).
+    pub fn taps(&self) -> &[i64] {
+        &self.taps
+    }
+
+    /// Whether the 4-tap MAC accumulator fits i64 for this plan.
+    #[inline]
+    fn mac_fits_i64(&self) -> bool {
+        // |acc| < 4 · scale · 2^post_shift  =>  frac + post_shift + 3 bits.
+        self.fmt.frac_bits + self.post_shift + 3 <= 63
+    }
+
+    /// Scalar evaluation of a signed raw input in `fmt`.
+    pub fn eval(&self, x: i64) -> i64 {
+        let (neg, u) = fold_mag(x, self.fmt.max_raw());
+        let y = self.eval_mag(u);
+        if neg {
+            -y
+        } else {
+            y
+        }
+    }
+
+    /// Evaluate the positive-side magnitude `u` (0 ..= max_raw).
+    fn eval_mag(&self, u: i64) -> i64 {
+        let y = match (&self.select, &self.coeff) {
+            (Select::Uniform { tbits }, Coeff::CrBasis) => {
+                let tb = *tbits;
+                let seg = (u >> tb) as usize;
+                let tu = u & ((1i64 << tb) - 1);
+                let b = cr_basis(tu, tb);
+                let taps = &self.taps[seg..seg + 4];
+                let acc = taps[0] as i128 * b[0] as i128
+                    + taps[1] as i128 * b[1] as i128
+                    + taps[2] as i128 * b[2] as i128
+                    + taps[3] as i128 * b[3] as i128;
+                round_shift(acc, self.post_shift, self.rounding)
+            }
+            (Select::Uniform { tbits }, Coeff::Linear) => {
+                let tb = *tbits;
+                let seg = (u >> tb) as usize;
+                let tu = u & ((1i64 << tb) - 1);
+                let one = 1i64 << tb;
+                let acc = self.taps[seg] * (one - tu) + self.taps[seg + 1] * tu;
+                round_shift(acc as i128, self.post_shift, self.rounding)
+            }
+            (Select::Uniform { tbits }, Coeff::Rows { rows, abits }) => {
+                let tb = *tbits;
+                let seg = (u >> tb) as usize;
+                let tu = u & ((1i64 << tb) - 1);
+                let w = &rows[(tu >> (tb - abits)) as usize];
+                let taps = &self.taps[seg..seg + 4];
+                let acc = taps[0] as i128 * w[0] as i128
+                    + taps[1] as i128 * w[1] as i128
+                    + taps[2] as i128 * w[2] as i128
+                    + taps[3] as i128 * w[3] as i128;
+                round_shift(acc, self.post_shift, self.rounding)
+            }
+            (Select::Nearest { tbits }, Coeff::Unit) => {
+                let idx = ((u + (1i64 << (tbits - 1))) >> tbits) as usize;
+                self.taps[idx.min(self.taps.len() - 1)]
+            }
+            (Select::Ranges { starts }, Coeff::Unit) => {
+                let idx = match starts.binary_search(&u) {
+                    Ok(i) => i,
+                    Err(i) => i - 1,
+                };
+                self.taps[idx.min(self.taps.len() - 1)]
+            }
+            (Select::Regions { pass_end, sat_start, sat_value, step_shift }, Coeff::Unit) => {
+                if u < *pass_end {
+                    u
+                } else if u >= *sat_start {
+                    *sat_value
+                } else {
+                    let idx = ((u - pass_end) >> step_shift) as usize;
+                    self.taps[idx.min(self.taps.len() - 1)]
+                }
+            }
+            _ => unreachable!("unsupported select/coeff combination"),
+        };
+        y.clamp(-self.clamp, self.clamp)
+    }
+
+    /// Batch evaluation: raw inputs/outputs in `fmt` (the format must fit
+    /// i32, i.e. `fmt.width() <= 31`). Hot loops hoist the per-plan
+    /// constants exactly like the seed per-method slice paths did.
+    pub fn eval_slice(&self, xs: &[i32], out: &mut [i32]) {
+        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
+        let max_mag = self.fmt.max_raw();
+        let clamp = self.clamp;
+        match (&self.select, &self.coeff) {
+            (Select::Uniform { tbits }, Coeff::CrBasis)
+                if self.mac_fits_i64() && matches!(self.rounding, Rounding::HalfEven) =>
+            {
+                let tb = *tbits;
+                let tmask = (1i64 << tb) - 1;
+                let one = 1i64 << (3 * tb);
+                let n = self.post_shift;
+                let taps_all = &self.taps[..];
+                for (x, o) in xs.iter().zip(out.iter_mut()) {
+                    let (neg, u) = fold_mag(*x as i64, max_mag);
+                    let seg = (u >> tb) as usize;
+                    let tu = u & tmask;
+                    let t1 = tu << (2 * tb);
+                    let t2 = (tu * tu) << tb;
+                    let t3 = tu * tu * tu;
+                    let b0 = -t3 + 2 * t2 - t1;
+                    let b1 = 3 * t3 - 5 * t2 + 2 * one;
+                    let b2 = -3 * t3 + 4 * t2 + t1;
+                    let b3 = t3 - t2;
+                    let taps = &taps_all[seg..seg + 4];
+                    let acc = taps[0] * b0 + taps[1] * b1 + taps[2] * b2 + taps[3] * b3;
+                    let y = round_shift_half_even_i64(acc, n).clamp(-clamp, clamp);
+                    *o = (if neg { -y } else { y }) as i32;
+                }
+            }
+            (Select::Uniform { tbits }, Coeff::Linear)
+                if matches!(self.rounding, Rounding::HalfEven) =>
+            {
+                let tb = *tbits;
+                let tmask = (1i64 << tb) - 1;
+                let one = 1i64 << tb;
+                let taps_all = &self.taps[..];
+                for (x, o) in xs.iter().zip(out.iter_mut()) {
+                    let (neg, u) = fold_mag(*x as i64, max_mag);
+                    let seg = (u >> tb) as usize;
+                    let tu = u & tmask;
+                    let acc = taps_all[seg] * (one - tu) + taps_all[seg + 1] * tu;
+                    let y = round_shift_half_even_i64(acc, tb).clamp(-clamp, clamp);
+                    *o = (if neg { -y } else { y }) as i32;
+                }
+            }
+            (Select::Uniform { tbits }, Coeff::Rows { rows, abits })
+                if self.mac_fits_i64() && matches!(self.rounding, Rounding::HalfEven) =>
+            {
+                let tb = *tbits;
+                let tmask = (1i64 << tb) - 1;
+                let ashift = tb - abits;
+                let n = self.post_shift;
+                let taps_all = &self.taps[..];
+                for (x, o) in xs.iter().zip(out.iter_mut()) {
+                    let (neg, u) = fold_mag(*x as i64, max_mag);
+                    let seg = (u >> tb) as usize;
+                    let tu = u & tmask;
+                    let w = &rows[(tu >> ashift) as usize];
+                    let taps = &taps_all[seg..seg + 4];
+                    let acc = taps[0] * w[0] + taps[1] * w[1] + taps[2] * w[2] + taps[3] * w[3];
+                    let y = round_shift_half_even_i64(acc, n).clamp(-clamp, clamp);
+                    *o = (if neg { -y } else { y }) as i32;
+                }
+            }
+            (Select::Nearest { tbits }, Coeff::Unit) => {
+                let tb = *tbits;
+                let half = 1i64 << (tb - 1);
+                let taps_all = &self.taps[..];
+                for (x, o) in xs.iter().zip(out.iter_mut()) {
+                    let (neg, u) = fold_mag(*x as i64, max_mag);
+                    let y = taps_all[((u + half) >> tb) as usize];
+                    *o = (if neg { -y } else { y }) as i32;
+                }
+            }
+            (Select::Ranges { starts }, Coeff::Unit) => {
+                let taps_all = &self.taps[..];
+                for (x, o) in xs.iter().zip(out.iter_mut()) {
+                    let (neg, u) = fold_mag(*x as i64, max_mag);
+                    let idx = match starts.binary_search(&u) {
+                        Ok(i) => i,
+                        Err(i) => i - 1,
+                    };
+                    let y = taps_all[idx];
+                    *o = (if neg { -y } else { y }) as i32;
+                }
+            }
+            _ => {
+                for (x, o) in xs.iter().zip(out.iter_mut()) {
+                    *o = self.eval(*x as i64) as i32;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q2_13;
+
+    fn toy_cr_plan() -> KernelPlan {
+        // tanh-shaped monotone table over k=3-style geometry at Q2.13.
+        let lut = crate::approx::tanh_ref::build_lut(3, 2);
+        let ext = crate::approx::tanh_ref::extend_lut(&lut, 32, false);
+        KernelPlan::catmull_rom(Q2_13, 10, ext)
+    }
+
+    #[test]
+    fn fold_saturates_and_splits_sign() {
+        assert_eq!(fold_mag(-32768, 32767), (true, 32767));
+        assert_eq!(fold_mag(-5, 32767), (true, 5));
+        assert_eq!(fold_mag(7, 32767), (false, 7));
+        assert_eq!(fold_mag(0, 32767), (false, 0));
+    }
+
+    #[test]
+    fn cr_basis_partition_of_unity() {
+        // The four basis polynomials sum to 2 (the plan divides by 2 in
+        // its post-shift of 3·tbits + 1).
+        for tb in [3u32, 10, 18] {
+            for tu in [0i64, 1, (1 << tb) / 2, (1 << tb) - 1] {
+                let b = cr_basis(tu, tb);
+                assert_eq!(b.iter().sum::<i64>(), 2i64 << (3 * tb), "tb={tb} tu={tu}");
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_and_slice_agree() {
+        let plan = toy_cr_plan();
+        let xs: Vec<i32> = (-32768..=32767).step_by(61).collect();
+        let mut out = vec![0i32; xs.len()];
+        plan.eval_slice(&xs, &mut out);
+        for (x, y) in xs.iter().zip(&out) {
+            assert_eq!(*y, plan.eval(*x as i64) as i32, "x={x}");
+        }
+    }
+
+    #[test]
+    fn odd_symmetry_everywhere() {
+        let plan = toy_cr_plan();
+        for x in (0..=32767).step_by(97) {
+            assert_eq!(plan.eval(-x), -plan.eval(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn linear_plan_exact_at_nodes() {
+        let lut = crate::approx::tanh_ref::build_lut(3, 1);
+        let plan = KernelPlan::linear(Q2_13, 10, lut.iter().map(|&p| p as i64).collect());
+        for seg in 0..32i64 {
+            assert_eq!(plan.eval(seg << 10), lut[seg as usize] as i64, "seg={seg}");
+        }
+    }
+
+    #[test]
+    fn wide_format_falls_back_to_i128_and_stays_odd() {
+        // Q2.21, k=3 -> tbits=18: the MAC needs 21 + 55 + 3 > 63 bits.
+        let fmt = crate::fixed::QFormat::new(2, 21);
+        let lut = crate::approx::tanh_ref::build_lut_fmt(3, 2, fmt);
+        let ext = crate::approx::tanh_ref::extend_lut(&lut, 32, false);
+        let plan = KernelPlan::catmull_rom(fmt, 18, ext);
+        assert!(!plan.mac_fits_i64());
+        let xs: Vec<i32> = (0..fmt.max_raw() as i32).step_by(65_537).collect();
+        let mut pos = vec![0i32; xs.len()];
+        let neg_xs: Vec<i32> = xs.iter().map(|x| -x).collect();
+        let mut neg = vec![0i32; xs.len()];
+        plan.eval_slice(&xs, &mut pos);
+        plan.eval_slice(&neg_xs, &mut neg);
+        for i in 0..xs.len() {
+            assert_eq!(pos[i], -neg[i], "x={}", xs[i]);
+            assert_eq!(pos[i] as i64, plan.eval(xs[i] as i64));
+            assert!(pos[i] as i64 <= fmt.scale());
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "length mismatch")]
+    fn slice_length_mismatch_panics() {
+        let plan = toy_cr_plan();
+        let mut out = vec![0i32; 3];
+        plan.eval_slice(&[1, 2], &mut out);
+    }
+}

@@ -8,10 +8,12 @@
 //! rounding and saturation.
 
 mod fx;
+pub mod kernel;
 mod qformat;
 mod rounding;
 
 pub use fx::Fx;
+pub use kernel::{Coeff, KernelPlan, Select};
 pub use qformat::QFormat;
 pub use rounding::{round_shift, round_shift_half_even_i64, Rounding};
 

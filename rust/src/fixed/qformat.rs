@@ -4,7 +4,7 @@
 ///
 /// A value with raw integer `r` represents the real number `r · 2^-frac_bits`;
 /// the representable range is `[-2^int_bits, 2^int_bits - 2^-frac_bits]`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct QFormat {
     pub int_bits: u32,
     pub frac_bits: u32,
@@ -54,6 +54,35 @@ impl QFormat {
     #[inline]
     pub fn saturate(&self, raw: i64) -> i64 {
         raw.clamp(self.min_raw(), self.max_raw())
+    }
+
+    /// Quantize an f64 to a raw value in this format: round-half-even
+    /// (banker's rounding, matching `numpy.round`) then saturate. The
+    /// format-generic form of [`crate::fixed::q13`]; at Q2.13 the two are
+    /// bit-identical.
+    #[inline]
+    pub fn quantize(&self, v: f64) -> i64 {
+        let scaled = v * self.scale() as f64;
+        let r = super::round_half_even(scaled);
+        r.clamp(self.min_raw() as f64, self.max_raw() as f64) as i64
+    }
+
+    /// Value of a raw integer in this format as f64.
+    #[inline]
+    pub fn to_f64(&self, raw: i64) -> f64 {
+        raw as f64 * self.ulp()
+    }
+
+    /// Parse "Q<int>.<frac>" (e.g. "Q2.13", case-insensitive prefix).
+    pub fn parse(s: &str) -> Option<QFormat> {
+        let body = s.trim().strip_prefix(['Q', 'q'])?;
+        let (i, f) = body.split_once('.')?;
+        let int_bits: u32 = i.parse().ok()?;
+        let frac_bits: u32 = f.parse().ok()?;
+        if frac_bits == 0 || 1 + int_bits + frac_bits > 31 {
+            return None;
+        }
+        Some(QFormat::new(int_bits, frac_bits))
     }
 
     /// Format resulting from full-precision multiplication.
@@ -109,5 +138,45 @@ mod tests {
     #[test]
     fn display_format() {
         assert_eq!(QFormat::new(2, 13).to_string(), "Q2.13");
+    }
+
+    #[test]
+    fn quantize_matches_q13_exhaustively_sampled() {
+        let q = QFormat::new(2, 13);
+        for i in -45_000..=45_000 {
+            let v = i as f64 * 1e-4;
+            assert_eq!(q.quantize(v), crate::fixed::q13(v) as i64, "v={v}");
+        }
+        assert_eq!(q.quantize(10.0), 32767);
+        assert_eq!(q.quantize(-10.0), -32768);
+    }
+
+    #[test]
+    fn quantize_roundtrip_within_half_ulp() {
+        for fmt in [QFormat::new(2, 7), QFormat::new(2, 13), QFormat::new(2, 21)] {
+            for i in -100..=100 {
+                let v = i as f64 * 0.03;
+                let err = (fmt.to_f64(fmt.quantize(v)) - v).abs();
+                assert!(err <= fmt.ulp() / 2.0 + 1e-12, "{fmt} v={v} err={err}");
+            }
+        }
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(QFormat::parse("Q2.13"), Some(QFormat::new(2, 13)));
+        assert_eq!(QFormat::parse("q2.21"), Some(QFormat::new(2, 21)));
+        assert_eq!(QFormat::parse(" Q2.7 "), Some(QFormat::new(2, 7)));
+        assert_eq!(QFormat::parse("2.13"), None);
+        assert_eq!(QFormat::parse("Q2.0"), None);
+        assert_eq!(QFormat::parse("Q40.40"), None);
+        assert_eq!(QFormat::parse("Qx.y"), None);
+    }
+
+    #[test]
+    fn formats_order_by_int_then_frac() {
+        assert!(QFormat::new(2, 7) < QFormat::new(2, 13));
+        assert!(QFormat::new(2, 13) < QFormat::new(2, 21));
+        assert!(QFormat::new(2, 21) < QFormat::new(3, 7));
     }
 }

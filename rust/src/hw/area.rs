@@ -172,35 +172,63 @@ pub fn lut_logic_ge(contents: &[i64], out_bits: u32) -> f64 {
 // ---------------------------------------------------------------------------
 
 /// The internal MAC precision the CR datapath keeps (fraction bits of the
-/// product P·b that survive truncation). 13 output bits + 3 guard bits.
+/// product P·b that survive truncation). 13 output bits + 3 guard bits —
+/// the Q2.13 value of [`mac_keep_frac`].
 pub const MAC_KEEP_FRAC: u32 = 16;
 
+/// MAC fraction bits kept for an arbitrary format: the output fraction
+/// plus 3 guard bits (16 at Q2.13).
+pub fn mac_keep_frac(fmt: crate::fixed::QFormat) -> u32 {
+    fmt.frac_bits + 3
+}
+
+/// Address-bus width of a table with `entries` words (6 for the paper's
+/// 34-entry control-point store).
+fn addr_bits(entries: usize) -> u32 {
+    (entries.max(2) as u64).next_power_of_two().ilog2()
+}
+
 /// Resources of the Catmull-Rom implementation (Fig. 2/3, t-polynomial
-/// variant — the paper's smallest-area configuration).
+/// variant — the paper's smallest-area configuration) at Q2.13.
 ///
 /// * `entries` — stored control points (depth + boundary guards)
 /// * `tbits` — interpolation-factor width (13 − k)
 /// * `basis_frac` — fraction bits of the basis bus entering the MAC
 pub fn catmull_rom_resources(entries: usize, tbits: u32, basis_frac: u32) -> Resources {
+    catmull_rom_resources_fmt(entries, tbits, basis_frac, crate::fixed::Q2_13)
+}
+
+/// Format-parameterized CR area model: every bus width is derived from
+/// `fmt` (at Q2.13 this reproduces [`catmull_rom_resources`] exactly —
+/// the magnitude bus is `width − 1` bits, the P bus `frac + 1`, the MAC
+/// keeps `frac + 3` fraction bits).
+pub fn catmull_rom_resources_fmt(
+    entries: usize,
+    tbits: u32,
+    basis_frac: u32,
+    fmt: crate::fixed::QFormat,
+) -> Resources {
     let mut r = Resources::new("cr-spline");
-    let pbits = 14; // Q2.13 magnitude+sign on the positive-side bus
+    let frac = fmt.frac_bits;
+    let pbits = frac + 1; // magnitude+sign on the positive-side bus
+    let keep_frac = mac_keep_frac(fmt);
 
     // Input fold (two's-complement negate) and output negate.
-    r.add("input fold", negator_ge(15));
-    r.add("output negate", negator_ge(14));
+    r.add("input fold", negator_ge(fmt.width() - 1));
+    r.add("output negate", negator_ge(frac + 1));
 
     // Control-point unit: the LUT is banked 4 ways on idx[1:0] so the four
     // adjacent reads P(s-1..s+2) each hit a different bank; three small
     // index adders compute the neighbour addresses and a rotation layer
     // reorders bank outputs.
     let bank_entries = entries.div_ceil(4);
-    let bank: Vec<i64> = dummy_bank_placeholder(entries, bank_entries);
-    let bank_ge = lut_logic_ge(&bank, 13);
+    let bank: Vec<i64> = representative_bank(entries, bank_entries, fmt);
+    let bank_ge = lut_logic_ge(&bank, frac);
     r.add("P LUT (4 banks, QMC logic)", 4.0 * bank_ge);
-    r.add("index adders", 3.0 * adder_ge(6));
-    r.add("bank rotation", 4.0 * muxn_ge(4, 13));
+    r.add("index adders", 3.0 * adder_ge(addr_bits(entries)));
+    r.add("bank rotation", 4.0 * muxn_ge(4, frac));
     // P(-1) odd extension: conditional negate on one port.
-    r.add("P(-1) negate", negator_ge(14));
+    r.add("P(-1) negate", negator_ge(frac + 1));
 
     // t-vector unit (polynomial variant): t², t³ with LSB truncation down
     // to basis precision, then the four cubic polynomials via shift-add.
@@ -216,25 +244,25 @@ pub fn catmull_rom_resources(entries: usize, tbits: u32, basis_frac: u32) -> Res
     // polynomial assembly: b0 (2 adds), b1 (2 adds), b2 (2 adds), b3 (1 add)
     r.add("basis adders", 7.0 * adder_ge(bw));
 
-    // MAC: four P×b multipliers truncated to MAC_KEEP_FRAC fraction bits,
+    // MAC: four P×b multipliers truncated to the kept fraction bits,
     // then a 3-adder balanced tree and the final rounder (÷2 is wiring).
     // The four basis polynomials have very different ranges (|b0|, |b3| ≤
     // 0.16; b2 ≤ 1.12; b1 ≤ 2), so each tap's multiplier is narrowed to
     // the bits its operand actually carries — a standard synthesis win.
-    let prod_full = 13 + basis_frac; // fraction bits of the full product
-    let drop = prod_full.saturating_sub(MAC_KEEP_FRAC);
+    let prod_full = frac + basis_frac; // fraction bits of the full product
+    let drop = prod_full.saturating_sub(keep_frac);
     let tap_bw = [basis_frac - 3, basis_frac + 3, basis_frac + 1, basis_frac - 3];
     let mac: f64 = tap_bw
         .iter()
         .map(|&w| multiplier_ge(pbits, w, drop.min(pbits + w - 2)))
         .sum();
     r.add("MAC multipliers (4 taps)", mac);
-    let acc_w = MAC_KEEP_FRAC + 4;
+    let acc_w = keep_frac + 4;
     r.add("MAC adder tree", 3.0 * adder_ge(acc_w));
-    r.add("final rounder", adder_ge(14) * 0.5); // HA chain
+    r.add("final rounder", adder_ge(frac + 1) * 0.5); // HA chain
 
     // Pipeline registers (2-stage: basis / MAC boundary + output stage).
-    r.add_regs("pipeline", (4 * bw + 4 * 14) + 16);
+    r.add_regs("pipeline", (4 * bw + 4 * (frac + 1)) + fmt.width());
     r
 }
 
@@ -243,7 +271,17 @@ pub fn catmull_rom_resources(entries: usize, tbits: u32, basis_frac: u32) -> Res
 /// faster if the vector containing polynomial in t is also stored in
 /// LUTs; however, the area is larger").
 pub fn catmull_rom_tlut_resources(entries: usize, tbits: u32, basis_frac: u32) -> Resources {
-    let mut base = catmull_rom_resources(entries, tbits, basis_frac);
+    catmull_rom_tlut_resources_fmt(entries, tbits, basis_frac, crate::fixed::Q2_13)
+}
+
+/// Format-parameterized t-LUT variant (see [`catmull_rom_tlut_resources`]).
+pub fn catmull_rom_tlut_resources_fmt(
+    entries: usize,
+    tbits: u32,
+    basis_frac: u32,
+    fmt: crate::fixed::QFormat,
+) -> Resources {
+    let mut base = catmull_rom_resources_fmt(entries, tbits, basis_frac, fmt);
     base.name = "cr-spline-tlut".into();
     // Remove the polynomial unit blocks and replace with a 2^tbits × 4·bw LUT.
     let bw = basis_frac + 3;
@@ -272,48 +310,67 @@ pub fn catmull_rom_tlut_resources(entries: usize, tbits: u32, basis_frac: u32) -
 
 // The 4-way banked LUT is costed on the *actual* tanh contents; this
 // builds bank 0 (indices 0,4,8,...) — banks differ only marginally in
-// minimized size, so bank 0 is used as the representative.
-fn dummy_bank_placeholder(entries: usize, bank_entries: usize) -> Vec<i64> {
-    let k = match entries {
-        0..=11 => 1,
-        12..=19 => 2,
-        20..=35 => 3,
-        _ => 4,
-    };
-    let lut = crate::approx::tanh_ref::build_lut(k, 2);
+// minimized size, so bank 0 is used as the representative. The sampling
+// period is inferred from the entry count (`entries ≈ 2^(k+int_bits) +
+// guards`), matching how the method constructors size their tables.
+fn representative_bank(entries: usize, bank_entries: usize, fmt: crate::fixed::QFormat) -> Vec<i64> {
+    let mut k = 4;
+    for cand in 1..4u32 {
+        if (1usize << (cand + fmt.int_bits)) + 3 >= entries {
+            k = cand;
+            break;
+        }
+    }
+    let k = k.min(fmt.frac_bits - 1);
+    let lut = crate::approx::tanh_ref::build_lut_fmt(k, 2, fmt);
     (0..bank_entries).map(|i| lut[(4 * i).min(lut.len() - 1)] as i64).collect()
 }
 
-/// PWL datapath: two LUT banks (even/odd), one subtractor, one multiplier
-/// (Δ×t), one adder, fold/negate.
+/// PWL datapath at Q2.13: two LUT banks (even/odd), one subtractor, one
+/// multiplier (Δ×t), one adder, fold/negate.
 pub fn pwl_resources(entries: usize, tbits: u32) -> Resources {
+    pwl_resources_fmt(entries, tbits, crate::fixed::Q2_13)
+}
+
+/// Format-parameterized PWL area model (identical to [`pwl_resources`]
+/// at Q2.13).
+pub fn pwl_resources_fmt(entries: usize, tbits: u32, fmt: crate::fixed::QFormat) -> Resources {
     let mut r = Resources::new("pwl");
-    r.add("input fold", negator_ge(15));
-    r.add("output negate", negator_ge(14));
+    let frac = fmt.frac_bits;
+    r.add("input fold", negator_ge(fmt.width() - 1));
+    r.add("output negate", negator_ge(frac + 1));
     let bank_entries = entries.div_ceil(2);
-    let bank = dummy_bank_placeholder(entries, bank_entries);
-    r.add("P LUT (2 banks, QMC logic)", 2.0 * lut_logic_ge(&bank, 13));
-    r.add("index adder", adder_ge(6));
-    r.add("bank swap", 2.0 * mux2_ge(13));
-    r.add("delta subtract", adder_ge(14));
+    let bank = representative_bank(entries, bank_entries, fmt);
+    r.add("P LUT (2 banks, QMC logic)", 2.0 * lut_logic_ge(&bank, frac));
+    r.add("index adder", adder_ge(addr_bits(entries)));
+    r.add("bank swap", 2.0 * mux2_ge(frac));
+    r.add("delta subtract", adder_ge(frac + 1));
     // Δ is at most one LUT step (≈ h) so the multiplier is narrow.
-    let delta_bits = 11;
-    let drop = (delta_bits + tbits).saturating_sub(MAC_KEEP_FRAC);
+    let delta_bits = frac - 2;
+    let drop = (delta_bits + tbits).saturating_sub(mac_keep_frac(fmt));
     r.add("delta×t multiplier", multiplier_ge(delta_bits, tbits, drop));
-    r.add("final add + round", adder_ge(14) + adder_ge(14) * 0.5);
-    r.add_regs("pipeline", 16 + 14);
+    r.add("final add + round", adder_ge(frac + 1) + adder_ge(frac + 1) * 0.5);
+    r.add_regs("pipeline", fmt.width() + frac + 1);
     r
 }
 
-/// Plain nearest-entry LUT: rounding adder on the index + one logic LUT.
+/// Plain nearest-entry LUT at Q2.13: rounding adder on the index + one
+/// logic LUT.
 pub fn plain_lut_resources(entries: usize) -> Resources {
+    plain_lut_resources_fmt(entries, crate::fixed::Q2_13)
+}
+
+/// Format-parameterized plain-LUT area model (identical to
+/// [`plain_lut_resources`] at Q2.13).
+pub fn plain_lut_resources_fmt(entries: usize, fmt: crate::fixed::QFormat) -> Resources {
     let mut r = Resources::new("plain-lut");
-    r.add("input fold", negator_ge(15));
-    r.add("output negate", negator_ge(14));
-    let lut = dummy_bank_placeholder(entries, entries);
-    r.add("LUT (QMC logic)", lut_logic_ge(&lut, 13));
-    r.add("round-to-nearest index", adder_ge(7));
-    r.add_regs("pipeline", 16);
+    let frac = fmt.frac_bits;
+    r.add("input fold", negator_ge(fmt.width() - 1));
+    r.add("output negate", negator_ge(frac + 1));
+    let lut = representative_bank(entries, entries, fmt);
+    r.add("LUT (QMC logic)", lut_logic_ge(&lut, frac));
+    r.add("round-to-nearest index", adder_ge(addr_bits(entries)));
+    r.add_regs("pipeline", fmt.width());
     r
 }
 
@@ -392,5 +449,27 @@ mod tests {
         let r = catmull_rom_resources(34, 10, 16);
         let sum: f64 = r.breakdown.iter().map(|(_, g)| g).sum();
         assert!((sum - (r.comb_ge + r.reg_ge)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fmt_models_reproduce_legacy_at_q2_13() {
+        let q = crate::fixed::Q2_13;
+        assert_eq!(mac_keep_frac(q), MAC_KEEP_FRAC);
+        let legacy = catmull_rom_resources(34, 10, 16);
+        let fmt = catmull_rom_resources_fmt(34, 10, 16, q);
+        assert_eq!(legacy.gates(), fmt.gates());
+        assert_eq!(pwl_resources(33, 10).gates(), pwl_resources_fmt(33, 10, q).gates());
+        assert_eq!(plain_lut_resources(65).gates(), plain_lut_resources_fmt(65, q).gates());
+    }
+
+    #[test]
+    fn wider_format_costs_more_area() {
+        // Same k=3 geometry at three wordlengths: area must grow with the
+        // datapath width (the wordlength-sweep cost axis).
+        let narrow = catmull_rom_resources_fmt(35, 7, 10, crate::fixed::QFormat::new(2, 10));
+        let mid = catmull_rom_resources_fmt(34, 10, 16, crate::fixed::Q2_13);
+        let wide = catmull_rom_resources_fmt(35, 18, 24, crate::fixed::QFormat::new(2, 21));
+        assert!(narrow.gates() < mid.gates(), "{} vs {}", narrow.gates(), mid.gates());
+        assert!(mid.gates() < wide.gates(), "{} vs {}", mid.gates(), wide.gates());
     }
 }

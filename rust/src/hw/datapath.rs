@@ -17,7 +17,7 @@
 //! accuracy and area for clock speed exactly as §V describes.
 
 use crate::approx::tanh_ref;
-use crate::fixed::{round_shift, Rounding};
+use crate::fixed::{kernel, round_shift, QFormat, Rounding, Q2_13};
 
 /// Which t-vector unit the datapath instantiates (§V trade-off).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -59,6 +59,7 @@ struct S3Reg {
 pub struct CrDatapath {
     k: u32,
     tbits: u32,
+    fmt: QFormat,
     lut: Vec<i32>,
     variant: TVariant,
     /// Basis LUT for the `TVariant::Lut` configuration.
@@ -75,7 +76,20 @@ pub const LATENCY: usize = 4;
 impl CrDatapath {
     pub fn new(k: u32, variant: TVariant) -> Self {
         assert!((1..=4).contains(&k));
-        let tbits = 13 - k;
+        Self::new_fmt(k, variant, Q2_13)
+    }
+
+    /// Format-parameterized datapath; bit-identical to [`CrDatapath::new`]
+    /// at Q2.13. The format must keep the MAC accumulator inside the
+    /// modelled register width (`frac + 3·tbits + 3` bits ≤ 63).
+    pub fn new_fmt(k: u32, variant: TVariant, fmt: QFormat) -> Self {
+        assert!(fmt.width() <= 31, "{fmt} raw values must fit i32");
+        assert!(k >= 1 && fmt.frac_bits > k && fmt.frac_bits - k >= 3, "k={k} out of range for {fmt}");
+        let tbits = fmt.frac_bits - k;
+        assert!(
+            fmt.frac_bits + 3 * tbits + 3 <= 63,
+            "MAC register overflows i64 for {fmt} at k={k}"
+        );
         let basis_lut = match variant {
             TVariant::Poly => Vec::new(),
             TVariant::Lut { addr_bits } => {
@@ -94,7 +108,8 @@ impl CrDatapath {
         Self {
             k,
             tbits,
-            lut: tanh_ref::build_lut(k, 2),
+            fmt,
+            lut: tanh_ref::build_lut_fmt(k, 2, fmt),
             variant,
             basis_lut,
             s1: S1Reg::default(),
@@ -135,7 +150,7 @@ impl CrDatapath {
         // ---- stage 4: round, clamp, sign restore (consumes s3) ----
         let out = if self.s3.valid {
             let y = round_shift(self.s3.acc as i128, 3 * tb + 1, Rounding::HalfEven);
-            let y = y.clamp(-8192, 8192) as i32;
+            let y = y.clamp(-self.fmt.scale(), self.fmt.scale()) as i32;
             Some(if self.s3.neg { -y } else { y })
         } else {
             None
@@ -147,8 +162,8 @@ impl CrDatapath {
             for i in 0..4 {
                 acc += self.s2.p[i] as i64 * self.s2.b[i];
             }
-            // Width check: |P| <= 2^13, |b| <= 2^(3tb+1.x) -> acc fits 13+3tb+3 bits.
-            debug_assert!(acc.unsigned_abs() < 1u64 << (13 + 3 * tb + 3));
+            // Width check: |P| <= scale, |b| <= 2^(3tb+1.x) -> acc fits frac+3tb+3 bits.
+            debug_assert!(acc.unsigned_abs() < 1u64 << (self.fmt.frac_bits + 3 * tb + 3));
             S3Reg { valid: true, neg: self.s2.neg, acc }
         } else {
             S3Reg::default()
@@ -173,8 +188,8 @@ impl CrDatapath {
 
         // ---- stage 1: fold, index, t, LUT reads (consumes input) ----
         self.s1 = if let Some(x) = input {
-            debug_assert!((i16::MIN as i32..=i16::MAX as i32).contains(&x));
-            let (neg, u) = crate::approx::catmull_rom::fold(x);
+            debug_assert!((self.fmt.min_raw()..=self.fmt.max_raw()).contains(&(x as i64)));
+            let (neg, u) = kernel::fold_mag(x as i64, self.fmt.max_raw());
             let seg = (u >> tb) as i64;
             let tu = (u & ((1i64 << tb) - 1)) as i32;
             let p = [
@@ -281,6 +296,20 @@ mod tests {
         }
         // accuracy degrades vs poly (0.000152) but stays far better than PWL
         assert!(max_err < 0.0015, "max={max_err}");
+    }
+
+    #[test]
+    fn other_format_datapath_matches_reference_model() {
+        let fmt = crate::fixed::QFormat::new(2, 10);
+        let cr = CatmullRom::new_fmt(3, crate::approx::Boundary::Extend, fmt);
+        let xs: Vec<i32> =
+            (fmt.min_raw()..=fmt.max_raw()).step_by(3).map(|x| x as i32).collect();
+        let mut dp = CrDatapath::new_fmt(3, TVariant::Poly, fmt);
+        let out = dp.run(&xs);
+        assert_eq!(out.len(), xs.len());
+        for (&x, &y) in xs.iter().zip(&out) {
+            assert_eq!(y as i64, cr.eval_raw(x as i64), "x={x}");
+        }
     }
 
     #[test]

@@ -64,12 +64,20 @@ impl PathReport {
 /// the polynomial adder tree in one combinational cloud, which is why it
 /// is the critical stage of this variant (§V: the poly version is slower).
 pub fn cr_poly_timing(tbits: u32, basis_frac: u32) -> PathReport {
+    cr_poly_timing_fmt(tbits, basis_frac, crate::fixed::Q2_13)
+}
+
+/// Format-parameterized t-polynomial timing: bus widths derived from
+/// `fmt` (identical to [`cr_poly_timing`] at Q2.13).
+pub fn cr_poly_timing_fmt(tbits: u32, basis_frac: u32, fmt: crate::fixed::QFormat) -> PathReport {
     let bw = basis_frac + 3;
+    let frac = fmt.frac_bits;
+    let acc_w = super::area::mac_keep_frac(fmt) + 4;
     PathReport {
         stages: vec![
             (
                 "fold + LUT".into(),
-                adder_delay(15) + super::qmc_lut_depth() + mux_tree_delay(4),
+                adder_delay(fmt.width() - 1) + super::qmc_lut_depth() + mux_tree_delay(4),
             ),
             (
                 "t-polynomial".into(),
@@ -78,8 +86,8 @@ pub fn cr_poly_timing(tbits: u32, basis_frac: u32) -> PathReport {
                     + multiplier_delay(tbits, 2 * tbits)
                     + 2.0 * adder_delay(bw),
             ),
-            ("MAC".into(), multiplier_delay(14, bw) + 2.0 * adder_delay(20)),
-            ("round + negate".into(), adder_delay(14) + 2.0),
+            ("MAC".into(), multiplier_delay(frac + 1, bw) + 2.0 * adder_delay(acc_w)),
+            ("round + negate".into(), adder_delay(frac + 1) + 2.0),
         ],
     }
 }
@@ -87,17 +95,25 @@ pub fn cr_poly_timing(tbits: u32, basis_frac: u32) -> PathReport {
 /// Timing of the t-LUT variant: the polynomial stage collapses to a
 /// second LUT read (two-level logic), which is what makes it faster —
 /// the critical stage becomes the MAC.
-pub fn cr_tlut_timing(_tbits: u32, basis_frac: u32) -> PathReport {
+pub fn cr_tlut_timing(tbits: u32, basis_frac: u32) -> PathReport {
+    cr_tlut_timing_fmt(tbits, basis_frac, crate::fixed::Q2_13)
+}
+
+/// Format-parameterized t-LUT timing (identical to [`cr_tlut_timing`]
+/// at Q2.13).
+pub fn cr_tlut_timing_fmt(_tbits: u32, basis_frac: u32, fmt: crate::fixed::QFormat) -> PathReport {
     let bw = basis_frac + 3;
+    let frac = fmt.frac_bits;
+    let acc_w = super::area::mac_keep_frac(fmt) + 4;
     PathReport {
         stages: vec![
             (
                 "fold + LUT".into(),
-                adder_delay(15) + super::qmc_lut_depth() + mux_tree_delay(4),
+                adder_delay(fmt.width() - 1) + super::qmc_lut_depth() + mux_tree_delay(4),
             ),
             ("t-basis LUT".into(), super::qmc_lut_depth()),
-            ("MAC".into(), multiplier_delay(14, bw) + 2.0 * adder_delay(20)),
-            ("round + negate".into(), adder_delay(14) + 2.0),
+            ("MAC".into(), multiplier_delay(frac + 1, bw) + 2.0 * adder_delay(acc_w)),
+            ("round + negate".into(), adder_delay(frac + 1) + 2.0),
         ],
     }
 }
@@ -133,5 +149,17 @@ mod tests {
     fn delays_monotone_in_width() {
         assert!(adder_delay(20) > adder_delay(10));
         assert!(multiplier_delay(14, 20) > multiplier_delay(10, 10));
+    }
+
+    #[test]
+    fn fmt_timing_reproduces_legacy_and_wider_is_slower() {
+        let q = crate::fixed::Q2_13;
+        let legacy = cr_poly_timing(10, 16);
+        let fmt = cr_poly_timing_fmt(10, 16, q);
+        assert_eq!(legacy.critical().1, fmt.critical().1);
+        // Q2.21 k=3: tbits=18, basis bus 24+3 — the deeper MAC/polynomial
+        // cloud must cost clock speed.
+        let wide = cr_poly_timing_fmt(18, 24, crate::fixed::QFormat::new(2, 21));
+        assert!(wide.fmax_mhz() < fmt.fmax_mhz());
     }
 }

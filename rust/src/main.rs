@@ -286,11 +286,15 @@ fn cmd_rtl(argv: &[String]) -> anyhow::Result<()> {
     const SPECS: &[Spec] = &[
         Spec::opt("out", "output directory (default rtl/)"),
         Spec::opt("k", "sampling-period exponent, h = 2^-k (default 3)"),
+        Spec::opt("fmt", "number format, e.g. Q2.13 (default)"),
     ];
     let args = Args::parse(argv, SPECS).map_err(|e| anyhow::anyhow!(e))?;
     let k = args.get_usize("k", 3).map_err(|e| anyhow::anyhow!(e))? as u32;
     let dir = std::path::PathBuf::from(args.get_or("out", "rtl"));
-    let cfg = crspline::hw::verilog::RtlConfig { k };
+    let fmt_s = args.get_or("fmt", "Q2.13");
+    let fmt = crspline::fixed::QFormat::parse(&fmt_s)
+        .ok_or_else(|| anyhow::anyhow!("bad --fmt {fmt_s} (expected e.g. Q2.13)"))?;
+    let cfg = crspline::hw::verilog::RtlConfig { k, fmt };
     let files = crspline::hw::verilog::write_bundle(cfg, &dir)?;
     println!("wrote {} files to {}:", files.len(), dir.display());
     for f in files {

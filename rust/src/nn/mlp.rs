@@ -1,6 +1,6 @@
 //! Tanh MLP with a swappable hardware activation unit.
 
-use super::tensor::{argmax, quantize_vec, Matrix};
+use super::tensor::{argmax, quantize_vec_fmt, Matrix};
 use crate::approx::TanhApprox;
 use crate::util::rng::Rng;
 
@@ -49,16 +49,18 @@ impl Mlp {
         h
     }
 
-    /// Accelerator forward pass: Q2.13 weights & activations, hardware
-    /// tanh block. The matmul accumulates in high precision (as real
-    /// integer MACs do) and requantizes at the activation boundary. Each
-    /// hidden layer's activations go through one `tanh_slice` batch call
-    /// — the whole layer is a single pass through the activation unit,
-    /// exactly like the hardware's vectorized datapath.
+    /// Accelerator forward pass: fixed-point weights & activations in the
+    /// activation unit's own format (`act.fmt()`, Q2.13 by default),
+    /// hardware tanh block. The matmul accumulates in high precision (as
+    /// real integer MACs do) and requantizes at the activation boundary.
+    /// Each hidden layer's activations go through one `tanh_slice` batch
+    /// call — the whole layer is a single pass through the activation
+    /// unit, exactly like the hardware's vectorized datapath.
     pub fn forward_hw(&self, x: &[f64], act: &dyn TanhApprox) -> Vec<f64> {
-        let mut h = quantize_vec(x);
+        let fmt = act.fmt();
+        let mut h = quantize_vec_fmt(x, fmt);
         for (i, layer) in self.layers.iter().enumerate() {
-            let wq = layer.w.quantized();
+            let wq = layer.w.quantized_fmt(fmt);
             let mut z = wq.matvec(&h);
             for (zi, bi) in z.iter_mut().zip(&layer.b) {
                 *zi += bi;
@@ -66,7 +68,7 @@ impl Mlp {
             if i + 1 < self.layers.len() {
                 h = super::hw_tanh_slice(act, &z);
             } else {
-                h = quantize_vec(&z);
+                h = quantize_vec_fmt(&z, fmt);
             }
         }
         h

@@ -19,23 +19,26 @@ pub mod mlp;
 pub mod tensor;
 
 use crate::approx::TanhApprox;
-use crate::fixed::q13_to_f64;
 
-/// Apply tanh through the Q2.13 hardware interface to an f64 activation.
+/// Apply tanh through the fixed-point hardware interface to an f64
+/// activation, in the approximation's own [`crate::fixed::QFormat`].
 #[inline]
 pub fn hw_tanh(approx: &dyn TanhApprox, x: f64) -> f64 {
     approx.eval_f64(x)
 }
 
 /// Hardware sigmoid via the tanh block: σ(x) = (1 + tanh(x/2)) / 2.
-/// The halving and the (1+·)/2 are bit shifts in the datapath.
+/// The halving and the (1+·)/2 are bit shifts in the datapath. Quantizes
+/// through `approx.fmt()`; bit-identical to the historical Q2.13 path
+/// when the approximation uses the default format.
 #[inline]
 pub fn hw_sigmoid(approx: &dyn TanhApprox, x: f64) -> f64 {
-    let t = q13_to_f64(approx.eval_q13(crate::fixed::q13(x / 2.0)));
+    let fmt = approx.fmt();
+    let t = fmt.to_f64(approx.eval_raw(fmt.quantize(x / 2.0)));
     (1.0 + t) / 2.0
 }
 
-/// Vector tanh through the Q2.13 hardware interface — one
+/// Vector tanh through the fixed-point hardware interface — one
 /// [`TanhApprox::tanh_slice`] call per activation layer instead of one
 /// virtual dispatch per neuron. Bit-identical to mapping [`hw_tanh`].
 pub fn hw_tanh_slice(approx: &dyn TanhApprox, xs: &[f64]) -> Vec<f64> {
@@ -45,10 +48,11 @@ pub fn hw_tanh_slice(approx: &dyn TanhApprox, xs: &[f64]) -> Vec<f64> {
 /// Vector sigmoid via the tanh block — the batch analogue of
 /// [`hw_sigmoid`], bit-identical to mapping it per element.
 pub fn hw_sigmoid_slice(approx: &dyn TanhApprox, xs: &[f64]) -> Vec<f64> {
-    let q: Vec<i32> = xs.iter().map(|&v| crate::fixed::q13(v / 2.0)).collect();
+    let fmt = approx.fmt();
+    let q: Vec<i32> = xs.iter().map(|&v| fmt.quantize(v / 2.0) as i32).collect();
     let mut out = vec![0i32; q.len()];
     approx.tanh_slice(&q, &mut out);
-    out.into_iter().map(|t| (1.0 + q13_to_f64(t)) / 2.0).collect()
+    out.into_iter().map(|t| (1.0 + fmt.to_f64(t as i64)) / 2.0).collect()
 }
 
 #[cfg(test)]

@@ -6,7 +6,7 @@
 //! hardware runs is the activation unit and weight/activation precision —
 //! isolating the paper's variable.
 
-use crate::fixed::{q13, q13_to_f64};
+use crate::fixed::{q13, q13_to_f64, QFormat, Q2_13};
 use crate::util::rng::Rng;
 
 /// Row-major matrix.
@@ -51,7 +51,8 @@ impl Matrix {
         y
     }
 
-    /// Quantize every weight to Q2.13 (the accelerator's stored format).
+    /// Quantize every weight to Q2.13 (the accelerator's default stored
+    /// format). Equivalent to [`Matrix::quantized_fmt`] at [`Q2_13`].
     pub fn quantized(&self) -> Matrix {
         Matrix {
             rows: self.rows,
@@ -59,11 +60,25 @@ impl Matrix {
             data: self.data.iter().map(|&w| q13_to_f64(q13(w))).collect(),
         }
     }
+
+    /// Quantize every weight through an arbitrary accelerator format.
+    pub fn quantized_fmt(&self, fmt: QFormat) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&w| fmt.to_f64(fmt.quantize(w))).collect(),
+        }
+    }
 }
 
 /// Quantize an activation vector through Q2.13 (accelerator bus width).
 pub fn quantize_vec(xs: &[f64]) -> Vec<f64> {
-    xs.iter().map(|&v| q13_to_f64(q13(v))).collect()
+    quantize_vec_fmt(xs, Q2_13)
+}
+
+/// Quantize an activation vector through an arbitrary accelerator format.
+pub fn quantize_vec_fmt(xs: &[f64], fmt: QFormat) -> Vec<f64> {
+    xs.iter().map(|&v| fmt.to_f64(fmt.quantize(v))).collect()
 }
 
 /// Argmax index (classification decision).

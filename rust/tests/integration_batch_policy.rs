@@ -1,0 +1,133 @@
+//! Integration: batching-policy flush ordering and router bucket
+//! selection, including the per-format bucketing the `ModelKey::fmt`
+//! field adds — requests for the same model at different number formats
+//! must never share a batch or a compiled bucket.
+
+use crspline::coordinator::router::FamilyInfo;
+use crspline::coordinator::{BatchPolicy, Batcher, ModelKey, Router};
+use crspline::fixed::QFormat;
+use std::time::{Duration, Instant};
+
+fn key(m: &str) -> ModelKey {
+    ModelKey::new(m, "cr")
+}
+
+fn fmt_key(m: &str, fmt: QFormat) -> ModelKey {
+    ModelKey::with_fmt(m, "cr", fmt)
+}
+
+#[test]
+fn size_flush_preserves_fifo_order_across_multiple_closes() {
+    let mut b = Batcher::new(BatchPolicy { max_batch: 3, max_wait: Duration::from_secs(9) });
+    let now = Instant::now();
+    let mut closed: Vec<Vec<i32>> = Vec::new();
+    for i in 0..7 {
+        if let Some(batch) = b.push(key("m"), i, now) {
+            closed.push(batch.items);
+        }
+    }
+    // Two size-closed batches, strictly FIFO, one remainder queued.
+    assert_eq!(closed, vec![vec![0, 1, 2], vec![3, 4, 5]]);
+    assert_eq!(b.pending(), 1);
+    let rest = b.flush();
+    assert_eq!(rest.len(), 1);
+    assert_eq!(rest[0].items, vec![6]);
+}
+
+#[test]
+fn deadline_flush_fires_in_oldest_first_order() {
+    let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) });
+    let t0 = Instant::now();
+    // "a" enqueued later than "m": m expires first even though BTreeMap
+    // iteration would visit "a" first.
+    b.push(key("m"), 1, t0);
+    b.push(key("a"), 2, t0 + Duration::from_millis(4));
+    // At t0+10 only m's deadline has passed.
+    let first = b.poll_expired(t0 + Duration::from_millis(10));
+    assert_eq!(first.len(), 1);
+    assert_eq!(first[0].key, key("m"));
+    assert_eq!(b.pending(), 1);
+    // At t0+14 the remaining queue expires too.
+    let second = b.poll_expired(t0 + Duration::from_millis(14));
+    assert_eq!(second.len(), 1);
+    assert_eq!(second[0].key, key("a"));
+    assert_eq!(b.pending(), 0);
+}
+
+#[test]
+fn size_close_wins_over_pending_deadline() {
+    // A queue that hits max_batch closes immediately; the deadline sweep
+    // right after must not produce a duplicate or an empty batch.
+    let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) });
+    let t0 = Instant::now();
+    assert!(b.push(key("m"), 1, t0).is_none());
+    let by_size = b.push(key("m"), 2, t0).expect("closes at max_batch");
+    assert_eq!(by_size.items, vec![1, 2]);
+    assert!(b.poll_expired(t0 + Duration::from_millis(5)).is_empty());
+    assert_eq!(b.next_deadline(), None);
+}
+
+#[test]
+fn per_format_keys_queue_independently() {
+    // Same model/variant at different formats: separate queues, separate
+    // batches — a wide-format request can never pad into a Q2.13 bucket.
+    let q10 = QFormat::new(2, 10);
+    let mut b = Batcher::new(BatchPolicy { max_batch: 2, max_wait: Duration::from_secs(9) });
+    let now = Instant::now();
+    assert!(b.push(key("tanh"), 1, now).is_none());
+    assert!(b.push(fmt_key("tanh", q10), 10, now).is_none());
+    // Neither queue reached max_batch: two singleton queues, not one pair.
+    assert_eq!(b.pending(), 2);
+    let closed = b.push(key("tanh"), 2, now).expect("default-format queue closes");
+    assert_eq!(closed.key, key("tanh"));
+    assert_eq!(closed.items, vec![1, 2]);
+    let leftover = b.flush();
+    assert_eq!(leftover.len(), 1);
+    assert_eq!(leftover[0].key, fmt_key("tanh", q10));
+    assert_eq!(leftover[0].items, vec![10]);
+}
+
+fn two_format_router() -> Router {
+    let mut r = Router::default();
+    r.register(
+        key("tanh"),
+        FamilyInfo { buckets: vec![8, 1, 32], sample_in: 16, sample_out: 16 },
+    );
+    r.register(
+        fmt_key("tanh", QFormat::new(2, 21)),
+        FamilyInfo { buckets: vec![4, 4, 16], sample_in: 16, sample_out: 16 },
+    );
+    r
+}
+
+#[test]
+fn router_bucket_selection_smallest_sufficient() {
+    let r = two_format_router();
+    let k = key("tanh");
+    // register() sorted and deduped the bucket list.
+    assert_eq!(r.family(&k).unwrap().buckets, vec![1, 8, 32]);
+    assert_eq!(r.bucket(&k, 1), Some(1));
+    assert_eq!(r.bucket(&k, 2), Some(8));
+    assert_eq!(r.bucket(&k, 9), Some(32));
+    assert_eq!(r.bucket(&k, 33), None);
+    assert_eq!(r.max_bucket(&k), Some(32));
+}
+
+#[test]
+fn router_buckets_are_per_format() {
+    let r = two_format_router();
+    let wide = fmt_key("tanh", QFormat::new(2, 21));
+    // The wide-format family has its own (deduped) bucket ladder...
+    assert_eq!(r.family(&wide).unwrap().buckets, vec![4, 16]);
+    assert_eq!(r.bucket(&wide, 2), Some(4));
+    assert_eq!(r.bucket(&wide, 5), Some(16));
+    assert_eq!(r.max_bucket(&wide), Some(16));
+    // ...and an unregistered format resolves to nothing, not to Q2.13.
+    let other = fmt_key("tanh", QFormat::new(2, 7));
+    assert!(r.family(&other).is_none());
+    assert_eq!(r.bucket(&other, 1), None);
+    assert!(r.validate(&other, 16).is_err());
+    // Validation stays per-family for the registered ones.
+    assert!(r.validate(&wide, 16).is_ok());
+    assert!(r.validate(&wide, 15).is_err());
+}

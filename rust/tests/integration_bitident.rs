@@ -1,0 +1,370 @@
+//! Bit-identity regression for the format-parameterized refactor.
+//!
+//! Every approximation method was re-expressed on the shared
+//! `fixed::KernelPlan` engine (or format-generic arithmetic). The
+//! contract of that refactor is that at Q2.13 — the paper's format and
+//! the default everywhere — nothing changed: every method's output over
+//! the EXHAUSTIVE 2^16-point i16 domain is bit-identical to the
+//! pre-refactor arithmetic.
+//!
+//! The references below are straight-line transcriptions of the original
+//! per-method datapaths (tables built inline from `q13`/`tanh`, evals
+//! written out tap by tap), deliberately *not* sharing any code with the
+//! kernel engine they check.
+
+use crspline::approx::dctif::dctif_weights;
+use crspline::approx::{
+    Boundary, CatmullRom, Dctif, Gomar, PlainLut, Pwl, Ralut, RegionBased, TanhApprox, Taylor,
+};
+use crspline::fixed::{
+    q13, q13_to_f64, round_half_even, round_shift, round_shift_half_even_i64, Rounding,
+};
+
+/// Seed fold: odd-symmetry magnitude with saturation to the 15-bit bus.
+fn fold(x: i32) -> (bool, i64) {
+    if x < 0 {
+        (true, (-(x as i64)).min(32767))
+    } else {
+        (false, (x as i64).min(32767))
+    }
+}
+
+/// Seed LUT builder: entry j = q13(tanh(j·2^-k)), depth 2^(k+2) + guards.
+fn build_lut(k: u32, guard: usize) -> Vec<i32> {
+    let h = 0.5f64.powi(k as i32);
+    let depth = 1usize << (k + 2);
+    (0..depth + guard).map(|j| q13((j as f64 * h).tanh())).collect()
+}
+
+/// Seed odd-extension table: ext[i] = P(i-1) over segments -1..=depth+1.
+fn extend_lut(lut: &[i32], depth: usize, clamp_top: bool) -> Vec<i64> {
+    (-1..=(depth as i64 + 1))
+        .map(|idx| {
+            if idx < 0 {
+                -(lut[(-idx) as usize] as i64)
+            } else if clamp_top {
+                lut[(idx as usize).min(lut.len() - 1)] as i64
+            } else {
+                lut[idx as usize] as i64
+            }
+        })
+        .collect()
+}
+
+fn assert_bitident(m: &dyn TanhApprox, reference: impl Fn(i32) -> i32) {
+    for x in i16::MIN as i32..=i16::MAX as i32 {
+        assert_eq!(m.eval_q13(x), reference(x), "{} x={x}", m.name());
+    }
+}
+
+#[test]
+fn catmull_rom_unchanged_every_config() {
+    for k in 1..=4u32 {
+        for boundary in [Boundary::Extend, Boundary::Clamp] {
+            let guard = match boundary {
+                Boundary::Extend => 2,
+                Boundary::Clamp => 1,
+            };
+            let lut = build_lut(k, guard);
+            let depth = 1usize << (k + 2);
+            let lut_ext = extend_lut(&lut, depth, matches!(boundary, Boundary::Clamp));
+            let tb = 13 - k;
+            let reference = move |x: i32| -> i32 {
+                let (neg, u) = fold(x);
+                let seg = (u >> tb) as usize;
+                let tu = u & ((1i64 << tb) - 1);
+                let t1 = tu << (2 * tb);
+                let t2 = (tu * tu) << tb;
+                let t3 = tu * tu * tu;
+                let one = 1i64 << (3 * tb);
+                let b = [
+                    -t3 + 2 * t2 - t1,
+                    3 * t3 - 5 * t2 + 2 * one,
+                    -3 * t3 + 4 * t2 + t1,
+                    t3 - t2,
+                ];
+                let taps = &lut_ext[seg..seg + 4];
+                let acc = taps[0] * b[0] + taps[1] * b[1] + taps[2] * b[2] + taps[3] * b[3];
+                let y = round_shift_half_even_i64(acc, 3 * tb + 1).clamp(-8192, 8192) as i32;
+                if neg {
+                    -y
+                } else {
+                    y
+                }
+            };
+            assert_bitident(&CatmullRom::new(k, boundary), reference);
+        }
+    }
+}
+
+#[test]
+fn catmull_rom_basis_ablation_unchanged() {
+    // The truncated-basis path (i128 MAC, round-half-up basis) at the
+    // EXPERIMENTS.md ablation widths.
+    let k = 3u32;
+    let tb = 13 - k;
+    let lut = build_lut(k, 2);
+    let lut_ext = extend_lut(&lut, 1usize << (k + 2), false);
+    for bf in [10u32, 14, 16, 20] {
+        let lut_ext = lut_ext.clone();
+        let reference = move |x: i32| -> i32 {
+            let (neg, u) = fold(x);
+            let seg = (u >> tb) as usize;
+            let tu = u & ((1i64 << tb) - 1);
+            let t1 = tu << (2 * tb);
+            let t2 = (tu * tu) << tb;
+            let t3 = tu * tu * tu;
+            let one = 1i64 << (3 * tb);
+            let mut b = [
+                -t3 + 2 * t2 - t1,
+                3 * t3 - 5 * t2 + 2 * one,
+                -3 * t3 + 4 * t2 + t1,
+                t3 - t2,
+            ];
+            for bi in b.iter_mut() {
+                *bi = round_shift(*bi as i128, 3 * tb - bf, Rounding::HalfUp);
+            }
+            let taps = &lut_ext[seg..seg + 4];
+            let acc: i128 = (taps[0] * b[0]) as i128
+                + (taps[1] * b[1]) as i128
+                + (taps[2] * b[2]) as i128
+                + (taps[3] * b[3]) as i128;
+            let y = round_shift(acc, bf + 1, Rounding::HalfEven).clamp(-8192, 8192) as i32;
+            if neg {
+                -y
+            } else {
+                y
+            }
+        };
+        let cr = CatmullRom::new(k, Boundary::Extend).with_basis_frac(bf);
+        assert_bitident(&cr, reference);
+    }
+}
+
+#[test]
+fn pwl_unchanged_every_k() {
+    for k in 1..=4u32 {
+        let tb = 13 - k;
+        let lut = build_lut(k, 1);
+        let reference = move |x: i32| -> i32 {
+            let (neg, u) = fold(x);
+            let seg = (u >> tb) as usize;
+            let tu = u & ((1i64 << tb) - 1);
+            let one = 1i64 << tb;
+            let p0 = lut[seg] as i64;
+            let p1 = lut[(seg + 1).min(lut.len() - 1)] as i64;
+            let acc = p0 * (one - tu) + p1 * tu;
+            let y = round_shift(acc as i128, tb, Rounding::HalfEven).clamp(-8192, 8192) as i32;
+            if neg {
+                -y
+            } else {
+                y
+            }
+        };
+        assert_bitident(&Pwl::new(k), reference);
+    }
+}
+
+#[test]
+fn plain_lut_unchanged_every_k() {
+    for k in [2u32, 3, 4] {
+        let tb = 13 - k;
+        let lut = build_lut(k, 1);
+        let reference = move |x: i32| -> i32 {
+            let (neg, u) = fold(x);
+            let idx = (((u + (1i64 << (tb - 1))) >> tb) as usize).min(lut.len() - 1);
+            let y = lut[idx];
+            if neg {
+                -y
+            } else {
+                y
+            }
+        };
+        assert_bitident(&PlainLut::new(k), reference);
+    }
+}
+
+#[test]
+fn ralut_unchanged() {
+    for eps in [0.0189f64, 0.002] {
+        // Seed greedy construction: longest segment a single value covers
+        // within 2·eps, midpoint-coded.
+        let mut ranges: Vec<(i32, i32)> = Vec::new();
+        let mut u = 0i32;
+        while u <= 32767 {
+            let lo = q13_to_f64(u).tanh();
+            let (mut a, mut b) = (u, 32767i32);
+            while a < b {
+                let mid = (a + b + 1) / 2;
+                if q13_to_f64(mid).tanh() - lo <= 2.0 * eps {
+                    a = mid;
+                } else {
+                    b = mid - 1;
+                }
+            }
+            let hi = q13_to_f64(a).tanh();
+            ranges.push((u, q13((lo + hi) / 2.0)));
+            if a == 32767 {
+                break;
+            }
+            u = a + 1;
+        }
+        let reference = move |x: i32| -> i32 {
+            let (neg, u) = fold(x);
+            let u = u as i32;
+            let idx = match ranges.binary_search_by(|r| r.0.cmp(&u)) {
+                Ok(i) => i,
+                Err(i) => i - 1,
+            };
+            let y = ranges[idx].1;
+            if neg {
+                -y
+            } else {
+                y
+            }
+        };
+        assert_bitident(&Ralut::new(eps), reference);
+    }
+}
+
+#[test]
+fn region_based_unchanged() {
+    let (pass_end, sat_start, step_shift) = (0.39f64, 2.0f64, 8u32);
+    let pe = q13(pass_end);
+    let ss = q13(sat_start);
+    let step = 1i32 << step_shift;
+    let n = ((ss - pe) as usize).div_ceil(step as usize);
+    let table: Vec<i32> = (0..n)
+        .map(|i| {
+            let mid = pe + i as i32 * step + step / 2;
+            q13(q13_to_f64(mid).tanh())
+        })
+        .collect();
+    let sat_value = q13((1.0 + sat_start.tanh()) / 2.0);
+    let reference = move |x: i32| -> i32 {
+        let (neg, u) = fold(x);
+        let u = u as i32;
+        let y = if u < pe {
+            u
+        } else if u >= ss {
+            sat_value
+        } else {
+            let idx = ((u - pe) >> step_shift) as usize;
+            table[idx.min(table.len() - 1)]
+        };
+        if neg {
+            -y
+        } else {
+            y
+        }
+    };
+    assert_bitident(&RegionBased::paper_default(), reference);
+}
+
+#[test]
+fn taylor_unchanged_every_term_count() {
+    for terms in 2..=4u32 {
+        let reference = move |x: i32| -> i32 {
+            let (neg, u) = fold(x);
+            let xf = q13_to_f64(u as i32);
+            let x2 = xf * xf;
+            let c3 = -1.0 / 3.0;
+            let c5 = 2.0 / 15.0;
+            let c7 = -17.0 / 315.0;
+            let inner = match terms {
+                2 => c3,
+                3 => c3 + x2 * c5,
+                _ => c3 + x2 * (c5 + x2 * c7),
+            };
+            let y = q13((xf * (1.0 + x2 * inner)).clamp(-1.0, 1.0));
+            if neg {
+                -y
+            } else {
+                y
+            }
+        };
+        assert_bitident(&Taylor::new(terms), reference);
+    }
+}
+
+#[test]
+fn gomar_unchanged() {
+    for fb in [10u32, 13, 16] {
+        let reference = move |x: i32| -> i32 {
+            let (neg, u13) = fold(x);
+            const LOG2E: f64 = std::f64::consts::LOG2_E;
+            let scale = (1i64 << fb) as f64;
+            let u = ((2.0 * q13_to_f64(u13 as i32) * LOG2E) * scale) as i64;
+            // Mitchell 2^u
+            let int = (u >> fb) as u32;
+            let frac = u & ((1i64 << fb) - 1);
+            let e2x = ((1i64 << fb) + frac) << int.min(16);
+            let one = 1i64 << fb;
+            // restoring division (e2x-1)/(e2x+1)
+            let (num, den) = (e2x - one, e2x + one);
+            let mut rem = (num as i128) << fb;
+            let d = den as i128;
+            let mut q: i64 = 0;
+            for bit in (0..=fb).rev() {
+                let trial = d << bit;
+                q <<= 1;
+                if rem >= trial {
+                    rem -= trial;
+                    q |= 1;
+                }
+            }
+            let y = if fb >= 13 { (q >> (fb - 13)) as i32 } else { (q << (13 - fb)) as i32 };
+            let y = y.clamp(0, 8192);
+            if neg {
+                -y
+            } else {
+                y
+            }
+        };
+        assert_bitident(&Gomar::new(fb), reference);
+    }
+}
+
+#[test]
+fn dctif_unchanged_both_configs() {
+    for (k, abits, cbits) in [(3u32, 9u32, 11u32), (4, 9, 16)] {
+        let tb = 13 - k;
+        let cfrac = cbits - 2;
+        let scale = (1i64 << cfrac) as f64;
+        let coeffs: Vec<[i32; 4]> = (0..(1usize << abits))
+            .map(|i| {
+                let alpha = (i as f64 + 0.5) / (1u64 << abits) as f64;
+                let w = dctif_weights(alpha);
+                let mut q = [0i32; 4];
+                for (dst, &src) in q.iter_mut().zip(w.iter()) {
+                    *dst = round_half_even(src * scale) as i32;
+                }
+                let sum: i32 = q.iter().sum();
+                let target = 1i32 << cfrac;
+                let imax = (0..4).max_by_key(|&j| q[j]).unwrap();
+                q[imax] += target - sum;
+                q
+            })
+            .collect();
+        let lut = build_lut(k, 2);
+        let lut_ext = extend_lut(&lut, 1usize << (k + 2), false);
+        let reference = move |x: i32| -> i32 {
+            let (neg, u) = fold(x);
+            let seg = (u >> tb) as usize;
+            let tu = u & ((1i64 << tb) - 1);
+            let w = &coeffs[(tu >> (tb - abits)) as usize];
+            let taps = &lut_ext[seg..seg + 4];
+            let acc: i128 = (taps[0] * w[0] as i64) as i128
+                + (taps[1] * w[1] as i64) as i128
+                + (taps[2] * w[2] as i64) as i128
+                + (taps[3] * w[3] as i64) as i128;
+            let y = round_shift(acc, cfrac, Rounding::HalfEven).clamp(-8192, 8192) as i32;
+            if neg {
+                -y
+            } else {
+                y
+            }
+        };
+        assert_bitident(&Dctif::new(k, abits, cbits), reference);
+    }
+}

@@ -1,0 +1,97 @@
+//! Integration: the sigmoid-from-tanh identity σ(x) = (1 + tanh(x/2))/2
+//! holds for EVERY method in the zoo at Q2.13 — the contract that lets
+//! accelerators serve both activations from one tanh block.
+
+use crspline::approx::{self, Sigmoid, TanhApprox};
+use crspline::fixed::{q13, q13_to_f64};
+
+fn exact_sigmoid(x: f64) -> f64 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// The wrapper's halving shift, reproduced independently: >>1 with
+/// round-half-even on the dropped bit.
+fn halve_even(v: i64) -> i64 {
+    let fl = v >> 1;
+    if (v & 1) == 1 && (fl & 1) == 1 {
+        fl + 1
+    } else {
+        fl
+    }
+}
+
+/// The identity is *structural*: the sigmoid raw output must be exactly
+/// the (1 + tanh(x/2))/2 wiring around the method's own tanh output —
+/// for every method, over the full i16 domain.
+#[test]
+fn sigmoid_is_exactly_the_tanh_identity_wiring() {
+    for m in approx::all_methods() {
+        let s = Sigmoid::new(m.as_ref());
+        for x in i16::MIN as i32..=i16::MAX as i32 {
+            let want = halve_even(8192 + m.eval_q13(halve_even(x as i64) as i32) as i64) as i32;
+            assert_eq!(s.eval_q13(x), want, "{} x={x}", m.name());
+        }
+    }
+}
+
+/// Numerically, each method's sigmoid inherits (half of) its tanh error:
+/// |σ_hw(x) − σ(x)| ≤ max tanh error / 2 + quantization slack.
+#[test]
+fn sigmoid_error_is_bounded_by_half_the_tanh_error() {
+    for m in approx::all_methods() {
+        // Method's own max tanh error over the domain.
+        let mut tanh_err = 0.0f64;
+        for x in (i16::MIN as i32..=i16::MAX as i32).step_by(7) {
+            let e = (q13_to_f64(m.eval_q13(x)) - q13_to_f64(x).tanh()).abs();
+            tanh_err = tanh_err.max(e);
+        }
+        let s = Sigmoid::new(m.as_ref());
+        let budget = tanh_err / 2.0 + 2.0 * crspline::fixed::ULP;
+        for i in -300..=300 {
+            let x = i as f64 * 0.013;
+            let err = (s.eval_f64(x) - exact_sigmoid(x)).abs();
+            assert!(err <= budget, "{} x={x} err={err} budget={budget}", m.name());
+        }
+    }
+}
+
+/// σ(0) = 1/2 exactly and complementarity σ(x) + σ(−x) = 1 within one
+/// LSB, for every method (odd tanh + exact halving wiring).
+#[test]
+fn midpoint_and_complementarity_for_every_method() {
+    for m in approx::all_methods() {
+        let s = Sigmoid::new(m.as_ref());
+        assert_eq!(s.eval_q13(0), 4096, "{}", m.name());
+        for x in (-32000..32000).step_by(991) {
+            let sum = s.eval_q13(x) + s.eval_q13(-x);
+            assert!((sum - 8192).abs() <= 1, "{} x={x} sum={sum}", m.name());
+        }
+    }
+}
+
+/// The nn-layer f64 sigmoid helper agrees with the raw wrapper at the
+/// quantization grid (same halving, same tanh call).
+#[test]
+fn nn_hw_sigmoid_matches_raw_wrapper_on_grid_points() {
+    for m in approx::all_methods() {
+        let s = Sigmoid::new(m.as_ref());
+        for i in -40..=40 {
+            let x = i as f64 * 0.1;
+            let via_nn = crspline::nn::hw_sigmoid(m.as_ref(), x);
+            // hw_sigmoid quantizes x/2 directly and keeps the (1+t)/2
+            // step in f64; the raw wrapper halves the quantized x and
+            // rounds the output shift. On even raw inputs the tanh calls
+            // see the same argument, so the two agree to the half-LSB the
+            // output rounding may add.
+            let raw = q13(x);
+            if raw % 2 == 0 {
+                let via_raw = q13_to_f64(s.eval_q13(raw));
+                assert!(
+                    (via_nn - via_raw).abs() <= crspline::fixed::ULP,
+                    "{} x={x} nn={via_nn} raw={via_raw}",
+                    m.name()
+                );
+            }
+        }
+    }
+}
