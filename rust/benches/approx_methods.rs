@@ -64,8 +64,9 @@ fn main() {
         });
     }
 
-    println!("\n# batch API: scalar eval_q13 loop vs tanh_slice (hoisted tables,");
-    println!("# no per-element bounds/sign re-derivation, buffer reuse)\n");
+    println!("\n# batch API: scalar eval_q13 loop vs tanh_slice (tanh_slice now");
+    println!("# routes through cached compiled kernels — see `cargo bench");
+    println!("# --bench kernel` for the full interp/compiled/rom/par ladder)\n");
     {
         let slice_methods: Vec<Box<dyn TanhApprox>> = vec![
             Box::new(CatmullRom::paper_default()),

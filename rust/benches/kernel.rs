@@ -1,0 +1,196 @@
+//! Bench target `kernel`: the compiled-kernel tier ladder for every
+//! approximation method — the perf numbers behind the compile/cache/ROM
+//! design in DESIGN.md.
+//!
+//! ```sh
+//! cargo bench --bench kernel          # full
+//! CRSPLINE_BENCH_FAST=1 cargo bench --bench kernel
+//! ```
+//!
+//! Five tiers per method (a tier is skipped where it does not exist):
+//!
+//! 1. `scalar`   — per-element `eval_q13` loop (the L3 reference path)
+//! 2. `interp`   — `KernelPlan::eval_slice` (the interpreted batch engine)
+//! 3. `compiled` — `CompiledKernel::eval_slice` (branch-free tables)
+//! 4. `rom`      — full-domain ROM variant of the compiled kernel
+//! 5. `par`      — `eval_slice_par` sharding a large batch over a pool
+//!
+//! Taylor and Gomar have no `KernelPlan` (they are arithmetic pipelines,
+//! not table plans), so they report only the scalar and ROM tiers.
+//!
+//! Besides the grep-able `bench ...` lines, the run writes a per-method
+//! tier comparison to `BENCH_kernel.json` (override the path with
+//! `CRSPLINE_BENCH_KERNEL_JSON`) so dashboards can diff runs and assert
+//! the compiled-vs-interpreted speedup without scraping stdout.
+
+use crspline::approx::{
+    CatmullRom, Dctif, Gomar, PlainLut, Pwl, Ralut, RegionBased, TanhApprox, Taylor,
+};
+use crspline::bench::{black_box, Bencher};
+use crspline::fixed::{CompiledKernel, KernelPlan};
+use crspline::util::json::{self, Json};
+use crspline::util::pool::ThreadPool;
+use crspline::util::rng::Rng;
+use std::sync::Arc;
+
+/// Per-iteration batch for the serial tiers.
+const N: usize = 8192;
+/// Large batch for the parallel tier (well past any sane crossover).
+const N_PAR: usize = 1 << 17;
+
+fn inputs(n: usize) -> Vec<i32> {
+    let mut rng = Rng::new(42);
+    (0..n).map(|_| rng.range_i64(i16::MIN as i64, i16::MAX as i64) as i32).collect()
+}
+
+/// Mean ns per element of the most recent measurement.
+fn per_elem(b: &Bencher, items: usize) -> f64 {
+    b.results.last().unwrap().mean_ns() / items as f64
+}
+
+fn num_or_null(v: Option<f64>) -> Json {
+    match v {
+        Some(n) => Json::num(n),
+        None => Json::Null,
+    }
+}
+
+/// Run the tier ladder for one method and return its JSON entry.
+#[allow(clippy::too_many_arguments)]
+fn ladder(
+    b: &mut Bencher,
+    pool: &ThreadPool,
+    xs: &[i32],
+    xs_par: &[i32],
+    name: &str,
+    scalar: &dyn TanhApprox,
+    plan: Option<&KernelPlan>,
+    rom: Option<CompiledKernel>,
+) -> Json {
+    let mut out = vec![0i32; xs.len()];
+    let mut out_par = vec![0i32; xs_par.len()];
+
+    b.bench_with_items(&format!("{name}/scalar"), xs.len() as u64, || {
+        for (o, &x) in out.iter_mut().zip(xs) {
+            *o = scalar.eval_q13(black_box(x));
+        }
+        black_box(&out);
+    });
+    let scalar_ns = per_elem(b, xs.len());
+
+    let mut interp_ns = None;
+    let mut compiled_ns = None;
+    let mut par_ns = None;
+    let mut mode = None;
+    let mut table_bytes = None;
+    if let Some(plan) = plan {
+        b.bench_with_items(&format!("{name}/interp"), xs.len() as u64, || {
+            plan.eval_slice(black_box(xs), black_box(&mut out));
+        });
+        interp_ns = Some(per_elem(b, xs.len()));
+
+        let compiled = Arc::new(CompiledKernel::compile(plan));
+        mode = Some(compiled.mode());
+        table_bytes = Some(compiled.table_bytes());
+        b.bench_with_items(&format!("{name}/compiled"), xs.len() as u64, || {
+            compiled.eval_slice(black_box(xs), black_box(&mut out));
+        });
+        compiled_ns = Some(per_elem(b, xs.len()));
+
+        // crossover 1: always shard, so the tier measures the sharded
+        // path itself rather than the serial fallback
+        b.bench_with_items(&format!("{name}/par"), xs_par.len() as u64, || {
+            compiled.eval_slice_par(pool, black_box(xs_par), black_box(&mut out_par), 1);
+        });
+        par_ns = Some(per_elem(b, xs_par.len()));
+    }
+
+    let mut rom_ns = None;
+    let mut rom_bytes = None;
+    if let Some(rom) = rom {
+        rom_bytes = Some(rom.table_bytes());
+        b.bench_with_items(&format!("{name}/rom"), xs.len() as u64, || {
+            rom.eval_slice(black_box(xs), black_box(&mut out));
+        });
+        rom_ns = Some(per_elem(b, xs.len()));
+    }
+
+    let speedup = |a: Option<f64>, z: Option<f64>| match (a, z) {
+        (Some(a), Some(z)) if z > 0.0 => Some(a / z),
+        _ => None,
+    };
+    let vs_interp = speedup(interp_ns, compiled_ns);
+    let rom_vs_interp = speedup(interp_ns, rom_ns);
+    let par_vs_compiled = speedup(compiled_ns, par_ns);
+    if let Some(g) = vs_interp {
+        println!("    -> {name}: compiled is {g:.2}x interpreted throughput\n");
+    }
+
+    Json::obj(vec![
+        ("name", Json::str(name)),
+        ("mode", mode.map(Json::str).unwrap_or(Json::Null)),
+        ("table_bytes", num_or_null(table_bytes.map(|v| v as f64))),
+        ("rom_bytes", num_or_null(rom_bytes.map(|v| v as f64))),
+        ("scalar_ns_per_elem", Json::num(scalar_ns)),
+        ("interp_ns_per_elem", num_or_null(interp_ns)),
+        ("compiled_ns_per_elem", num_or_null(compiled_ns)),
+        ("rom_ns_per_elem", num_or_null(rom_ns)),
+        ("par_ns_per_elem", num_or_null(par_ns)),
+        ("speedup_compiled_vs_interp", num_or_null(vs_interp)),
+        ("speedup_rom_vs_interp", num_or_null(rom_vs_interp)),
+        ("speedup_par_vs_compiled", num_or_null(par_vs_compiled)),
+    ])
+}
+
+fn main() {
+    let xs = inputs(N);
+    let xs_par = inputs(N_PAR);
+    let mut b = Bencher::new();
+    let pool = ThreadPool::new(ThreadPool::default_parallelism().min(8));
+    let mut entries: Vec<Json> = Vec::new();
+
+    println!("# kernel tier ladder, {N} Q2.13 inputs/iter ({N_PAR} for par)\n");
+
+    let cr = CatmullRom::paper_default();
+    let pwl = Pwl::paper_default();
+    let lut = PlainLut::paper_default();
+    let ralut = Ralut::paper_default();
+    let region = RegionBased::paper_default();
+    let dctif = Dctif::paper_default();
+    let plan_backed: Vec<(&str, &dyn TanhApprox, &KernelPlan)> = vec![
+        ("cr-k3", &cr, cr.plan()),
+        ("pwl-k3", &pwl, pwl.plan()),
+        ("lut-k4", &lut, lut.plan()),
+        ("ralut", &ralut, ralut.plan()),
+        ("region", &region, region.plan()),
+        ("dctif", &dctif, dctif.plan()),
+    ];
+    for (name, scalar, plan) in plan_backed {
+        let rom = Some(CompiledKernel::rom_of_plan(plan));
+        entries.push(ladder(&mut b, &pool, &xs, &xs_par, name, scalar, Some(plan), rom));
+    }
+
+    // Arithmetic pipelines: no plan, so ROM is built from the method's
+    // own bit-accurate scalar function.
+    let taylor = Taylor::paper_default();
+    let gomar = Gomar::paper_default();
+    let fn_backed: Vec<(&str, &dyn TanhApprox)> = vec![("taylor", &taylor), ("gomar", &gomar)];
+    for (name, scalar) in fn_backed {
+        let rom = Some(CompiledKernel::rom_from_fn(scalar.fmt(), |x| scalar.eval_raw(x)));
+        entries.push(ladder(&mut b, &pool, &xs, &xs_par, name, scalar, None, rom));
+    }
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("kernel")),
+        ("inputs_per_iter", Json::num(N as f64)),
+        ("par_inputs_per_iter", Json::num(N_PAR as f64)),
+        ("pool_workers", Json::num(pool.size() as f64)),
+        ("results", Json::Arr(entries)),
+    ]);
+    let path = std::env::var("CRSPLINE_BENCH_KERNEL_JSON")
+        .unwrap_or_else(|_| "BENCH_kernel.json".into());
+    match std::fs::write(&path, json::write(&doc) + "\n") {
+        Ok(()) => println!("\nwrote {} measurements to {path}", b.results.len()),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

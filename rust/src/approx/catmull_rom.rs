@@ -27,8 +27,9 @@
 
 use super::{tanh_ref, TanhApprox};
 use crate::fixed::kernel::{self, KernelPlan};
-use crate::fixed::{round_shift, QFormat, Rounding, Q2_13};
+use crate::fixed::{cache, round_shift, CompiledKernel, QFormat, Rounding, Q2_13};
 use crate::hw::area::Resources;
+use std::sync::Arc;
 
 /// How control points past the top of the domain are provided.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -58,6 +59,10 @@ pub struct CatmullRom {
     /// reads `taps[s .. s+4]` — no sign branch, no clamp in the inner
     /// loop (perf pass; see EXPERIMENTS.md §Perf).
     plan: KernelPlan,
+    /// Branch-free compiled form of `plan`, shared process-wide through
+    /// `fixed::cache` (coordinator workers and nn layers reuse one
+    /// build). Drives the batch hot path; bit-identical to the plan.
+    compiled: Arc<CompiledKernel>,
     boundary: Boundary,
     /// Optional basis-bus truncation (fraction bits of b after rounding).
     /// `None` = full precision (3·tbits). Smaller values shrink the MAC
@@ -101,12 +106,14 @@ impl CatmullRom {
         // "reads past tanh(4) return tanh(4)" semantics.
         let lut_ext = tanh_ref::extend_lut(&lut, depth, matches!(boundary, Boundary::Clamp));
         let plan = KernelPlan::catmull_rom(fmt, tbits, lut_ext);
+        let compiled = cache::kernel_for(&format!("cr-k{k}-{boundary:?}@{fmt}"), &plan);
         Self {
             k,
             tbits,
             fmt,
             lut,
             plan,
+            compiled,
             boundary,
             basis_frac: None,
         }
@@ -147,6 +154,11 @@ impl CatmullRom {
     /// The executed kernel plan (shared fixed-point engine).
     pub fn plan(&self) -> &KernelPlan {
         &self.plan
+    }
+
+    /// The cached compiled kernel the batch hot path runs on.
+    pub fn compiled(&self) -> &Arc<CompiledKernel> {
+        &self.compiled
     }
 
     /// Control point P(idx) with odd extension below zero and the
@@ -268,10 +280,11 @@ impl TanhApprox for CatmullRom {
         }
     }
 
-    /// Batch hot path: the shared engine's CR loop — every loop-invariant
-    /// hoisted, fold → contiguous 4-tap read → i64 MAC → inline
-    /// round-half-even, no per-element bounds or sign re-derivation.
-    /// Bit-identical to the scalar entry point by construction.
+    /// Batch hot path: the compiled kernel — fold → masked shift-index →
+    /// 3-multiply Horner MAC on precomputed per-segment rows (or a direct
+    /// ROM read under `CRSPLINE_ROM`), sharded across the shared pool for
+    /// very large batches. Bit-identical to the scalar entry point; the
+    /// exhaustive proof is `tests/integration_compiled.rs`.
     fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
         if self.basis_frac.is_some() {
             // Ablation path stays scalar: its i128 rounding sequence is
@@ -282,7 +295,7 @@ impl TanhApprox for CatmullRom {
             }
             return;
         }
-        self.plan.eval_slice(xs, out);
+        self.compiled.eval_slice_auto(xs, out);
     }
 
     fn resources(&self) -> Option<Resources> {

@@ -17,8 +17,9 @@
 //! uniform-select / per-row-MAC plan on the shared [`KernelPlan`] engine.
 
 use super::{tanh_ref, TanhApprox};
-use crate::fixed::{KernelPlan, QFormat, Q2_13};
+use crate::fixed::{cache, CompiledKernel, KernelPlan, QFormat, Q2_13};
 use crate::hw::area::Resources;
+use std::sync::Arc;
 
 /// DCT interpolation filter approximator.
 #[derive(Clone, Debug)]
@@ -33,6 +34,9 @@ pub struct Dctif {
     /// Sample LUT (positive side + guards), raw in `fmt`.
     lut: Vec<i32>,
     plan: KernelPlan,
+    /// Cache-shared compiled form of `plan`: one output per α-cell
+    /// (the row MAC is constant across each 2^(tbits−abits) cell).
+    compiled: Arc<CompiledKernel>,
 }
 
 /// Ideal (unquantized) 4-tap DCTIF weights at fractional offset alpha.
@@ -95,7 +99,8 @@ impl Dctif {
         // CR Extend path, so a broken table build fails at construction.
         let lut_ext = tanh_ref::extend_lut(&lut, 1usize << (k + fmt.int_bits), false);
         let plan = KernelPlan::rows(fmt, tbits, abits, cfrac, rows, lut_ext);
-        Self { k, abits, cbits, fmt, lut, plan }
+        let compiled = cache::kernel_for(&format!("dctif-k{k}-a{abits}-c{cbits}@{fmt}"), &plan);
+        Self { k, abits, cbits, fmt, lut, plan, compiled }
     }
 
     /// The 11-bit-precision configuration of Table III (22.17 Kbit memory):
@@ -117,6 +122,16 @@ impl Dctif {
         let coeff = (1u64 << self.abits) * 4 * self.cbits as u64;
         let samples = self.lut.len() as u64 * (self.fmt.frac_bits + 1) as u64;
         coeff + samples
+    }
+
+    /// The executed kernel plan (shared fixed-point engine).
+    pub fn plan(&self) -> &KernelPlan {
+        &self.plan
+    }
+
+    /// The cached compiled kernel the batch hot path runs on.
+    pub fn compiled(&self) -> &Arc<CompiledKernel> {
+        &self.compiled
     }
 }
 
@@ -141,11 +156,11 @@ impl TanhApprox for Dctif {
         self.plan.eval(x)
     }
 
-    /// Batch hot path: the engine's row-MAC loop — coefficient row select
-    /// + contiguous 4-tap read from the extended table (no per-element
-    /// odd-extension branch), i64 MAC while it fits, one shared rounder.
+    /// Batch hot path: the compiled per-cell table — the row MAC is
+    /// constant across each α-cell, so it collapses to a shift + masked
+    /// read per element. Bit-identical to the scalar entry point.
     fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
-        self.plan.eval_slice(xs, out);
+        self.compiled.eval_slice_auto(xs, out);
     }
 
     fn resources(&self) -> Option<Resources> {

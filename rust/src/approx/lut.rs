@@ -10,8 +10,9 @@
 //! interpolating methods.
 
 use super::{tanh_ref, TanhApprox};
-use crate::fixed::{KernelPlan, QFormat, Q2_13};
+use crate::fixed::{cache, CompiledKernel, KernelPlan, QFormat, Q2_13};
 use crate::hw::area::Resources;
+use std::sync::Arc;
 
 /// Nearest-entry LUT with uniform step h = 2^-k.
 #[derive(Clone, Debug)]
@@ -20,6 +21,8 @@ pub struct PlainLut {
     fmt: QFormat,
     lut: Vec<i32>, // depth + 1: include the top sample for rounding up
     plan: KernelPlan,
+    /// Cache-shared compiled form of `plan` (per-cell table); hot path.
+    compiled: Arc<CompiledKernel>,
 }
 
 impl PlainLut {
@@ -36,7 +39,8 @@ impl PlainLut {
         let tbits = fmt.frac_bits - k;
         let lut = tanh_ref::build_lut_fmt(k, 1, fmt);
         let plan = KernelPlan::nearest(fmt, tbits, lut.iter().map(|&p| p as i64).collect());
-        Self { k, fmt, lut, plan }
+        let compiled = cache::kernel_for(&format!("lut-k{k}@{fmt}"), &plan);
+        Self { k, fmt, lut, plan, compiled }
     }
 
     /// 64-entry LUT (h = 0.0625) — the depth a plain LUT needs to get
@@ -47,6 +51,16 @@ impl PlainLut {
 
     pub fn depth(&self) -> usize {
         1 << (self.k + self.fmt.int_bits)
+    }
+
+    /// The executed kernel plan (shared fixed-point engine).
+    pub fn plan(&self) -> &KernelPlan {
+        &self.plan
+    }
+
+    /// The cached compiled kernel the batch hot path runs on.
+    pub fn compiled(&self) -> &Arc<CompiledKernel> {
+        &self.compiled
     }
 }
 
@@ -71,11 +85,11 @@ impl TanhApprox for PlainLut {
         self.plan.eval(x)
     }
 
-    /// Batch hot path: the engine's nearest-node loop. The table holds
-    /// depth+1 entries so `(u + half) >> tbits <= depth` always — a bare
-    /// round-to-nearest index plus one read per element.
+    /// Batch hot path: the compiled per-cell table — the rounding add is
+    /// folded into the table geometry, leaving a bare shift + masked read
+    /// per element. Bit-identical to the scalar entry point.
     fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
-        self.plan.eval_slice(xs, out);
+        self.compiled.eval_slice_auto(xs, out);
     }
 
     fn resources(&self) -> Option<Resources> {

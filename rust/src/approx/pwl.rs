@@ -7,8 +7,9 @@
 //! with one final round-half-even by the shared [`KernelPlan`] engine.
 
 use super::{tanh_ref, TanhApprox};
-use crate::fixed::{KernelPlan, QFormat, Q2_13};
+use crate::fixed::{cache, CompiledKernel, KernelPlan, QFormat, Q2_13};
 use crate::hw::area::Resources;
+use std::sync::Arc;
 
 /// PWL interpolator over a uniform LUT with step h = 2^-k.
 #[derive(Clone, Debug)]
@@ -18,6 +19,8 @@ pub struct Pwl {
     fmt: QFormat,
     lut: Vec<i32>, // depth + 1 entries: needs P(depth) = tanh(4) at the top
     plan: KernelPlan,
+    /// Cache-shared compiled form of `plan` (affine rows); batch hot path.
+    compiled: Arc<CompiledKernel>,
 }
 
 impl Pwl {
@@ -34,7 +37,8 @@ impl Pwl {
         let tbits = fmt.frac_bits - k;
         let lut = tanh_ref::build_lut_fmt(k, 1, fmt);
         let plan = KernelPlan::linear(fmt, tbits, lut.iter().map(|&p| p as i64).collect());
-        Self { k, tbits, fmt, lut, plan }
+        let compiled = cache::kernel_for(&format!("pwl-k{k}@{fmt}"), &plan);
+        Self { k, tbits, fmt, lut, plan, compiled }
     }
 
     /// Same LUT depth as the paper's chosen CR configuration (h = 0.125).
@@ -44,6 +48,16 @@ impl Pwl {
 
     pub fn depth(&self) -> usize {
         1 << (self.k + self.fmt.int_bits)
+    }
+
+    /// The executed kernel plan (shared fixed-point engine).
+    pub fn plan(&self) -> &KernelPlan {
+        &self.plan
+    }
+
+    /// The cached compiled kernel the batch hot path runs on.
+    pub fn compiled(&self) -> &Arc<CompiledKernel> {
+        &self.compiled
     }
 }
 
@@ -68,12 +82,11 @@ impl TanhApprox for Pwl {
         self.plan.eval(x)
     }
 
-    /// Batch hot path: the engine's 2-tap linear loop. The LUT stores
-    /// depth+1 entries and the folded magnitude is < depth·2^tbits, so
-    /// `seg + 1 <= depth` always — both taps are read unconditionally.
-    /// Bit-identical to the scalar entry point.
+    /// Batch hot path: the compiled affine rows `[p₀·2^t, p₁ − p₀]` — one
+    /// multiply-add per element behind a masked index, no per-segment
+    /// two-tap window read. Bit-identical to the scalar entry point.
     fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
-        self.plan.eval_slice(xs, out);
+        self.compiled.eval_slice_auto(xs, out);
     }
 
     fn resources(&self) -> Option<Resources> {

@@ -16,8 +16,9 @@
 //! + priority encoding like the published RALUT structure.
 
 use super::TanhApprox;
-use crate::fixed::{KernelPlan, QFormat, Q2_13};
+use crate::fixed::{cache, CompiledKernel, KernelPlan, QFormat, Q2_13};
 use crate::hw::area::Resources;
+use std::sync::Arc;
 
 /// One stored range: inputs with magnitude in [start, next.start) map to `y`.
 #[derive(Clone, Copy, Debug)]
@@ -33,6 +34,9 @@ pub struct Ralut {
     fmt: QFormat,
     ranges: Vec<Range>,
     plan: KernelPlan,
+    /// Cache-shared compiled form of `plan`: the variable-width ranges
+    /// flattened to one output per raw magnitude (no binary search).
+    compiled: Arc<CompiledKernel>,
 }
 
 impl Ralut {
@@ -78,7 +82,10 @@ impl Ralut {
             ranges.iter().map(|r| r.start as i64).collect(),
             ranges.iter().map(|r| r.y as i64).collect(),
         );
-        Self { eps, fmt, ranges, plan }
+        // ε keys by bit pattern: two ε values that print alike must not
+        // alias in the process-wide cache.
+        let compiled = cache::kernel_for(&format!("ralut-{:016x}@{fmt}", eps.to_bits()), &plan);
+        Self { eps, fmt, ranges, plan, compiled }
     }
 
     /// Target the accuracy [5] reports for its 10-bit RALUT.
@@ -96,6 +103,16 @@ impl Ralut {
 
     pub fn ranges(&self) -> &[Range] {
         &self.ranges
+    }
+
+    /// The executed kernel plan (shared fixed-point engine).
+    pub fn plan(&self) -> &KernelPlan {
+        &self.plan
+    }
+
+    /// The cached compiled kernel the batch hot path runs on.
+    pub fn compiled(&self) -> &Arc<CompiledKernel> {
+        &self.compiled
     }
 }
 
@@ -120,11 +137,12 @@ impl TanhApprox for Ralut {
         self.plan.eval(x)
     }
 
-    /// Batch hot path: the engine's range-search loop. `starts` is sorted
-    /// with `starts[0] == 0` by construction, so the binary search's
-    /// `Err(i)` has `i >= 1` and every read is in range.
+    /// Batch hot path: the compiled direct table — the per-element binary
+    /// search over range starts becomes a single masked read (the ranges
+    /// are flattened to per-magnitude outputs at build time).
+    /// Bit-identical to the scalar entry point.
     fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
-        self.plan.eval_slice(xs, out);
+        self.compiled.eval_slice_auto(xs, out);
     }
 
     fn resources(&self) -> Option<Resources> {

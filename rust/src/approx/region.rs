@@ -16,8 +16,9 @@
 //! centered constant), and a 2⁻⁵-step mapping in between.
 
 use super::TanhApprox;
-use crate::fixed::{KernelPlan, QFormat, Q2_13};
+use crate::fixed::{cache, CompiledKernel, KernelPlan, QFormat, Q2_13};
 use crate::hw::area::Resources;
+use std::sync::Arc;
 
 /// Region-based approximator.
 #[derive(Clone, Debug)]
@@ -25,6 +26,9 @@ pub struct RegionBased {
     fmt: QFormat,
     table_entries: usize,
     plan: KernelPlan,
+    /// Cache-shared compiled form of `plan`: the three-region comparator
+    /// chain flattened to one output per raw magnitude.
+    compiled: Arc<CompiledKernel>,
 }
 
 impl RegionBased {
@@ -54,7 +58,13 @@ impl RegionBased {
         let sat_value = fmt.quantize((1.0 + sat_start.tanh()) / 2.0);
         let table_entries = table.len();
         let plan = KernelPlan::regions(fmt, pe, ss, sat_value, step_shift, table);
-        Self { fmt, table_entries, plan }
+        // sat_value is derived from the f64 sat_start (not ss), so it is
+        // part of the identity and must appear in the cache key.
+        let compiled = cache::kernel_for(
+            &format!("region-p{pe}-s{ss}-v{sat_value}-t{step_shift}@{fmt}"),
+            &plan,
+        );
+        Self { fmt, table_entries, plan, compiled }
     }
 
     /// Error budget ~0.0196 (the published design's accuracy).
@@ -64,6 +74,16 @@ impl RegionBased {
 
     pub fn table_entries(&self) -> usize {
         self.table_entries
+    }
+
+    /// The executed kernel plan (shared fixed-point engine).
+    pub fn plan(&self) -> &KernelPlan {
+        &self.plan
+    }
+
+    /// The cached compiled kernel the batch hot path runs on.
+    pub fn compiled(&self) -> &Arc<CompiledKernel> {
+        &self.compiled
     }
 }
 
@@ -88,8 +108,11 @@ impl TanhApprox for RegionBased {
         self.plan.eval(x)
     }
 
+    /// Batch hot path: the compiled direct table — the pass/processing/
+    /// saturation comparator chain becomes a single masked read per
+    /// element. Bit-identical to the scalar entry point.
     fn tanh_slice(&self, xs: &[i32], out: &mut [i32]) {
-        self.plan.eval_slice(xs, out);
+        self.compiled.eval_slice_auto(xs, out);
     }
 
     fn resources(&self) -> Option<Resources> {

@@ -43,12 +43,15 @@ struct Queue<T> {
 pub struct Batcher<T> {
     policy: BatchPolicy,
     queues: BTreeMap<ModelKey, Queue<T>>,
+    /// Reused by `poll_expired` so the tick loop does not allocate a key
+    /// Vec on every poll (most polls find nothing expired).
+    scratch: Vec<ModelKey>,
 }
 
 impl<T> Batcher<T> {
     pub fn new(policy: BatchPolicy) -> Self {
         assert!(policy.max_batch >= 1);
-        Self { policy, queues: BTreeMap::new() }
+        Self { policy, queues: BTreeMap::new(), scratch: Vec::new() }
     }
 
     /// Enqueue an item; returns a closed batch if the key's queue reached
@@ -82,18 +85,31 @@ impl<T> Batcher<T> {
     }
 
     /// Close every batch whose oldest item has exceeded `max_wait`.
+    ///
+    /// Allocation-conscious: expired keys collect into a scratch Vec
+    /// reused across calls, and the common nothing-expired poll returns
+    /// an empty Vec (`Vec::new` on an empty result does not allocate).
     pub fn poll_expired(&mut self, now: Instant) -> Vec<Batch<T>> {
-        let expired: Vec<ModelKey> = self
-            .queues
-            .iter()
-            .filter(|(_, q)| {
-                q.items
-                    .front()
-                    .is_some_and(|(t, _)| now.duration_since(*t) >= self.policy.max_wait)
-            })
-            .map(|(k, _)| k.clone())
-            .collect();
-        expired.iter().filter_map(|k| self.close(k)).collect()
+        let mut expired = std::mem::take(&mut self.scratch);
+        expired.clear();
+        expired.extend(
+            self.queues
+                .iter()
+                .filter(|(_, q)| {
+                    q.items
+                        .front()
+                        .is_some_and(|(t, _)| now.duration_since(*t) >= self.policy.max_wait)
+                })
+                .map(|(k, _)| k.clone()),
+        );
+        let out = if expired.is_empty() {
+            Vec::new()
+        } else {
+            expired.iter().filter_map(|k| self.close(k)).collect()
+        };
+        expired.clear();
+        self.scratch = expired;
+        out
     }
 
     /// Flush everything (shutdown path).
@@ -178,6 +194,29 @@ mod tests {
         assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(10)));
         b.push(key("a"), 2, t0 - Duration::from_millis(5));
         assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn repeated_expiry_cycles_reuse_scratch_and_stay_correct() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        for round in 0..10u64 {
+            let t = t0 + Duration::from_millis(round * 20);
+            // interleave idle polls (nothing queued, nothing expired)
+            assert!(b.poll_expired(t).is_empty());
+            b.push(key("m"), round as i32, t);
+            b.push(key("n"), round as i32 + 100, t);
+            // not yet expired
+            assert!(b.poll_expired(t + Duration::from_millis(4)).is_empty());
+            let expired = b.poll_expired(t + Duration::from_millis(5));
+            assert_eq!(expired.len(), 2, "round {round}");
+            let mut items: Vec<i32> = expired.iter().flat_map(|e| e.items.clone()).collect();
+            items.sort_unstable();
+            assert_eq!(items, vec![round as i32, round as i32 + 100]);
+            assert_eq!(b.pending(), 0);
+        }
+        // scratch stays internal: capacity can persist, contents must not
+        assert!(b.poll_expired(t0 + Duration::from_secs(60)).is_empty());
     }
 
     #[test]

@@ -18,6 +18,10 @@ pub struct Metrics {
     pub padding_slots: AtomicU64,
     queue_ns: Mutex<Histogram>,
     exec_ns: Mutex<Histogram>,
+    /// Backend evaluation time alone (the `backend.run` call inside a
+    /// batch), excluding padding assembly and response fan-out — the part
+    /// the compiled-kernel path is meant to shrink.
+    eval_ns: Mutex<Histogram>,
     e2e_ns: Mutex<Histogram>,
 }
 
@@ -34,6 +38,10 @@ impl Metrics {
         self.exec_ns.lock().unwrap().record(d.as_nanos() as u64);
     }
 
+    pub fn record_eval(&self, d: Duration) {
+        self.eval_ns.lock().unwrap().record(d.as_nanos() as u64);
+    }
+
     pub fn record_e2e(&self, d: Duration) {
         self.e2e_ns.lock().unwrap().record(d.as_nanos() as u64);
     }
@@ -48,6 +56,7 @@ impl Metrics {
             padding_slots: self.padding_slots.load(Ordering::Relaxed),
             queue: self.queue_ns.lock().unwrap().clone(),
             exec: self.exec_ns.lock().unwrap().clone(),
+            eval: self.eval_ns.lock().unwrap().clone(),
             e2e: self.e2e_ns.lock().unwrap().clone(),
         }
     }
@@ -64,6 +73,7 @@ pub struct MetricsSnapshot {
     pub padding_slots: u64,
     pub queue: Histogram,
     pub exec: Histogram,
+    pub eval: Histogram,
     pub e2e: Histogram,
 }
 
@@ -113,6 +123,12 @@ impl std::fmt::Display for MetricsSnapshot {
             fmt_ns(self.exec.quantile(0.5)),
             fmt_ns(self.exec.quantile(0.99))
         )?;
+        writeln!(
+            f,
+            "eval:     p50={} p99={}",
+            fmt_ns(self.eval.quantile(0.5)),
+            fmt_ns(self.eval.quantile(0.99))
+        )?;
         write!(
             f,
             "e2e:      p50={} p99={} max={}",
@@ -136,13 +152,16 @@ mod tests {
         m.batched_items.fetch_add(9, Ordering::Relaxed);
         m.padding_slots.fetch_add(3, Ordering::Relaxed);
         m.record_e2e(Duration::from_micros(100));
+        m.record_eval(Duration::from_micros(40));
         let s = m.snapshot();
         assert_eq!(s.submitted, 10);
         assert_eq!(s.mean_batch(), 3.0);
         assert!((s.padding_ratio() - 0.25).abs() < 1e-12);
         assert!(s.e2e.count() == 1);
+        assert!(s.eval.count() == 1);
         let text = s.to_string();
         assert!(text.contains("mean_size=3.00"), "{text}");
+        assert!(text.contains("eval:"), "{text}");
     }
 
     #[test]

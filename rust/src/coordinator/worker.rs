@@ -206,7 +206,12 @@ pub fn run_batch(
             metrics
                 .padding_slots
                 .fetch_add((bucket - n) as u64, Ordering::Relaxed);
-            backend.run(&key, bucket, &flat)
+            // Time the backend call alone: exec also covers padding
+            // assembly and fan-out, so eval isolates kernel throughput.
+            let eval_start = Instant::now();
+            let r = backend.run(&key, bucket, &flat);
+            metrics.record_eval(eval_start.elapsed());
+            r
         }
         (None, _) => Err(format!("unknown model {key}")),
         (_, None) => Err(format!("batch of {n} exceeds largest bucket for {key}")),

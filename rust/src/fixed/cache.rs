@@ -1,0 +1,133 @@
+//! Process-wide compiled-kernel cache.
+//!
+//! Every coordinator worker used to rebuild its approximators — and
+//! therefore their tables — from scratch at thread start. Compilation
+//! (and especially ROM materialization) is worth doing exactly once per
+//! (method configuration, [`QFormat`]): [`get_or_compile`] keys an
+//! `Arc<CompiledKernel>` by the caller-supplied configuration string and
+//! builds **under the cache lock**, so two workers racing for the same
+//! key produce one build and one hit instead of two builds.
+//!
+//! [`kernel_for`] is the front door the approximation methods use: it
+//! picks the flattened-table compile by default, or the full-domain ROM
+//! when `CRSPLINE_ROM=1` and the format is narrow enough
+//! ([`CompiledKernel::rom_feasible`]). The [`hits`]/[`misses`] counters
+//! let tests assert the no-per-worker-rebuild property directly.
+
+use super::compiled::CompiledKernel;
+use super::kernel::KernelPlan;
+use super::QFormat;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+static HITS: AtomicU64 = AtomicU64::new(0);
+static MISSES: AtomicU64 = AtomicU64::new(0);
+
+fn cache() -> &'static Mutex<HashMap<String, Arc<CompiledKernel>>> {
+    static CACHE: OnceLock<Mutex<HashMap<String, Arc<CompiledKernel>>>> = OnceLock::new();
+    CACHE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+/// Fetch the kernel for `key`, building it at most once process-wide.
+/// The key must uniquely determine the build (method parameters + format
+/// — `Display`-formatted floats are not enough for e.g. RALUT's ε, use
+/// the bit pattern).
+pub fn get_or_compile(key: &str, build: impl FnOnce() -> CompiledKernel) -> Arc<CompiledKernel> {
+    let mut map = cache().lock().unwrap_or_else(|p| p.into_inner());
+    if let Some(k) = map.get(key) {
+        HITS.fetch_add(1, Ordering::Relaxed);
+        return Arc::clone(k);
+    }
+    MISSES.fetch_add(1, Ordering::Relaxed);
+    let compiled = Arc::new(build());
+    map.insert(key.to_string(), Arc::clone(&compiled));
+    compiled
+}
+
+/// The standard compile-or-ROM decision for a plan-backed method:
+/// flattened tables by default, the full-domain ROM when `CRSPLINE_ROM`
+/// is set and the format permits. ROM entries get their own cache slot
+/// (`rom:` prefix) so the two modes never alias.
+pub fn kernel_for(key: &str, plan: &KernelPlan) -> Arc<CompiledKernel> {
+    if rom_enabled() && CompiledKernel::rom_feasible(plan.fmt()) {
+        get_or_compile(&format!("rom:{key}"), || CompiledKernel::rom_of_plan(plan))
+    } else {
+        get_or_compile(key, || CompiledKernel::compile(plan))
+    }
+}
+
+/// Whether `CRSPLINE_ROM` requests full-domain ROM kernels (read once).
+pub fn rom_enabled() -> bool {
+    static ROM: OnceLock<bool> = OnceLock::new();
+    *ROM.get_or_init(|| {
+        matches!(
+            std::env::var("CRSPLINE_ROM").ok().as_deref().map(str::trim),
+            Some("1") | Some("true") | Some("on")
+        )
+    })
+}
+
+/// Helper for ROM-capability checks without a plan in hand.
+pub fn rom_available(fmt: QFormat) -> bool {
+    rom_enabled() && CompiledKernel::rom_feasible(fmt)
+}
+
+/// Cache hits since process start.
+pub fn hits() -> u64 {
+    HITS.load(Ordering::Relaxed)
+}
+
+/// Cache misses (= builds) since process start.
+pub fn misses() -> u64 {
+    MISSES.load(Ordering::Relaxed)
+}
+
+/// Distinct kernels currently cached.
+pub fn entries() -> usize {
+    cache().lock().map(|m| m.len()).unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q2_13;
+
+    fn toy_plan() -> KernelPlan {
+        let lut = crate::approx::tanh_ref::build_lut(3, 2);
+        let ext = crate::approx::tanh_ref::extend_lut(&lut, 32, false);
+        KernelPlan::catmull_rom(Q2_13, 10, ext)
+    }
+
+    #[test]
+    fn same_key_returns_same_arc_and_counts_a_hit() {
+        // Unique key: tests share the process-wide cache.
+        let key = "test-cache-same-key";
+        let plan = toy_plan();
+        let (h0, m0) = (hits(), misses());
+        let a = get_or_compile(key, || CompiledKernel::compile(&plan));
+        let b = get_or_compile(key, || CompiledKernel::compile(&plan));
+        assert!(Arc::ptr_eq(&a, &b));
+        // Parallel tests may bump the globals too: check our own deltas
+        // as lower bounds.
+        assert!(misses() >= m0 + 1);
+        assert!(hits() >= h0 + 1);
+        assert!(entries() >= 1);
+    }
+
+    #[test]
+    fn second_build_closure_never_runs() {
+        let key = "test-cache-build-once";
+        let plan = toy_plan();
+        let _ = get_or_compile(key, || CompiledKernel::compile(&plan));
+        let _ = get_or_compile(key, || unreachable!("cached key must not rebuild"));
+    }
+
+    #[test]
+    fn distinct_keys_build_distinct_kernels() {
+        let plan = toy_plan();
+        let a = get_or_compile("test-cache-a", || CompiledKernel::compile(&plan));
+        let b = get_or_compile("test-cache-b", || CompiledKernel::compile(&plan));
+        assert!(!Arc::ptr_eq(&a, &b));
+    }
+}

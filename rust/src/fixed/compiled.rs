@@ -1,0 +1,567 @@
+//! Compiled kernels: branch-free, directly-indexed executions of a
+//! [`KernelPlan`].
+//!
+//! The interpreter in `kernel.rs` re-runs fold → segment select →
+//! coefficient MAC per element, with a bounds-checked 4-tap window read
+//! in the hot loop. [`CompiledKernel::compile`] flattens that structure
+//! once, at build time:
+//!
+//! * **`poly3`** (CR plans) — each segment's four taps collapse into the
+//!   cubic's power-basis coefficients, pre-scaled so a 3-multiply Horner
+//!   MAC produces exactly the interpreter's accumulator.
+//! * **`affine`** (PWL plans) — `[p0·2^tbits, p1 − p0]` rows; one
+//!   multiply-add per element.
+//! * **`const`** (nearest / ranges / regions / DCTIF plans) — the plan's
+//!   output is provably constant over every `2^shift`-wide cell of the
+//!   magnitude domain, so one output per cell is precomputed *by the
+//!   interpreter itself* (bit-identity by construction).
+//! * **`rom`** ([`CompiledKernel::rom_of_plan`]) — the entire signed
+//!   input domain materialized (the LUT-vs-datapath trade-off the hw
+//!   layer models; 128 KiB at the 16-bit paper format), O(1) per element.
+//!
+//! All tables are padded to a power of two and indexed through a hoisted
+//! mask, so the hot loops carry no bounds-check branches. Plans the
+//! strategies cannot cover (or whose tables would exceed
+//! [`MAX_ROM_WIDTH`]) fall back to the interpreter unchanged. Exhaustive
+//! bit-identity proofs live in `tests/integration_compiled.rs`.
+//!
+//! [`CompiledKernel::eval_slice_par`] shards large batches across a
+//! [`ThreadPool`]; [`CompiledKernel::eval_slice_auto`] picks serial vs
+//! the process-shared pool at the `CRSPLINE_PAR_THRESHOLD` crossover.
+
+use super::kernel::{fold_mag, Coeff, KernelPlan, Select};
+use super::{round_shift, round_shift_half_even_i64, QFormat, Rounding};
+use crate::util::pool::ThreadPool;
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Widest input format (total bits) for which full-domain tables are
+/// built: 2^20 entries ≈ 4 MiB of i32 — beyond that, compile falls back
+/// to the interpreter and ROM construction is reported infeasible.
+pub const MAX_ROM_WIDTH: u32 = 20;
+
+/// Default `eval_slice_auto` crossover (elements) between the serial
+/// loop and pool sharding; override with `CRSPLINE_PAR_THRESHOLD`
+/// (0 disables the parallel path).
+pub const DEFAULT_PAR_THRESHOLD: usize = 16 * 1024;
+
+enum Table {
+    /// Per-segment cubic rows `[a0·2^3t, a1·2^2t, a2·2^t, a3]`, Horner
+    /// MAC in i64 (the build proved every partial fits).
+    Poly { shift: u32, tmask: i64, mask: usize, post: u32, rows: Vec<[i64; 4]> },
+    /// Same rows unscaled, Horner MAC in i128 (wide formats where the
+    /// interpreter also widens).
+    PolyWide { shift: u32, tmask: i64, mask: usize, post: u32, rows: Vec<[i64; 4]> },
+    /// Per-segment affine rows `[p0·2^t, p1 − p0]`.
+    Affine { shift: u32, tmask: i64, mask: usize, post: u32, rows: Vec<[i64; 2]> },
+    /// One precomputed output per `2^shift`-wide cell of the magnitude
+    /// domain (sign restored by the caller-side fold).
+    Const { shift: u32, mask: usize, vals: Vec<i32> },
+    /// Full signed-domain table indexed by `x − min_raw`, i16 storage
+    /// (formats whose outputs fit 16 bits).
+    Rom16 { base: i64, mask: usize, vals: Vec<i16> },
+    /// Full signed-domain table, i32 storage.
+    Rom32 { base: i64, mask: usize, vals: Vec<i32> },
+    /// Interpreter fallback for shapes/sizes the strategies don't cover.
+    Interp(Box<KernelPlan>),
+}
+
+/// A [`KernelPlan`] flattened for branch-free batch evaluation.
+/// Bit-identical to the plan interpreter over the full input domain.
+pub struct CompiledKernel {
+    fmt: QFormat,
+    clamp: i64,
+    table: Table,
+}
+
+/// Pad a non-empty table to power-of-two length by repeating the last
+/// entry; returns `(table, mask)` so valid indices never bounds-check.
+fn pad_pow2<T: Copy>(mut v: Vec<T>) -> (Vec<T>, usize) {
+    let last = *v.last().expect("compiled table must be non-empty");
+    let n = v.len().next_power_of_two();
+    v.resize(n, last);
+    (v, n - 1)
+}
+
+impl CompiledKernel {
+    /// Flatten `plan` into its branch-free form. Always succeeds; shapes
+    /// without a table strategy run through the embedded interpreter.
+    pub fn compile(plan: &KernelPlan) -> Self {
+        let fmt = plan.fmt();
+        let max_raw = fmt.max_raw();
+        let cells_fit = |shift: u32| (max_raw >> shift) < (1i64 << MAX_ROM_WIDTH);
+        let half_even = matches!(plan.rounding(), Rounding::HalfEven);
+        let table = match (plan.select(), plan.coeff()) {
+            (Select::Uniform { tbits }, Coeff::CrBasis) if half_even => {
+                build_poly(plan, *tbits)
+            }
+            (Select::Uniform { tbits }, Coeff::Linear) if half_even => {
+                build_affine(plan, *tbits)
+            }
+            (Select::Uniform { tbits }, Coeff::Rows { abits, .. })
+                if cells_fit(tbits - abits) =>
+            {
+                // The row MAC depends on u only through `seg = u >> tbits`
+                // and `(u & tmask) >> (tbits − abits)` — both functions of
+                // the `2^(tbits − abits)` cell index alone.
+                build_const(plan, tbits - abits)
+            }
+            (Select::Nearest { tbits }, Coeff::Unit) if cells_fit(tbits - 1) => {
+                // `(u + 2^(t−1)) >> t` is constant over each `2^(t−1)` cell:
+                // writing u = h·2^(t−1) + r, the index is ⌈(h+1)/2⌉ − (h odd).
+                build_const(plan, tbits - 1)
+            }
+            (Select::Ranges { .. }, Coeff::Unit) | (Select::Regions { .. }, Coeff::Unit)
+                if cells_fit(0) =>
+            {
+                build_const(plan, 0)
+            }
+            _ => Table::Interp(Box::new(plan.clone())),
+        };
+        Self { fmt, clamp: plan.clamp(), table }
+    }
+
+    /// Whether [`CompiledKernel::rom_of_plan`] / `rom_from_fn` will build
+    /// for this format.
+    pub fn rom_feasible(fmt: QFormat) -> bool {
+        fmt.width() <= MAX_ROM_WIDTH
+    }
+
+    /// Full-domain ROM of a plan: `2^width` outputs indexed directly by
+    /// the (saturated) signed input.
+    pub fn rom_of_plan(plan: &KernelPlan) -> Self {
+        Self::rom_from_fn(plan.fmt(), |x| plan.eval(x))
+    }
+
+    /// Full-domain ROM of an arbitrary evaluator (used for the
+    /// arithmetic methods that have no plan — Taylor, Gomar). `f` is
+    /// called once per raw input in `[min_raw, max_raw]`; its outputs
+    /// must fit the format's width.
+    pub fn rom_from_fn(fmt: QFormat, f: impl Fn(i64) -> i64) -> Self {
+        assert!(
+            Self::rom_feasible(fmt),
+            "{fmt} ROM would need 2^{} entries (cap 2^{MAX_ROM_WIDTH})",
+            fmt.width()
+        );
+        let (min, max) = (fmt.min_raw(), fmt.max_raw());
+        let mask = (max - min) as usize; // 2^width − 1
+        // 16-bit storage when every possible output fits (the clamp bound
+        // is ±scale, which can exceed i16 only for frac_bits >= 15).
+        let table = if fmt.width() <= 16 && fmt.scale() <= i16::MAX as i64 {
+            let vals = (min..=max).map(|x| f(x) as i16).collect();
+            Table::Rom16 { base: min, mask, vals }
+        } else {
+            let vals = (min..=max).map(|x| f(x) as i32).collect();
+            Table::Rom32 { base: min, mask, vals }
+        };
+        Self { fmt, clamp: fmt.scale(), table }
+    }
+
+    pub fn fmt(&self) -> QFormat {
+        self.fmt
+    }
+
+    /// Strategy the compile picked (for reporting/benchmarks).
+    pub fn mode(&self) -> &'static str {
+        match &self.table {
+            Table::Poly { .. } => "poly3",
+            Table::PolyWide { .. } => "poly3-wide",
+            Table::Affine { .. } => "affine",
+            Table::Const { .. } => "const",
+            Table::Rom16 { .. } => "rom16",
+            Table::Rom32 { .. } => "rom32",
+            Table::Interp(_) => "interp",
+        }
+    }
+
+    /// Bytes held by the compiled table (padded).
+    pub fn table_bytes(&self) -> usize {
+        match &self.table {
+            Table::Poly { rows, .. } | Table::PolyWide { rows, .. } => {
+                rows.len() * std::mem::size_of::<[i64; 4]>()
+            }
+            Table::Affine { rows, .. } => rows.len() * std::mem::size_of::<[i64; 2]>(),
+            Table::Const { vals, .. } => vals.len() * 4,
+            Table::Rom16 { vals, .. } => vals.len() * 2,
+            Table::Rom32 { vals, .. } => vals.len() * 4,
+            Table::Interp(plan) => plan.taps().len() * 8,
+        }
+    }
+
+    /// Scalar evaluation of a signed raw input in `fmt`; bit-identical to
+    /// [`KernelPlan::eval`].
+    pub fn eval(&self, x: i64) -> i64 {
+        let max_mag = self.fmt.max_raw();
+        let clamp = self.clamp;
+        match &self.table {
+            Table::Poly { shift, tmask, mask, post, rows } => {
+                let (neg, u) = fold_mag(x, max_mag);
+                let r = &rows[((u >> shift) as usize) & mask];
+                let tu = u & tmask;
+                let acc = ((r[3] * tu + r[2]) * tu + r[1]) * tu + r[0];
+                let y = round_shift_half_even_i64(acc, *post).clamp(-clamp, clamp);
+                if neg { -y } else { y }
+            }
+            Table::PolyWide { shift, tmask, mask, post, rows } => {
+                let (neg, u) = fold_mag(x, max_mag);
+                let r = &rows[((u >> shift) as usize) & mask];
+                let tu = (u & tmask) as i128;
+                let tb = *shift;
+                let acc = (((r[3] as i128) * tu + ((r[2] as i128) << tb)) * tu
+                    + ((r[1] as i128) << (2 * tb)))
+                    * tu
+                    + ((r[0] as i128) << (3 * tb));
+                let y = round_shift(acc, *post, Rounding::HalfEven).clamp(-clamp, clamp);
+                if neg { -y } else { y }
+            }
+            Table::Affine { shift, tmask, mask, post, rows } => {
+                let (neg, u) = fold_mag(x, max_mag);
+                let r = &rows[((u >> shift) as usize) & mask];
+                let acc = r[1] * (u & tmask) + r[0];
+                let y = round_shift_half_even_i64(acc, *post).clamp(-clamp, clamp);
+                if neg { -y } else { y }
+            }
+            Table::Const { shift, mask, vals } => {
+                let (neg, u) = fold_mag(x, max_mag);
+                let y = vals[((u >> shift) as usize) & mask] as i64;
+                if neg { -y } else { y }
+            }
+            Table::Rom16 { base, mask, vals } => {
+                vals[(x.clamp(self.fmt.min_raw(), max_mag) - base) as usize & mask] as i64
+            }
+            Table::Rom32 { base, mask, vals } => {
+                vals[(x.clamp(self.fmt.min_raw(), max_mag) - base) as usize & mask] as i64
+            }
+            Table::Interp(plan) => plan.eval(x),
+        }
+    }
+
+    /// Branch-free batch evaluation; bit-identical to
+    /// [`KernelPlan::eval_slice`].
+    pub fn eval_slice(&self, xs: &[i32], out: &mut [i32]) {
+        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
+        let max_mag = self.fmt.max_raw();
+        let clamp = self.clamp;
+        match &self.table {
+            Table::Poly { shift, tmask, mask, post, rows } => {
+                let (tb, tmask, mask, post) = (*shift, *tmask, *mask, *post);
+                for (x, o) in xs.iter().zip(out.iter_mut()) {
+                    let (neg, u) = fold_mag(*x as i64, max_mag);
+                    let r = &rows[((u >> tb) as usize) & mask];
+                    let tu = u & tmask;
+                    let acc = ((r[3] * tu + r[2]) * tu + r[1]) * tu + r[0];
+                    let y = round_shift_half_even_i64(acc, post).clamp(-clamp, clamp);
+                    *o = (if neg { -y } else { y }) as i32;
+                }
+            }
+            Table::PolyWide { shift, tmask, mask, post, rows } => {
+                let (tb, tmask, mask, post) = (*shift, *tmask, *mask, *post);
+                for (x, o) in xs.iter().zip(out.iter_mut()) {
+                    let (neg, u) = fold_mag(*x as i64, max_mag);
+                    let r = &rows[((u >> tb) as usize) & mask];
+                    let tu = (u & tmask) as i128;
+                    let acc = (((r[3] as i128) * tu + ((r[2] as i128) << tb)) * tu
+                        + ((r[1] as i128) << (2 * tb)))
+                        * tu
+                        + ((r[0] as i128) << (3 * tb));
+                    let y = round_shift(acc, post, Rounding::HalfEven).clamp(-clamp, clamp);
+                    *o = (if neg { -y } else { y }) as i32;
+                }
+            }
+            Table::Affine { shift, tmask, mask, post, rows } => {
+                let (tb, tmask, mask, post) = (*shift, *tmask, *mask, *post);
+                for (x, o) in xs.iter().zip(out.iter_mut()) {
+                    let (neg, u) = fold_mag(*x as i64, max_mag);
+                    let r = &rows[((u >> tb) as usize) & mask];
+                    let acc = r[1] * (u & tmask) + r[0];
+                    let y = round_shift_half_even_i64(acc, post).clamp(-clamp, clamp);
+                    *o = (if neg { -y } else { y }) as i32;
+                }
+            }
+            Table::Const { shift, mask, vals } => {
+                let (shift, mask) = (*shift, *mask);
+                for (x, o) in xs.iter().zip(out.iter_mut()) {
+                    let (neg, u) = fold_mag(*x as i64, max_mag);
+                    let y = vals[((u >> shift) as usize) & mask];
+                    *o = if neg { -y } else { y };
+                }
+            }
+            Table::Rom16 { base, mask, vals } => {
+                let (min, base, mask) = (self.fmt.min_raw(), *base, *mask);
+                for (x, o) in xs.iter().zip(out.iter_mut()) {
+                    let idx = ((*x as i64).clamp(min, max_mag) - base) as usize;
+                    *o = vals[idx & mask] as i32;
+                }
+            }
+            Table::Rom32 { base, mask, vals } => {
+                let (min, base, mask) = (self.fmt.min_raw(), *base, *mask);
+                for (x, o) in xs.iter().zip(out.iter_mut()) {
+                    let idx = ((*x as i64).clamp(min, max_mag) - base) as usize;
+                    *o = vals[idx & mask];
+                }
+            }
+            Table::Interp(plan) => plan.eval_slice(xs, out),
+        }
+    }
+
+    /// Shard a batch across `pool`, bit-identical to [`Self::eval_slice`].
+    /// Batches below `crossover` elements (or a pool with one worker) run
+    /// serially — sharding tiny batches costs more in dispatch than it
+    /// recovers. Blocks until every shard completes. Must not be invoked
+    /// from inside `pool`'s own workers (the caller would wait on jobs
+    /// queued behind itself).
+    pub fn eval_slice_par(
+        self: &Arc<Self>,
+        pool: &ThreadPool,
+        xs: &[i32],
+        out: &mut [i32],
+        crossover: usize,
+    ) {
+        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
+        let n = xs.len();
+        if n == 0 {
+            return;
+        }
+        if n < crossover || pool.size() < 2 {
+            return self.eval_slice(xs, out);
+        }
+        let chunk = n.div_ceil(pool.size());
+        let latch = Arc::new((Mutex::new(0usize), Condvar::new()));
+        let mut spawned = 0usize;
+        let mut start = 0usize;
+        while start < n {
+            let end = (start + chunk).min(n);
+            let shard = Shard {
+                xs: xs[start..end].as_ptr(),
+                out: out[start..end].as_mut_ptr(),
+                len: end - start,
+            };
+            let kernel = Arc::clone(self);
+            let latch = Arc::clone(&latch);
+            pool.execute(move || {
+                // SAFETY: the shards cover pairwise-disjoint subranges of
+                // xs/out, and the caller blocks on the latch until every
+                // shard reports done, so both borrows outlive the jobs.
+                let (xs, out) = unsafe {
+                    (
+                        std::slice::from_raw_parts(shard.xs, shard.len),
+                        std::slice::from_raw_parts_mut(shard.out, shard.len),
+                    )
+                };
+                kernel.eval_slice(xs, out);
+                let (count, cond) = &*latch;
+                *count.lock().unwrap() += 1;
+                cond.notify_one();
+            });
+            spawned += 1;
+            start = end;
+        }
+        let (count, cond) = &*latch;
+        let mut done = count.lock().unwrap();
+        while *done < spawned {
+            done = cond.wait(done).unwrap();
+        }
+    }
+
+    /// Serial below the [`par_threshold`] crossover, sharded across the
+    /// process-shared pool above it.
+    pub fn eval_slice_auto(self: &Arc<Self>, xs: &[i32], out: &mut [i32]) {
+        let threshold = par_threshold();
+        if threshold > 0 && xs.len() >= threshold {
+            self.eval_slice_par(ThreadPool::shared(), xs, out, threshold);
+        } else {
+            self.eval_slice(xs, out);
+        }
+    }
+}
+
+/// One parallel shard: raw disjoint subrange pointers, safe to move to a
+/// worker because the spawning call joins before returning.
+struct Shard {
+    xs: *const i32,
+    out: *mut i32,
+    len: usize,
+}
+
+// SAFETY: the pointers address disjoint shard ranges whose referents the
+// spawning thread keeps alive (and unaliased) until the latch releases.
+unsafe impl Send for Shard {}
+
+/// The `eval_slice_auto` crossover: `CRSPLINE_PAR_THRESHOLD` elements
+/// (read once; 0 disables sharding), default [`DEFAULT_PAR_THRESHOLD`].
+pub fn par_threshold() -> usize {
+    static T: OnceLock<usize> = OnceLock::new();
+    *T.get_or_init(|| {
+        std::env::var("CRSPLINE_PAR_THRESHOLD")
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(DEFAULT_PAR_THRESHOLD)
+    })
+}
+
+/// Collapse each CR segment's 4 taps into power-basis coefficients of
+/// `2·P(t)`: expanding the interpreter's `Σ pᵢ·bᵢ(t)` over the basis in
+/// `cr_basis` gives exactly
+/// `a₃·tu³ + a₂·2^t·tu² + a₁·2^2t·tu + a₀·2^3t` with
+/// `a₃ = −p₀+3p₁−3p₂+p₃`, `a₂ = 2p₀−5p₁+4p₂−p₃`, `a₁ = p₂−p₀`,
+/// `a₀ = 2p₁` — the same integer, no rounding anywhere in either form.
+fn build_poly(plan: &KernelPlan, tb: u32) -> Table {
+    let taps = plan.taps();
+    let segs = (plan.fmt().max_raw() >> tb) as usize + 1;
+    let tmax = (1i64 << tb) - 1;
+    let raw: Vec<[i64; 4]> = (0..segs)
+        .map(|s| {
+            let p = &taps[s..s + 4];
+            [
+                2 * p[1],
+                p[2] - p[0],
+                2 * p[0] - 5 * p[1] + 4 * p[2] - p[3],
+                -p[0] + 3 * p[1] - 3 * p[2] + p[3],
+            ]
+        })
+        .collect();
+    // The i64 Horner needs every partial `((a₃tu + a₂·2^t)tu + a₁·2^2t)tu
+    // + a₀·2^3t` in range; bound each row's worst case exactly (in i128)
+    // and widen the whole kernel if any row could overflow.
+    let abs = |v: i64| v.unsigned_abs() as i128;
+    let fits = raw.iter().all(|r| {
+        let m = ((abs(r[3]) * tmax as i128 + (abs(r[2]) << tb)) * tmax as i128
+            + (abs(r[1]) << (2 * tb)))
+            * tmax as i128
+            + (abs(r[0]) << (3 * tb));
+        m <= (i64::MAX >> 1) as i128
+    });
+    let tmask = tmax;
+    let post = plan.post_shift();
+    if fits {
+        let scaled: Vec<[i64; 4]> = raw
+            .iter()
+            .map(|r| [r[0] << (3 * tb), r[1] << (2 * tb), r[2] << tb, r[3]])
+            .collect();
+        let (rows, mask) = pad_pow2(scaled);
+        Table::Poly { shift: tb, tmask, mask, post, rows }
+    } else {
+        let (rows, mask) = pad_pow2(raw);
+        Table::PolyWide { shift: tb, tmask, mask, post, rows }
+    }
+}
+
+/// `p₀·(2^t − tu) + p₁·tu  =  p₀·2^t + (p₁ − p₀)·tu` — store the row
+/// `[p₀·2^t, p₁ − p₀]`. Always fits i64 (`|p| ≤ 2^frac`, `t < frac ≤ 28`).
+fn build_affine(plan: &KernelPlan, tb: u32) -> Table {
+    let taps = plan.taps();
+    let segs = (plan.fmt().max_raw() >> tb) as usize + 1;
+    let rows: Vec<[i64; 2]> =
+        (0..segs).map(|s| [taps[s] << tb, taps[s + 1] - taps[s]]).collect();
+    let (rows, mask) = pad_pow2(rows);
+    Table::Affine { shift: tb, tmask: (1i64 << tb) - 1, mask, post: plan.post_shift(), rows }
+}
+
+/// Precompute one output per `2^shift`-wide magnitude cell by running the
+/// interpreter at the cell's first input — sound because the plan's
+/// output is constant within each cell for every shape routed here.
+fn build_const(plan: &KernelPlan, shift: u32) -> Table {
+    let cells = (plan.fmt().max_raw() >> shift) as usize + 1;
+    let vals: Vec<i32> = (0..cells).map(|c| plan.eval((c as i64) << shift) as i32).collect();
+    let (vals, mask) = pad_pow2(vals);
+    Table::Const { shift, mask, vals }
+}
+
+impl std::fmt::Debug for CompiledKernel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("CompiledKernel")
+            .field("fmt", &self.fmt.to_string())
+            .field("mode", &self.mode())
+            .field("table_bytes", &self.table_bytes())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fixed::Q2_13;
+
+    fn cr_plan() -> KernelPlan {
+        let lut = crate::approx::tanh_ref::build_lut(3, 2);
+        let ext = crate::approx::tanh_ref::extend_lut(&lut, 32, false);
+        KernelPlan::catmull_rom(Q2_13, 10, ext)
+    }
+
+    #[test]
+    fn cr_compiles_to_narrow_poly_at_q2_13() {
+        let c = CompiledKernel::compile(&cr_plan());
+        assert_eq!(c.mode(), "poly3");
+        // 32 segments pad to 32 rows of 32 bytes.
+        assert_eq!(c.table_bytes(), 32 * 32);
+    }
+
+    #[test]
+    fn wide_format_compiles_to_wide_poly_and_matches_interpreter() {
+        let fmt = QFormat::new(2, 21);
+        let lut = crate::approx::tanh_ref::build_lut_fmt(3, 2, fmt);
+        let ext = crate::approx::tanh_ref::extend_lut(&lut, 32, false);
+        let plan = KernelPlan::catmull_rom(fmt, 18, ext);
+        let c = CompiledKernel::compile(&plan);
+        assert_eq!(c.mode(), "poly3-wide");
+        for x in (fmt.min_raw()..=fmt.max_raw()).step_by(65_537) {
+            assert_eq!(c.eval(x), plan.eval(x), "x={x}");
+        }
+    }
+
+    #[test]
+    fn compiled_matches_interpreter_on_sampled_domain() {
+        let plan = cr_plan();
+        let c = CompiledKernel::compile(&plan);
+        let xs: Vec<i32> = (-32768..=32767).step_by(17).collect();
+        let mut want = vec![0i32; xs.len()];
+        let mut got = vec![0i32; xs.len()];
+        plan.eval_slice(&xs, &mut want);
+        c.eval_slice(&xs, &mut got);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn rom_matches_interpreter_and_uses_i16_at_q2_13() {
+        let plan = cr_plan();
+        let rom = CompiledKernel::rom_of_plan(&plan);
+        assert_eq!(rom.mode(), "rom16");
+        assert_eq!(rom.table_bytes(), 65536 * 2); // the 128 KiB full table
+        for x in (-32768i64..=32767).step_by(251) {
+            assert_eq!(rom.eval(x), plan.eval(x), "x={x}");
+        }
+        // Out-of-contract i32 inputs saturate exactly like fold_mag.
+        assert_eq!(rom.eval(1 << 20), plan.eval(1 << 20));
+        assert_eq!(rom.eval(-(1 << 20)), plan.eval(-(1 << 20)));
+    }
+
+    #[test]
+    fn rom_infeasible_format_is_reported() {
+        assert!(CompiledKernel::rom_feasible(Q2_13));
+        assert!(!CompiledKernel::rom_feasible(QFormat::new(2, 21)));
+    }
+
+    #[test]
+    #[should_panic(expected = "ROM would need")]
+    fn rom_from_fn_rejects_wide_formats() {
+        let _ = CompiledKernel::rom_from_fn(QFormat::new(2, 21), |x| x);
+    }
+
+    #[test]
+    fn par_matches_serial_with_explicit_pool() {
+        let c = Arc::new(CompiledKernel::compile(&cr_plan()));
+        let pool = ThreadPool::new(4);
+        let xs: Vec<i32> = (0..10_001).map(|i| (i * 7919 % 65536 - 32768) as i32).collect();
+        let mut serial = vec![0i32; xs.len()];
+        let mut par = vec![0i32; xs.len()];
+        c.eval_slice(&xs, &mut serial);
+        c.eval_slice_par(&pool, &xs, &mut par, 1);
+        assert_eq!(serial, par);
+    }
+
+    #[test]
+    fn debug_is_compact() {
+        let c = CompiledKernel::compile(&cr_plan());
+        let s = format!("{c:?}");
+        assert!(s.contains("poly3") && s.contains("Q2.13"), "{s}");
+    }
+}

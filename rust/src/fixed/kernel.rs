@@ -217,6 +217,31 @@ impl KernelPlan {
         &self.taps
     }
 
+    /// The tap-selection rule (read-only; drives the compiled backend).
+    pub fn select(&self) -> &Select {
+        &self.select
+    }
+
+    /// The coefficient rule.
+    pub fn coeff(&self) -> &Coeff {
+        &self.coeff
+    }
+
+    /// Fraction bits dropped after the MAC.
+    pub fn post_shift(&self) -> u32 {
+        self.post_shift
+    }
+
+    /// Rounding mode of the post-MAC narrowing shift.
+    pub fn rounding(&self) -> Rounding {
+        self.rounding
+    }
+
+    /// Output magnitude saturation bound (the format's 1.0, for tanh).
+    pub fn clamp(&self) -> i64 {
+        self.clamp
+    }
+
     /// Whether the 4-tap MAC accumulator fits i64 for this plan.
     #[inline]
     fn mac_fits_i64(&self) -> bool {

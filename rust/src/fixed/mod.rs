@@ -7,11 +7,14 @@
 //! is expressed through this module so there is exactly one definition of
 //! rounding and saturation.
 
+pub mod cache;
+pub mod compiled;
 mod fx;
 pub mod kernel;
 mod qformat;
 mod rounding;
 
+pub use compiled::CompiledKernel;
 pub use fx::Fx;
 pub use kernel::{Coeff, KernelPlan, Select};
 pub use qformat::QFormat;

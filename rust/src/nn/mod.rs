@@ -40,7 +40,10 @@ pub fn hw_sigmoid(approx: &dyn TanhApprox, x: f64) -> f64 {
 
 /// Vector tanh through the fixed-point hardware interface — one
 /// [`TanhApprox::tanh_slice`] call per activation layer instead of one
-/// virtual dispatch per neuron. Bit-identical to mapping [`hw_tanh`].
+/// virtual dispatch per neuron; for plan-backed methods this runs on the
+/// process-wide cached compiled kernel (`fixed::compiled`), so every
+/// layer of every model shares one table build. Bit-identical to mapping
+/// [`hw_tanh`].
 pub fn hw_tanh_slice(approx: &dyn TanhApprox, xs: &[f64]) -> Vec<f64> {
     approx.tanh_slice_f64(xs)
 }

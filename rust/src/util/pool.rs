@@ -8,7 +8,7 @@
 //! more than nanosecond dispatch.
 
 use std::collections::VecDeque;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
 
 type Job = Box<dyn FnOnce() + Send + 'static>;
@@ -53,6 +53,20 @@ impl ThreadPool {
     /// Number of logical CPUs (best effort).
     pub fn default_parallelism() -> usize {
         std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    }
+
+    /// Number of worker threads in this pool.
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// The process-shared pool (spawned lazily, sized to the machine,
+    /// capped at 8 workers; never joined — it lives for the process).
+    /// Used by `fixed::compiled::CompiledKernel::eval_slice_auto` so
+    /// every large batch in the process shares one set of threads.
+    pub fn shared() -> &'static ThreadPool {
+        static SHARED: OnceLock<ThreadPool> = OnceLock::new();
+        SHARED.get_or_init(|| ThreadPool::new(Self::default_parallelism().min(8)))
     }
 
     /// Submit a job.

@@ -1,0 +1,153 @@
+//! Compiled-kernel bit-identity suite (the ISSUE's acceptance bar): the
+//! compiled tables and the full-domain ROM must agree with the
+//! interpreted [`KernelPlan`] **exhaustively** — every one of the 2^16
+//! Q2.13 raw inputs, for every method — and the parallel slice path must
+//! be deterministic and identical to the serial one.
+
+use crspline::approx::{
+    CatmullRom, Dctif, Gomar, PlainLut, Pwl, Ralut, RegionBased, TanhApprox, Taylor,
+};
+use crspline::fixed::{CompiledKernel, KernelPlan, QFormat};
+use crspline::util::pool::ThreadPool;
+use std::sync::Arc;
+
+/// Every Q2.13 raw input, in i32 form.
+fn full_domain_q13() -> Vec<i32> {
+    (-32768..=32767).collect()
+}
+
+/// Assert compiled and ROM forms of `plan` match the interpreter over the
+/// plan's entire raw domain (and the ROM also on out-of-contract inputs,
+/// which must saturate identically).
+fn assert_bit_identical(name: &str, plan: &KernelPlan, fmt: QFormat) {
+    let compiled = CompiledKernel::compile(plan);
+    let rom = CompiledKernel::rom_of_plan(plan);
+    let mut x = fmt.min_raw();
+    while x <= fmt.max_raw() {
+        let want = plan.eval(x);
+        assert_eq!(compiled.eval(x), want, "{name} compiled({}) x={x}", compiled.mode());
+        assert_eq!(rom.eval(x), want, "{name} rom x={x}");
+        x += 1;
+    }
+    // slice entry points agree with scalar over the same domain
+    let xs: Vec<i32> = (fmt.min_raw()..=fmt.max_raw()).map(|v| v as i32).collect();
+    let mut want = vec![0i32; xs.len()];
+    plan.eval_slice(&xs, &mut want);
+    let mut got = vec![0i32; xs.len()];
+    compiled.eval_slice(&xs, &mut got);
+    assert_eq!(got, want, "{name} compiled slice");
+    rom.eval_slice(&xs, &mut got);
+    assert_eq!(got, want, "{name} rom slice");
+}
+
+#[test]
+fn compiled_and_rom_match_interpreter_exhaustively_at_q2_13() {
+    let cr = CatmullRom::paper_default();
+    let pwl = Pwl::paper_default();
+    let lut = PlainLut::paper_default();
+    let ralut = Ralut::paper_default();
+    let region = RegionBased::paper_default();
+    let dctif = Dctif::paper_default();
+    let methods: Vec<(&str, &KernelPlan)> = vec![
+        ("cr", cr.plan()),
+        ("pwl", pwl.plan()),
+        ("lut", lut.plan()),
+        ("ralut", ralut.plan()),
+        ("region", region.plan()),
+        ("dctif", dctif.plan()),
+    ];
+    for (name, plan) in methods {
+        assert_bit_identical(name, plan, plan.fmt());
+    }
+}
+
+#[test]
+fn rom_matches_arithmetic_methods_exhaustively() {
+    // Taylor and Gomar have no plan; the ROM is built from their own
+    // scalar function and must reproduce it everywhere.
+    for m in [
+        Box::new(Taylor::paper_default()) as Box<dyn TanhApprox>,
+        Box::new(Gomar::paper_default()),
+    ] {
+        let rom = CompiledKernel::rom_from_fn(m.fmt(), |x| m.eval_raw(x));
+        for x in -32768..=32767i64 {
+            assert_eq!(rom.eval(x), m.eval_raw(x), "{} x={x}", m.name());
+        }
+    }
+}
+
+#[test]
+fn compiled_and_rom_match_at_a_non_default_format() {
+    // Q2.10: 8192 raw codes — exhaustive is cheap, and the shifted table
+    // geometry exercises different tbits/abits than the Q2.13 defaults.
+    let fmt = QFormat::new(2, 10);
+    let cr = CatmullRom::new_fmt(3, crspline::approx::Boundary::Extend, fmt);
+    let pwl = Pwl::new_fmt(3, fmt);
+    let lut = PlainLut::new_fmt(3, fmt);
+    let ralut = Ralut::new_fmt(0.01, fmt);
+    let region = RegionBased::new_fmt(0.39, 2.0, 5, fmt);
+    let dctif = Dctif::new_fmt(3, 5, 11, fmt);
+    let methods: Vec<(&str, &KernelPlan)> = vec![
+        ("cr", cr.plan()),
+        ("pwl", pwl.plan()),
+        ("lut", lut.plan()),
+        ("ralut", ralut.plan()),
+        ("region", region.plan()),
+        ("dctif", dctif.plan()),
+    ];
+    for (name, plan) in methods {
+        assert_bit_identical(name, plan, fmt);
+    }
+}
+
+#[test]
+fn tanh_slice_still_matches_scalar_for_every_method() {
+    // The trait hot path now routes through the compiled cache; the
+    // contract (slice == scalar map) must be unchanged.
+    let xs = full_domain_q13();
+    let mut out = vec![0i32; xs.len()];
+    for m in crspline::approx::all_methods() {
+        m.tanh_slice(&xs, &mut out);
+        for (&x, &y) in xs.iter().zip(&out) {
+            assert_eq!(y, m.eval_q13(x), "{} x={x}", m.name());
+        }
+    }
+}
+
+#[test]
+fn parallel_slice_is_deterministic_and_identical_to_serial() {
+    let cr = CatmullRom::paper_default();
+    let kernel = Arc::clone(cr.compiled());
+    let pool = ThreadPool::new(4);
+    let crossover = 1024;
+    // empty, single, odd lengths, straddling the crossover, and well past
+    // it with a length that does not divide evenly into shards
+    for n in [0usize, 1, 7, 1023, 1024, 1025, 4096 + 3, 65537] {
+        let xs: Vec<i32> = (0..n).map(|i| ((i as i64 * 2654435761 % 65536) - 32768) as i32).collect();
+        let mut serial = vec![0i32; n];
+        kernel.eval_slice(&xs, &mut serial);
+        // repeated runs must agree bit-for-bit (determinism, not just
+        // one-off equality)
+        for round in 0..3 {
+            let mut par = vec![0i32; n];
+            kernel.eval_slice_par(&pool, &xs, &mut par, crossover);
+            assert_eq!(par, serial, "n={n} round={round}");
+        }
+    }
+}
+
+#[test]
+fn auto_slice_matches_serial_above_the_threshold() {
+    let cr = CatmullRom::paper_default();
+    let kernel = Arc::clone(cr.compiled());
+    // larger than the default 16 KiB crossover so the shared pool engages
+    // (unless CRSPLINE_PAR_THRESHOLD disabled it, in which case this
+    // still verifies the serial route)
+    let n = 3 * 16 * 1024 + 11;
+    let xs: Vec<i32> = (0..n).map(|i| ((i as i64 * 48271 % 65536) - 32768) as i32).collect();
+    let mut serial = vec![0i32; n];
+    kernel.eval_slice(&xs, &mut serial);
+    let mut auto = vec![0i32; n];
+    kernel.eval_slice_auto(&xs, &mut auto);
+    assert_eq!(auto, serial);
+}

@@ -249,6 +249,53 @@ fn injected_backend_faults_are_contained() {
     assert_eq!(m.failed, failed);
 }
 
+/// Workers share compiled kernels through the process-wide cache: with
+/// the plans pre-warmed, every worker's backend construction must be
+/// cache hits only — no per-worker rebuild.
+#[test]
+fn workers_share_compiled_kernels_through_the_cache() {
+    use crspline::fixed::cache;
+    // Pre-warm the two keys MockBackend uses, so worker construction
+    // below cannot legitimately miss.
+    let _cr = crspline::approx::CatmullRom::paper_default();
+    let _pwl = crspline::approx::Pwl::paper_default();
+    let h0 = cache::hits();
+    let m0 = cache::misses();
+
+    let manifest = Manifest::parse(
+        r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "t4", "model": "tanh", "variant": "cr",
+             "path": "x", "batch": 4, "inputs": [[4, 4]], "outputs": [[4, 4]]}
+        ]}"#,
+        std::path::PathBuf::from("."),
+    )
+    .unwrap();
+    let router = Router::from_manifest(&manifest);
+    let workers = 4usize;
+    let mut cfg = ServerConfig::new(router.clone(), MockBackend::factory(router));
+    cfg.workers = workers;
+    cfg.policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_micros(100) };
+    let server = Server::start(cfg).unwrap();
+
+    // Each worker builds its MockBackend (CR + PWL) at thread start;
+    // poll until all of them have reported in.
+    let want = (2 * workers) as u64;
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    while cache::hits() - h0 < want {
+        assert!(std::time::Instant::now() < deadline, "workers never warmed the cache");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert!(cache::hits() - h0 >= want, "expected >= {want} hits");
+    assert_eq!(cache::misses(), m0, "a worker rebuilt an already-cached kernel");
+
+    // and the shared kernels actually serve traffic
+    let resp = server.submit_wait(ModelKey::new("tanh", "cr"), vec![0.25; 4]).unwrap();
+    assert!((resp.output().unwrap()[0] - 0.25f32.tanh()).abs() < 2e-4);
+    server.shutdown();
+}
+
 /// Open-loop trace replay end to end: Poisson arrivals above and below
 /// the deadline-batching knee, no losses either way.
 #[test]
