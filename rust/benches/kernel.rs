@@ -193,4 +193,10 @@ fn main() {
         Ok(()) => println!("\nwrote {} measurements to {path}", b.results.len()),
         Err(e) => eprintln!("\ncould not write {path}: {e}"),
     }
+
+    // Every compile above went through the process-wide kernel cache;
+    // its telemetry counters confirm nothing was rebuilt redundantly.
+    let cs = crspline::fixed::cache::stats();
+    let entries = crspline::fixed::cache::entries();
+    println!("kernel cache: hits={} misses={} entries={entries}", cs.hits, cs.misses);
 }

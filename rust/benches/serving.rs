@@ -103,6 +103,7 @@ fn main() {
         let dur = if fast { Duration::from_millis(150) } else { Duration::from_millis(500) };
         let trace = Trace::poisson(ModelKey::new("tanh", "cr"), rate, dur, 11);
         let report = replay(&server, &trace, |_| vec![0.5f32; 256]);
+        let slowest = server.slowest_spans(3);
         let m = server.shutdown();
         println!(
             "{:<28} {:>10.0} {:>10} {:>10} {:>8.2}",
@@ -113,6 +114,10 @@ fn main() {
             m.mean_batch(),
         );
         assert_eq!(report.failed, 0);
+        // Where did the p99 go? The span log answers per request.
+        for s in &slowest {
+            println!("{:<28} {}", "", s.summary());
+        }
     }
 
     // The real path, when artifacts are available.

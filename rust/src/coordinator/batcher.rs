@@ -33,6 +33,9 @@ pub struct Batch<T> {
     pub items: Vec<T>,
     /// Enqueue time of the oldest item (for queue-latency metrics).
     pub oldest: Instant,
+    /// When the batch closed (size or deadline policy fired) — the
+    /// `closed` stamp of every member request's trace span.
+    pub closed: Instant,
 }
 
 struct Queue<T> {
@@ -81,6 +84,7 @@ impl<T> Batcher<T> {
             key: key.clone(),
             items: drained.into_iter().map(|(_, i)| i).collect(),
             oldest,
+            closed: Instant::now(),
         })
     }
 

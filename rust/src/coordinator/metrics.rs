@@ -1,63 +1,116 @@
-//! Serving metrics: counters + latency histograms.
+//! Serving metrics: registry-backed counters + lock-free histograms,
+//! plus the per-server span log.
+//!
+//! Each `Server` registers its metrics in the process-wide
+//! [`crate::telemetry::global`] registry under a unique `server` label,
+//! so per-server values stay isolated (tests start many servers in one
+//! process) while a single registry snapshot still sees every server
+//! next to the kernel-cache, thread-pool, and nn metrics. The former
+//! `Mutex<Histogram>` fields are now [`HistogramHandle`]s over sharded
+//! atomic buckets — workers record latencies without ever blocking each
+//! other.
 
+use crate::telemetry::{self, Counter, HistogramHandle, SpanLog, SpanRecord};
 use crate::util::hist::{fmt_ns, Histogram};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Duration;
 
+/// Spans retained per server for slow-request dumps.
+const SPAN_LOG_CAP: usize = 1024;
+
 /// Shared metrics, updated by batcher and workers.
-#[derive(Default)]
 pub struct Metrics {
-    pub submitted: AtomicU64,
-    pub completed: AtomicU64,
-    pub failed: AtomicU64,
-    pub batches: AtomicU64,
+    pub submitted: Counter,
+    pub completed: Counter,
+    pub failed: Counter,
+    pub batches: Counter,
     /// Sum of real items over all batches (for mean batch size).
-    pub batched_items: AtomicU64,
+    pub batched_items: Counter,
     /// Sum of padded slots (bucket size − items).
-    pub padding_slots: AtomicU64,
-    queue_ns: Mutex<Histogram>,
-    exec_ns: Mutex<Histogram>,
+    pub padding_slots: Counter,
+    queue_ns: HistogramHandle,
+    exec_ns: HistogramHandle,
     /// Backend evaluation time alone (the `backend.run` call inside a
     /// batch), excluding padding assembly and response fan-out — the part
     /// the compiled-kernel path is meant to shrink.
-    eval_ns: Mutex<Histogram>,
-    e2e_ns: Mutex<Histogram>,
+    eval_ns: HistogramHandle,
+    e2e_ns: HistogramHandle,
+    spans: SpanLog,
+    server: String,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Metrics {
     pub fn new() -> Self {
-        Self::default()
+        // Process-wide server numbering keeps concurrent servers (tests,
+        // benches) on disjoint label sets.
+        static NEXT_SERVER: AtomicU64 = AtomicU64::new(0);
+        let server = format!("srv{}", NEXT_SERVER.fetch_add(1, Ordering::Relaxed));
+        let reg = telemetry::global();
+        let labels: &[(&str, &str)] = &[("server", &server)];
+        Self {
+            submitted: reg.counter("serve_submitted_total", labels),
+            completed: reg.counter("serve_completed_total", labels),
+            failed: reg.counter("serve_failed_total", labels),
+            batches: reg.counter("serve_batches_total", labels),
+            batched_items: reg.counter("serve_batched_items_total", labels),
+            padding_slots: reg.counter("serve_padding_slots_total", labels),
+            queue_ns: reg.histogram("serve_queue_ns", labels),
+            exec_ns: reg.histogram("serve_exec_ns", labels),
+            eval_ns: reg.histogram("serve_eval_ns", labels),
+            e2e_ns: reg.histogram("serve_e2e_ns", labels),
+            spans: SpanLog::new(SPAN_LOG_CAP),
+            server,
+        }
+    }
+
+    /// The unique `server` label value this instance registers under.
+    pub fn server_label(&self) -> &str {
+        &self.server
+    }
+
+    /// Completed request spans (bounded window; see [`SpanLog`]).
+    pub fn spans(&self) -> &SpanLog {
+        &self.spans
+    }
+
+    pub fn record_span(&self, r: SpanRecord) {
+        self.spans.record(r);
     }
 
     pub fn record_queue(&self, d: Duration) {
-        self.queue_ns.lock().unwrap().record(d.as_nanos() as u64);
+        self.queue_ns.record_duration(d);
     }
 
     pub fn record_exec(&self, d: Duration) {
-        self.exec_ns.lock().unwrap().record(d.as_nanos() as u64);
+        self.exec_ns.record_duration(d);
     }
 
     pub fn record_eval(&self, d: Duration) {
-        self.eval_ns.lock().unwrap().record(d.as_nanos() as u64);
+        self.eval_ns.record_duration(d);
     }
 
     pub fn record_e2e(&self, d: Duration) {
-        self.e2e_ns.lock().unwrap().record(d.as_nanos() as u64);
+        self.e2e_ns.record_duration(d);
     }
 
     pub fn snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
-            submitted: self.submitted.load(Ordering::Relaxed),
-            completed: self.completed.load(Ordering::Relaxed),
-            failed: self.failed.load(Ordering::Relaxed),
-            batches: self.batches.load(Ordering::Relaxed),
-            batched_items: self.batched_items.load(Ordering::Relaxed),
-            padding_slots: self.padding_slots.load(Ordering::Relaxed),
-            queue: self.queue_ns.lock().unwrap().clone(),
-            exec: self.exec_ns.lock().unwrap().clone(),
-            eval: self.eval_ns.lock().unwrap().clone(),
-            e2e: self.e2e_ns.lock().unwrap().clone(),
+            submitted: self.submitted.get(),
+            completed: self.completed.get(),
+            failed: self.failed.get(),
+            batches: self.batches.get(),
+            batched_items: self.batched_items.get(),
+            padding_slots: self.padding_slots.get(),
+            queue: self.queue_ns.snapshot(),
+            exec: self.exec_ns.snapshot(),
+            eval: self.eval_ns.snapshot(),
+            e2e: self.e2e_ns.snapshot(),
         }
     }
 }
@@ -146,11 +199,11 @@ mod tests {
     #[test]
     fn snapshot_reflects_counters() {
         let m = Metrics::new();
-        m.submitted.fetch_add(10, Ordering::Relaxed);
-        m.completed.fetch_add(9, Ordering::Relaxed);
-        m.batches.fetch_add(3, Ordering::Relaxed);
-        m.batched_items.fetch_add(9, Ordering::Relaxed);
-        m.padding_slots.fetch_add(3, Ordering::Relaxed);
+        m.submitted.add(10);
+        m.completed.add(9);
+        m.batches.add(3);
+        m.batched_items.add(9);
+        m.padding_slots.add(3);
         m.record_e2e(Duration::from_micros(100));
         m.record_eval(Duration::from_micros(40));
         let s = m.snapshot();
@@ -169,5 +222,22 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.mean_batch(), 0.0);
         assert_eq!(s.padding_ratio(), 0.0);
+    }
+
+    #[test]
+    fn servers_register_in_global_registry_under_distinct_labels() {
+        let a = Metrics::new();
+        let b = Metrics::new();
+        assert_ne!(a.server_label(), b.server_label());
+        a.submitted.add(7);
+        let snap = crate::telemetry::global().snapshot();
+        assert_eq!(
+            snap.counter("serve_submitted_total", &[("server", a.server_label())]),
+            Some(7)
+        );
+        assert_eq!(
+            snap.counter("serve_submitted_total", &[("server", b.server_label())]),
+            Some(0)
+        );
     }
 }

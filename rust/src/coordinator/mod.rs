@@ -7,6 +7,13 @@
 //! (each worker owns a thread-local PJRT engine, since PJRT handles are
 //! not `Send`), latency metrics, and graceful shutdown.
 //!
+//! Observability lives in `crate::telemetry`: every server registers its
+//! counters and latency histograms in the global registry under a unique
+//! `server` label, and each request carries a span stamped at submit /
+//! enqueue / batch-close / dequeue / eval, so end-to-end latency
+//! decomposes into queue, batch-wait, dispatch, eval and fan-out stages
+//! (see `Server::slowest_spans` and `metrics::Metrics`).
+//!
 //! ```text
 //! submit() ──channel──▶ batcher thread ──batch channel──▶ worker pool
 //!    ▲                    (size/deadline policy)             │ PJRT exec

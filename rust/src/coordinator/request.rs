@@ -1,6 +1,7 @@
 //! Request/response types of the serving layer.
 
 use crate::fixed::{QFormat, Q2_13};
+use crate::telemetry::{Span, SpanRecord};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
@@ -51,6 +52,10 @@ pub struct Request {
     /// Flattened per-sample input (the artifact's trailing dims).
     pub payload: Vec<f32>,
     pub submitted: Instant,
+    /// Trace span, stamped by each pipeline stage (see
+    /// [`crate::telemetry::span`]). `span.submitted == submitted` and
+    /// `span.trace_id == id`.
+    pub span: Span,
     /// Where the response goes.
     pub reply: mpsc::Sender<Response>,
 }
@@ -69,6 +74,10 @@ pub struct Response {
     pub batch_size: usize,
     /// The bucket (padded batch) size executed.
     pub padded_to: usize,
+    /// The sealed trace span: complete, monotone per-stage timestamps.
+    /// `span.e2e()` equals `latency`; the per-stage durations decompose
+    /// it into queue / batch-wait / dispatch / eval / fan-out.
+    pub span: SpanRecord,
 }
 
 impl Response {
@@ -114,6 +123,7 @@ mod tests {
             latency: Duration::ZERO,
             batch_size: 1,
             padded_to: 1,
+            span: Span::start(1).finish(Instant::now()),
         };
         assert_eq!(ok.output().unwrap(), &[1.0]);
         let err = Response { result: Err("boom".into()), ..ok };

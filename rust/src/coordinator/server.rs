@@ -6,6 +6,7 @@ use super::metrics::{Metrics, MetricsSnapshot};
 use super::request::{ModelKey, Request, Response};
 use super::router::Router;
 use super::worker::{spawn_workers, BackendFactory};
+use crate::telemetry::{Flusher, Span, SpanRecord};
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -36,6 +37,10 @@ pub struct Server {
     router: Router,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    /// Background JSON-lines exporter, present when
+    /// `CRSPLINE_METRICS_JSON` was set at start. Stopped (final flush)
+    /// during shutdown.
+    flusher: Option<Flusher>,
 }
 
 impl Server {
@@ -63,6 +68,7 @@ impl Server {
             router: config.router,
             metrics,
             next_id: AtomicU64::new(1),
+            flusher: Flusher::from_env(),
         })
     }
 
@@ -85,14 +91,16 @@ impl Server {
             .validate(&key, payload.len())
             .map_err(ServeError::InvalidRequest)?;
         let (reply, rx) = mpsc::channel();
+        let span = Span::start(self.next_id.fetch_add(1, Ordering::Relaxed));
         let req = Request {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            id: span.trace_id,
             key,
             payload,
-            submitted: Instant::now(),
+            submitted: span.submitted,
+            span,
             reply,
         };
-        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.metrics.submitted.inc();
         match &self.submit_tx {
             Some(tx) => tx.send(req).map_err(|_| ServeError::ShutDown)?,
             None => return Err(ServeError::ShutDown),
@@ -112,6 +120,23 @@ impl Server {
         self.metrics.snapshot()
     }
 
+    /// The `server` label this instance registers under in the global
+    /// telemetry registry.
+    pub fn server_label(&self) -> &str {
+        self.metrics.server_label()
+    }
+
+    /// The `n` slowest completed requests in the retained span window,
+    /// slowest first.
+    pub fn slowest_spans(&self, n: usize) -> Vec<SpanRecord> {
+        self.metrics.spans().slowest(n)
+    }
+
+    /// All retained completed-request spans, oldest first.
+    pub fn recent_spans(&self) -> Vec<SpanRecord> {
+        self.metrics.spans().recent()
+    }
+
     /// Graceful shutdown: flush queues, drain workers, join threads.
     pub fn shutdown(mut self) -> MetricsSnapshot {
         self.shutdown_inner();
@@ -125,6 +150,11 @@ impl Server {
         }
         for w in self.workers.drain(..) {
             let _ = w.join();
+        }
+        // Stop the exporter last so its final flush sees the drained
+        // counters and every completed span.
+        if let Some(mut f) = self.flusher.take() {
+            f.stop();
         }
     }
 }
@@ -162,7 +192,8 @@ fn batcher_loop(
             },
         };
         let now = Instant::now();
-        if let Some(req) = recv {
+        if let Some(mut req) = recv {
+            req.span.enqueued = Some(now);
             // Effective max batch = min(policy, largest compiled bucket).
             let key = req.key.clone();
             let _ = router; // router consulted at worker; batcher only sizes
@@ -277,6 +308,22 @@ mod tests {
         for rx in rxs {
             assert!(rx.recv().unwrap().output().is_ok());
         }
+    }
+
+    #[test]
+    fn spans_decompose_latency() {
+        let s = start(4, 2);
+        let key = ModelKey::new("tanh", "cr");
+        let resp = s.submit_wait(key, vec![0.1; 8]).unwrap();
+        let r = resp.span;
+        assert_eq!(r.trace_id, resp.id);
+        let sum = r.queue() + r.batch_wait() + r.dispatch() + r.eval() + r.fanout();
+        assert_eq!(sum, r.e2e());
+        assert_eq!(r.e2e(), resp.latency);
+        let slow = s.slowest_spans(5);
+        assert_eq!(slow.len(), 1);
+        assert_eq!(slow[0].trace_id, resp.id);
+        s.shutdown();
     }
 
     #[test]

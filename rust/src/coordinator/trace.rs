@@ -7,6 +7,7 @@
 //! server at their recorded timestamps, measuring the latency the
 //! batching policy actually induces.
 
+use super::error::ServeError;
 use super::request::{ModelKey, Response};
 use super::server::Server;
 use crate::util::hist::Histogram;
@@ -88,7 +89,15 @@ impl Trace {
 pub struct ReplayReport {
     pub sent: usize,
     pub completed: usize,
+    /// Total failures: submit failures plus failed/undelivered responses.
     pub failed: usize,
+    /// Submits the server rejected up front ([`ServeError::InvalidRequest`]):
+    /// unknown key or bad payload shape.
+    pub submit_rejected: usize,
+    /// Submits that hit a closed pipeline ([`ServeError::ShutDown`] /
+    /// [`ServeError::ChannelClosed`]): the server was gone, not the request
+    /// wrong.
+    pub submit_closed: usize,
     pub e2e: Histogram,
     pub wall: Duration,
 }
@@ -109,7 +118,8 @@ pub fn replay(
 ) -> ReplayReport {
     let start = Instant::now();
     let mut pending: Vec<Receiver<Response>> = Vec::with_capacity(trace.len());
-    let mut failed_submit = 0usize;
+    let mut submit_rejected = 0usize;
+    let mut submit_closed = 0usize;
     for arrival in &trace.arrivals {
         // pace to the trace
         let target = start + arrival.at;
@@ -127,12 +137,13 @@ pub fn replay(
         }
         match server.submit(arrival.key.clone(), payload_for(&arrival.key)) {
             Ok(rx) => pending.push(rx),
-            Err(_) => failed_submit += 1,
+            Err(ServeError::InvalidRequest(_)) => submit_rejected += 1,
+            Err(ServeError::ShutDown) | Err(ServeError::ChannelClosed) => submit_closed += 1,
         }
     }
     let mut e2e = Histogram::new();
     let mut completed = 0usize;
-    let mut failed = failed_submit;
+    let mut failed = submit_rejected + submit_closed;
     for rx in pending {
         match rx.recv() {
             Ok(resp) => {
@@ -146,7 +157,15 @@ pub fn replay(
             Err(_) => failed += 1,
         }
     }
-    ReplayReport { sent: trace.len(), completed, failed, e2e, wall: start.elapsed() }
+    ReplayReport {
+        sent: trace.len(),
+        completed,
+        failed,
+        submit_rejected,
+        submit_closed,
+        e2e,
+        wall: start.elapsed(),
+    }
 }
 
 #[cfg(test)]
@@ -196,8 +215,7 @@ mod tests {
         }
     }
 
-    #[test]
-    fn replay_against_mock_server() {
+    fn mock_server() -> Server {
         use crate::coordinator::{BatchPolicy, MockBackend, Router, ServerConfig};
         use crate::runtime::Manifest;
         let manifest = Manifest::parse(
@@ -217,12 +235,32 @@ mod tests {
             max_batch: 8,
             max_wait: Duration::from_micros(500),
         };
-        let server = Server::start(cfg).unwrap();
+        Server::start(cfg).unwrap()
+    }
+
+    #[test]
+    fn replay_against_mock_server() {
+        let server = mock_server();
         let trace = Trace::poisson(key(), 5_000.0, Duration::from_millis(100), 3);
         let report = replay(&server, &trace, |_| vec![0.25; 4]);
         assert_eq!(report.completed, trace.len());
         assert_eq!(report.failed, 0);
+        assert_eq!(report.submit_rejected, 0);
+        assert_eq!(report.submit_closed, 0);
         assert!(report.e2e.count() as usize == trace.len());
+        server.shutdown();
+    }
+
+    #[test]
+    fn replay_counts_submit_rejections_by_reason() {
+        let server = mock_server();
+        // Unknown model key: every submit is rejected up front.
+        let bad = Trace::bursts(ModelKey::new("nope", "cr"), 1, 3, Duration::ZERO);
+        let report = replay(&server, &bad, |_| vec![0.0; 4]);
+        assert_eq!(report.submit_rejected, 3);
+        assert_eq!(report.submit_closed, 0);
+        assert_eq!(report.failed, 3);
+        assert_eq!(report.completed, 0);
         server.shutdown();
     }
 }

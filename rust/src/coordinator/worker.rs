@@ -12,7 +12,7 @@ use super::request::{ModelKey, Request, Response};
 use super::router::Router;
 use crate::approx::TanhApprox;
 use crate::runtime::{Engine, Manifest};
-use std::sync::atomic::Ordering;
+use crate::telemetry;
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -189,11 +189,13 @@ pub fn run_batch(
     batch: Batch<Request>,
     metrics: &Metrics,
 ) {
-    let Batch { key, items, oldest } = batch;
+    let Batch { key, items, oldest, closed } = batch;
     let n = items.len();
     let exec_start = Instant::now();
     let family = router.family(&key);
     let bucket = router.bucket(&key, n);
+    // Backend-call window, stamped into every member request's span.
+    let mut eval_window: Option<(Instant, Instant)> = None;
     let result: Result<Vec<f32>, String> = match (family, bucket) {
         (Some(f), Some(bucket)) => {
             // Assemble the padded batch.
@@ -201,16 +203,31 @@ pub fn run_batch(
             for (s, req) in items.iter().enumerate() {
                 flat[s * f.sample_in..(s + 1) * f.sample_in].copy_from_slice(&req.payload);
             }
-            metrics.batches.fetch_add(1, Ordering::Relaxed);
-            metrics.batched_items.fetch_add(n as u64, Ordering::Relaxed);
-            metrics
-                .padding_slots
-                .fetch_add((bucket - n) as u64, Ordering::Relaxed);
+            metrics.batches.inc();
+            metrics.batched_items.add(n as u64);
+            metrics.padding_slots.add((bucket - n) as u64);
             // Time the backend call alone: exec also covers padding
             // assembly and fan-out, so eval isolates kernel throughput.
             let eval_start = Instant::now();
             let r = backend.run(&key, bucket, &flat);
-            metrics.record_eval(eval_start.elapsed());
+            let eval_end = Instant::now();
+            let eval_time = eval_end.saturating_duration_since(eval_start);
+            metrics.record_eval(eval_time);
+            // Per-model breakdown lives in the global registry (labels
+            // identify server, model, and number format); one registration
+            // per batch, not per request, so the lock cost stays at batch
+            // granularity.
+            telemetry::global()
+                .histogram(
+                    "serve_model_eval_ns",
+                    &[
+                        ("server", metrics.server_label()),
+                        ("model", &key.model),
+                        ("qformat", &key.fmt.to_string()),
+                    ],
+                )
+                .record_duration(eval_time);
+            eval_window = Some((eval_start, eval_end));
             r
         }
         (None, _) => Err(format!("unknown model {key}")),
@@ -223,7 +240,7 @@ pub fn run_batch(
 
     let sample_out = family.map(|f| f.sample_out).unwrap_or(0);
     let padded_to = bucket.unwrap_or(0);
-    for (s, req) in items.into_iter().enumerate() {
+    for (s, mut req) in items.into_iter().enumerate() {
         let item_result = match &result {
             Ok(flat_out) => {
                 Ok(flat_out[s * sample_out..(s + 1) * sample_out].to_vec())
@@ -231,8 +248,21 @@ pub fn run_batch(
             Err(e) => Err(e.clone()),
         };
         let ok = item_result.is_ok();
-        let latency = req.submitted.elapsed();
+        // Seal the span: batch-level stamps apply to every member. Error
+        // paths (no backend call) leave eval stamps unset; `finish` gives
+        // those stages zero duration so the record stays complete.
+        req.span.closed = Some(closed);
+        req.span.dequeued = Some(exec_start);
+        if let Some((start, end)) = eval_window {
+            req.span.eval_start = Some(start);
+            req.span.eval_end = Some(end);
+        }
+        let record = req.span.finish(Instant::now());
+        let latency = record.e2e();
         metrics.record_e2e(latency);
+        // Log the span before sending so a caller who saw the response is
+        // guaranteed to find it in the server's span log.
+        metrics.record_span(record);
         let resp = Response {
             id: req.id,
             result: item_result,
@@ -240,13 +270,14 @@ pub fn run_batch(
             latency,
             batch_size: n,
             padded_to,
+            span: record,
         };
         // Receiver may have hung up (fire-and-forget callers): not an error.
         let _ = req.reply.send(resp);
         if ok {
-            metrics.completed.fetch_add(1, Ordering::Relaxed);
+            metrics.completed.inc();
         } else {
-            metrics.failed.fetch_add(1, Ordering::Relaxed);
+            metrics.failed.inc();
         }
     }
 }

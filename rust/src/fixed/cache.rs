@@ -11,18 +11,29 @@
 //! [`kernel_for`] is the front door the approximation methods use: it
 //! picks the flattened-table compile by default, or the full-domain ROM
 //! when `CRSPLINE_ROM=1` and the format is narrow enough
-//! ([`CompiledKernel::rom_feasible`]). The [`hits`]/[`misses`] counters
-//! let tests assert the no-per-worker-rebuild property directly.
+//! ([`CompiledKernel::rom_feasible`]). Hit/miss counts live in the
+//! process-wide telemetry registry (`kernel_cache_hits_total` /
+//! `kernel_cache_misses_total`), build durations in `kernel_build_ns`
+//! labeled by number format; [`stats`] + [`CacheStats::delta`] give tests
+//! a race-free way to assert the no-per-worker-rebuild property.
 
 use super::compiled::CompiledKernel;
 use super::kernel::KernelPlan;
 use super::QFormat;
+use crate::telemetry::{self, Counter};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
 
-static HITS: AtomicU64 = AtomicU64::new(0);
-static MISSES: AtomicU64 = AtomicU64::new(0);
+fn hits_counter() -> &'static Counter {
+    static C: OnceLock<Counter> = OnceLock::new();
+    C.get_or_init(|| telemetry::global().counter("kernel_cache_hits_total", &[]))
+}
+
+fn misses_counter() -> &'static Counter {
+    static C: OnceLock<Counter> = OnceLock::new();
+    C.get_or_init(|| telemetry::global().counter("kernel_cache_misses_total", &[]))
+}
 
 fn cache() -> &'static Mutex<HashMap<String, Arc<CompiledKernel>>> {
     static CACHE: OnceLock<Mutex<HashMap<String, Arc<CompiledKernel>>>> = OnceLock::new();
@@ -36,11 +47,17 @@ fn cache() -> &'static Mutex<HashMap<String, Arc<CompiledKernel>>> {
 pub fn get_or_compile(key: &str, build: impl FnOnce() -> CompiledKernel) -> Arc<CompiledKernel> {
     let mut map = cache().lock().unwrap_or_else(|p| p.into_inner());
     if let Some(k) = map.get(key) {
-        HITS.fetch_add(1, Ordering::Relaxed);
+        hits_counter().inc();
         return Arc::clone(k);
     }
-    MISSES.fetch_add(1, Ordering::Relaxed);
+    misses_counter().inc();
+    let build_start = Instant::now();
     let compiled = Arc::new(build());
+    // A miss is a build: record how long it took, labeled by the number
+    // format the kernel was compiled for.
+    telemetry::global()
+        .histogram("kernel_build_ns", &[("qformat", &compiled.fmt().to_string())])
+        .record_duration(build_start.elapsed());
     map.insert(key.to_string(), Arc::clone(&compiled));
     compiled
 }
@@ -73,14 +90,39 @@ pub fn rom_available(fmt: QFormat) -> bool {
     rom_enabled() && CompiledKernel::rom_feasible(fmt)
 }
 
+/// Point-in-time hit/miss counts, with [`CacheStats::delta`] for scoped
+/// assertions ("this call produced exactly ≥1 build") that stay correct
+/// when parallel tests bump the process-wide counters too.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CacheStats {
+    /// Counts accrued since `earlier` (saturating: counters are monotone,
+    /// so a zero simply means "no earlier snapshot activity").
+    pub fn delta(&self, earlier: &CacheStats) -> CacheStats {
+        CacheStats {
+            hits: self.hits.saturating_sub(earlier.hits),
+            misses: self.misses.saturating_sub(earlier.misses),
+        }
+    }
+}
+
+/// Current cache counters (from the telemetry registry).
+pub fn stats() -> CacheStats {
+    CacheStats { hits: hits(), misses: misses() }
+}
+
 /// Cache hits since process start.
 pub fn hits() -> u64 {
-    HITS.load(Ordering::Relaxed)
+    hits_counter().get()
 }
 
 /// Cache misses (= builds) since process start.
 pub fn misses() -> u64 {
-    MISSES.load(Ordering::Relaxed)
+    misses_counter().get()
 }
 
 /// Distinct kernels currently cached.
@@ -104,14 +146,15 @@ mod tests {
         // Unique key: tests share the process-wide cache.
         let key = "test-cache-same-key";
         let plan = toy_plan();
-        let (h0, m0) = (hits(), misses());
+        let before = stats();
         let a = get_or_compile(key, || CompiledKernel::compile(&plan));
         let b = get_or_compile(key, || CompiledKernel::compile(&plan));
         assert!(Arc::ptr_eq(&a, &b));
         // Parallel tests may bump the globals too: check our own deltas
         // as lower bounds.
-        assert!(misses() >= m0 + 1);
-        assert!(hits() >= h0 + 1);
+        let d = stats().delta(&before);
+        assert!(d.misses >= 1);
+        assert!(d.hits >= 1);
         assert!(entries() >= 1);
     }
 
@@ -129,5 +172,23 @@ mod tests {
         let a = get_or_compile("test-cache-a", || CompiledKernel::compile(&plan));
         let b = get_or_compile("test-cache-b", || CompiledKernel::compile(&plan));
         assert!(!Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn counters_surface_in_global_registry_and_build_is_timed() {
+        let before = stats();
+        let plan = toy_plan();
+        let _ = get_or_compile("test-cache-registry", || CompiledKernel::compile(&plan));
+        let snap = telemetry::global().snapshot();
+        let misses_now = snap.counter("kernel_cache_misses_total", &[]).unwrap();
+        assert!(misses_now >= before.misses + 1);
+        // The build must have landed in the per-format build histogram.
+        let e = snap
+            .find("kernel_build_ns", &[("qformat", &Q2_13.to_string())])
+            .expect("build histogram registered");
+        match &e.value {
+            crate::telemetry::MetricValue::Histogram(h) => assert!(h.count() >= 1),
+            other => panic!("wrong kind {}", other.kind()),
+        }
     }
 }

@@ -26,6 +26,7 @@ pub mod fixed;
 pub mod hw;
 pub mod nn;
 pub mod runtime;
+pub mod telemetry;
 pub mod testkit;
 pub mod util;
 

@@ -19,6 +19,7 @@ use crspline::coordinator::{
 };
 use crspline::hw::synth;
 use crspline::runtime::{artifacts, Manifest};
+use crspline::telemetry;
 use crspline::util::cli::{Args, Spec};
 use crspline::util::rng::Rng;
 use std::time::Duration;
@@ -188,6 +189,8 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         Spec::opt("max-wait-us", "batcher deadline in us (default 2000)"),
         Spec::opt("artifacts", "artifacts dir (default ./artifacts)"),
         Spec::flag("mock", "use the pure-Rust mock backend (no artifacts needed)"),
+        Spec::flag("stats", "print the full telemetry snapshot + slowest spans at shutdown"),
+        Spec::opt("json", "write the final telemetry snapshot to this path as JSON lines"),
     ];
     let args = Args::parse(argv, SPECS).map_err(|e| anyhow::anyhow!(e))?;
     let model = args.get_or("model", "tanh").to_string();
@@ -253,6 +256,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     }
     let elapsed = t0.elapsed();
     let server = std::sync::Arc::try_unwrap(server).ok().expect("sole owner");
+    let slowest = server.slowest_spans(5);
     let m = server.shutdown();
     println!("\n{m}");
     let done = m.completed;
@@ -261,6 +265,20 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         done as f64 / elapsed.as_secs_f64(),
         elapsed.as_secs_f64()
     );
+    if args.flag("stats") {
+        println!("\n--- telemetry snapshot ---");
+        print!("{}", telemetry::export::prometheus(&telemetry::global().snapshot()));
+        if !slowest.is_empty() {
+            println!("\nslowest requests:");
+            for s in &slowest {
+                println!("  {}", s.summary());
+            }
+        }
+    }
+    if let Some(path) = args.get("json") {
+        std::fs::write(path, telemetry::export::jsonl(&telemetry::global().snapshot()))?;
+        println!("wrote telemetry snapshot to {path}");
+    }
     Ok(())
 }
 

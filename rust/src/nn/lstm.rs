@@ -11,6 +11,15 @@
 use super::tensor::Matrix;
 use crate::approx::TanhApprox;
 use crate::util::rng::Rng;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// `nn_forward_ns{model="lstm"}` — accelerator step timing (one step =
+/// five activation passes through the hardware block).
+fn step_hist() -> &'static crate::telemetry::HistogramHandle {
+    static H: OnceLock<crate::telemetry::HistogramHandle> = OnceLock::new();
+    H.get_or_init(|| crate::telemetry::global().histogram("nn_forward_ns", &[("model", "lstm")]))
+}
 
 /// LSTM parameters (single layer).
 #[derive(Clone, Debug)]
@@ -94,7 +103,10 @@ impl Lstm {
 
     /// Accelerator step: tanh/sigmoid through the hardware block.
     pub fn step_hw(&self, x: &[f64], st: &LstmState, a: &dyn TanhApprox) -> LstmState {
-        self.step_inner(x, st, Act::Hw(a))
+        let start = Instant::now();
+        let out = self.step_inner(x, st, Act::Hw(a));
+        step_hist().record_duration(start.elapsed());
+        out
     }
 
     /// Run a sequence, returning the final state.

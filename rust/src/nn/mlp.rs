@@ -3,6 +3,14 @@
 use super::tensor::{argmax, quantize_vec_fmt, Matrix};
 use crate::approx::TanhApprox;
 use crate::util::rng::Rng;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// `nn_forward_ns{model="mlp"}` — accelerator forward-pass timing.
+fn forward_hist() -> &'static crate::telemetry::HistogramHandle {
+    static H: OnceLock<crate::telemetry::HistogramHandle> = OnceLock::new();
+    H.get_or_init(|| crate::telemetry::global().histogram("nn_forward_ns", &[("model", "mlp")]))
+}
 
 /// One dense layer.
 #[derive(Clone, Debug)]
@@ -57,6 +65,7 @@ impl Mlp {
     /// call — the whole layer is a single pass through the activation
     /// unit, exactly like the hardware's vectorized datapath.
     pub fn forward_hw(&self, x: &[f64], act: &dyn TanhApprox) -> Vec<f64> {
+        let start = Instant::now();
         let fmt = act.fmt();
         let mut h = quantize_vec_fmt(x, fmt);
         for (i, layer) in self.layers.iter().enumerate() {
@@ -71,6 +80,7 @@ impl Mlp {
                 h = quantize_vec_fmt(&z, fmt);
             }
         }
+        forward_hist().record_duration(start.elapsed());
         h
     }
 

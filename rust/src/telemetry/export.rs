@@ -1,0 +1,300 @@
+//! Snapshot exporters: JSON-lines, Prometheus-style text, and the
+//! periodic background flusher.
+//!
+//! * [`jsonl`] — one self-contained JSON object per metric per line,
+//!   parseable with `util::json`; this is what `CRSPLINE_METRICS_JSON`
+//!   files contain (the file is rewritten whole each flush, so it is
+//!   always the latest complete snapshot).
+//! * [`prometheus`] — `# TYPE` headers plus `name{label="v"} value`
+//!   sample lines; histograms export as summaries (quantiles + `_sum` +
+//!   `_count`).
+//! * [`Flusher`] — a background thread owned by the server lifecycle
+//!   that rewrites the JSON-lines file every `CRSPLINE_METRICS_FLUSH_MS`
+//!   (default 1000) and once more at shutdown.
+
+use super::registry::{MetricValue, Snapshot};
+use crate::util::json::Json;
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Default flush interval when `CRSPLINE_METRICS_FLUSH_MS` is unset.
+pub const DEFAULT_FLUSH_MS: u64 = 1000;
+
+const QUANTILES: [(f64, &str); 3] = [(0.5, "0.5"), (0.9, "0.9"), (0.99, "0.99")];
+
+/// Render a snapshot as JSON lines (one metric per line).
+pub fn jsonl(snapshot: &Snapshot) -> String {
+    let mut out = String::new();
+    for e in &snapshot.entries {
+        let labels = Json::Obj(
+            e.labels.iter().map(|(k, v)| (k.clone(), Json::str(v.clone()))).collect(),
+        );
+        let mut fields = vec![
+            ("metric", Json::str(e.name.clone())),
+            ("type", Json::str(e.value.kind())),
+            ("labels", labels),
+        ];
+        match &e.value {
+            MetricValue::Counter(v) => fields.push(("value", Json::num(*v as f64))),
+            MetricValue::Gauge(v) => fields.push(("value", Json::num(*v as f64))),
+            MetricValue::Histogram(h) => {
+                fields.push(("count", Json::num(h.count() as f64)));
+                fields.push(("mean_ns", Json::num(h.mean())));
+                fields.push(("min_ns", Json::num(h.min() as f64)));
+                fields.push(("max_ns", Json::num(h.max() as f64)));
+                for (q, label) in QUANTILES {
+                    fields.push((
+                        match label {
+                            "0.5" => "p50_ns",
+                            "0.9" => "p90_ns",
+                            _ => "p99_ns",
+                        },
+                        Json::num(h.quantile(q) as f64),
+                    ));
+                }
+            }
+        }
+        out.push_str(&crate::util::json::write(&Json::obj(fields)));
+        out.push('\n');
+    }
+    out
+}
+
+fn prom_label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{v}\"")).collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+/// Render a snapshot in Prometheus text exposition style.
+pub fn prometheus(snapshot: &Snapshot) -> String {
+    let mut out = String::new();
+    let mut last_type_line = String::new();
+    for e in &snapshot.entries {
+        let type_line = format!(
+            "# TYPE {} {}\n",
+            e.name,
+            match e.value {
+                MetricValue::Counter(_) => "counter",
+                MetricValue::Gauge(_) => "gauge",
+                MetricValue::Histogram(_) => "summary",
+            }
+        );
+        // Entries are sorted by name, so emit each TYPE header once.
+        if type_line != last_type_line {
+            out.push_str(&type_line);
+            last_type_line = type_line;
+        }
+        match &e.value {
+            MetricValue::Counter(v) => {
+                out.push_str(&format!("{}{} {v}\n", e.name, prom_label_block(&e.labels, None)));
+            }
+            MetricValue::Gauge(v) => {
+                out.push_str(&format!("{}{} {v}\n", e.name, prom_label_block(&e.labels, None)));
+            }
+            MetricValue::Histogram(h) => {
+                for (q, label) in QUANTILES {
+                    out.push_str(&format!(
+                        "{}{} {}\n",
+                        e.name,
+                        prom_label_block(&e.labels, Some(("quantile", label))),
+                        h.quantile(q)
+                    ));
+                }
+                out.push_str(&format!(
+                    "{}_sum{} {}\n",
+                    e.name,
+                    prom_label_block(&e.labels, None),
+                    (h.mean() * h.count() as f64) as u128
+                ));
+                out.push_str(&format!(
+                    "{}_count{} {}\n",
+                    e.name,
+                    prom_label_block(&e.labels, None),
+                    h.count()
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Write the global registry's snapshot to `path` as JSON lines
+/// (whole-file rewrite: the file is always one complete snapshot).
+pub fn write_global_jsonl(path: &std::path::Path) -> std::io::Result<()> {
+    std::fs::write(path, jsonl(&super::global().snapshot()))
+}
+
+struct FlusherShared {
+    stop: Mutex<bool>,
+    cond: Condvar,
+}
+
+/// Periodic background flusher for the JSON-lines exporter. Owned by the
+/// server lifecycle: started at `Server::start` when
+/// `CRSPLINE_METRICS_JSON` is set, stopped (with one final flush) at
+/// shutdown. Dropping the flusher also stops it.
+pub struct Flusher {
+    shared: Arc<FlusherShared>,
+    handle: Option<JoinHandle<()>>,
+    path: PathBuf,
+}
+
+impl Flusher {
+    /// Start flushing the global registry to `path` every `interval`.
+    pub fn start(path: PathBuf, interval: Duration) -> Flusher {
+        let shared = Arc::new(FlusherShared { stop: Mutex::new(false), cond: Condvar::new() });
+        let thread_shared = Arc::clone(&shared);
+        let thread_path = path.clone();
+        let handle = std::thread::Builder::new()
+            .name("telemetry-flush".into())
+            .spawn(move || {
+                let interval = interval.max(Duration::from_millis(10));
+                loop {
+                    let stopped = {
+                        let guard = thread_shared
+                            .stop
+                            .lock()
+                            .unwrap_or_else(|p| p.into_inner());
+                        let (guard, _timeout) = thread_shared
+                            .cond
+                            .wait_timeout(guard, interval)
+                            .unwrap_or_else(|p| p.into_inner());
+                        *guard
+                    };
+                    // Flush on every wakeup — including the final one, so
+                    // the file holds a complete snapshot at shutdown.
+                    if let Err(e) = write_global_jsonl(&thread_path) {
+                        eprintln!("telemetry flush to {} failed: {e}", thread_path.display());
+                    }
+                    if stopped {
+                        return;
+                    }
+                }
+            })
+            .expect("spawn telemetry flusher");
+        Flusher { shared, handle: Some(handle), path }
+    }
+
+    /// Start from the environment: `CRSPLINE_METRICS_JSON` names the
+    /// output file (unset → no flusher), `CRSPLINE_METRICS_FLUSH_MS`
+    /// overrides the interval.
+    pub fn from_env() -> Option<Flusher> {
+        let path = std::env::var("CRSPLINE_METRICS_JSON").ok()?;
+        let path = path.trim();
+        if path.is_empty() {
+            return None;
+        }
+        let interval = std::env::var("CRSPLINE_METRICS_FLUSH_MS")
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(DEFAULT_FLUSH_MS);
+        Some(Flusher::start(PathBuf::from(path), Duration::from_millis(interval)))
+    }
+
+    /// The file this flusher writes.
+    pub fn path(&self) -> &std::path::Path {
+        &self.path
+    }
+
+    /// Signal the thread, wait for its final flush, and join it.
+    pub fn stop(&mut self) {
+        if let Some(handle) = self.handle.take() {
+            *self.shared.stop.lock().unwrap_or_else(|p| p.into_inner()) = true;
+            self.shared.cond.notify_all();
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for Flusher {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::Registry;
+    use crate::util::json;
+
+    fn sample_snapshot() -> Snapshot {
+        let r = Registry::new();
+        r.counter("reqs_total", &[("model", "tanh"), ("qformat", "Q2.13")]).add(42);
+        r.gauge("depth", &[("pool", "shared")]).set(-2);
+        let h = r.histogram("lat_ns", &[("server", "srv0")]);
+        for v in [100u64, 200, 300] {
+            h.record(v);
+        }
+        r.snapshot()
+    }
+
+    #[test]
+    fn jsonl_lines_parse_and_carry_labels() {
+        let text = jsonl(&sample_snapshot());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        for line in &lines {
+            let v = json::parse(line).expect("line parses");
+            assert!(v.get("metric").is_some());
+            assert!(v.get("type").is_some());
+        }
+        let counter = json::parse(lines[2]).unwrap(); // sorted: reqs_total last
+        assert_eq!(counter.get("metric").unwrap().as_str(), Some("reqs_total"));
+        assert_eq!(counter.get("value").unwrap().as_i64(), Some(42));
+        assert_eq!(
+            counter.get("labels").unwrap().get("model").unwrap().as_str(),
+            Some("tanh")
+        );
+        let hist = json::parse(lines[1]).unwrap();
+        assert_eq!(hist.get("metric").unwrap().as_str(), Some("lat_ns"));
+        assert_eq!(hist.get("count").unwrap().as_i64(), Some(3));
+        assert!(hist.get("p99_ns").unwrap().as_f64().unwrap() >= 300.0);
+    }
+
+    #[test]
+    fn prometheus_format_shape() {
+        let text = prometheus(&sample_snapshot());
+        assert!(text.contains("# TYPE reqs_total counter"), "{text}");
+        assert!(
+            text.contains("reqs_total{model=\"tanh\",qformat=\"Q2.13\"} 42"),
+            "{text}"
+        );
+        assert!(text.contains("# TYPE depth gauge"), "{text}");
+        assert!(text.contains("depth{pool=\"shared\"} -2"), "{text}");
+        assert!(text.contains("# TYPE lat_ns summary"), "{text}");
+        assert!(text.contains("lat_ns{server=\"srv0\",quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("lat_ns_count{server=\"srv0\"} 3"), "{text}");
+    }
+
+    #[test]
+    fn flusher_writes_and_final_flush_on_stop() {
+        let path = std::env::temp_dir().join(format!(
+            "crspline_flusher_test_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        // Ensure at least one global metric exists.
+        crate::telemetry::global().counter("flusher_test_total", &[]).inc();
+        let mut f = Flusher::start(path.clone(), Duration::from_millis(20));
+        std::thread::sleep(Duration::from_millis(80));
+        f.stop();
+        let content = std::fs::read_to_string(&path).expect("flush file exists");
+        assert!(!content.trim().is_empty());
+        for line in content.lines() {
+            json::parse(line).expect("snapshot line parses");
+        }
+        assert!(content.contains("flusher_test_total"));
+        let _ = std::fs::remove_file(&path);
+    }
+}

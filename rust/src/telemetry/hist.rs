@@ -1,0 +1,162 @@
+//! Lock-free sharded histogram.
+//!
+//! The coordinator's original `Mutex<Histogram>` fields serialized every
+//! latency recording across workers. This histogram keeps one bank of
+//! atomic bucket counters per shard (threads scatter across shards by a
+//! thread-local id), so concurrent `record` calls touch disjoint cache
+//! lines and never block. The bucket layout is exactly
+//! [`crate::util::hist::Histogram`]'s, so a snapshot folds the shards
+//! back into the ordinary histogram type and all existing quantile /
+//! formatting code applies unchanged.
+
+use crate::util::hist::Histogram;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// Shard count. Power of two so the thread-id fold is a mask; 8 covers
+/// the worker counts this stack actually runs (pools cap at 8).
+const SHARDS: usize = 8;
+
+struct Shard {
+    counts: Vec<AtomicU64>,
+    total: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Shard {
+    fn new() -> Self {
+        Self {
+            counts: (0..crate::util::hist::N_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            total: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Concurrent histogram over u64 values (typically nanoseconds).
+/// `record` is wait-free on the fast path; `snapshot` is O(buckets).
+pub struct ShardedHistogram {
+    shards: Vec<Shard>,
+    min: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for ShardedHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Stable per-thread shard index: threads are numbered in creation
+/// order and folded onto the shard count.
+fn shard_id() -> usize {
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static ID: usize = NEXT.fetch_add(1, Ordering::Relaxed);
+    }
+    ID.with(|id| *id) & (SHARDS - 1)
+}
+
+impl ShardedHistogram {
+    pub fn new() -> Self {
+        Self {
+            shards: (0..SHARDS).map(|_| Shard::new()).collect(),
+            min: AtomicU64::new(u64::MAX),
+            max: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one value. Lock-free: bucket/total/sum updates hit only the
+    /// calling thread's shard; min/max are process-wide atomics.
+    pub fn record(&self, v: u64) {
+        let idx = Histogram::bucket(v);
+        let shard = &self.shards[shard_id()];
+        shard.counts[idx].fetch_add(1, Ordering::Relaxed);
+        shard.total.fetch_add(1, Ordering::Relaxed);
+        shard.sum.fetch_add(v, Ordering::Relaxed);
+        self.min.fetch_min(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Record a duration in nanoseconds.
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_nanos() as u64);
+    }
+
+    /// Samples recorded so far.
+    pub fn count(&self) -> u64 {
+        self.shards.iter().map(|s| s.total.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Fold every shard into a point-in-time [`Histogram`]. Concurrent
+    /// recorders may land between shard reads; each sample is still
+    /// counted at most once (counts only grow).
+    pub fn snapshot(&self) -> Histogram {
+        let mut counts = vec![0u64; crate::util::hist::N_BUCKETS];
+        let mut total = 0u64;
+        let mut sum = 0u128;
+        for shard in &self.shards {
+            for (acc, c) in counts.iter_mut().zip(&shard.counts) {
+                *acc += c.load(Ordering::Relaxed);
+            }
+            total += shard.total.load(Ordering::Relaxed);
+            sum += shard.sum.load(Ordering::Relaxed) as u128;
+        }
+        let min = self.min.load(Ordering::Relaxed);
+        let max = self.max.load(Ordering::Relaxed);
+        Histogram::from_raw(counts, total, sum, min, max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn matches_serial_histogram() {
+        let sh = ShardedHistogram::new();
+        let mut reference = Histogram::new();
+        for v in [0u64, 1, 7, 100, 1_000, 65_536, 1_000_000] {
+            sh.record(v);
+            reference.record(v);
+        }
+        let snap = sh.snapshot();
+        assert_eq!(snap.count(), reference.count());
+        assert_eq!(snap.min(), reference.min());
+        assert_eq!(snap.max(), reference.max());
+        assert_eq!(snap.quantile(0.5), reference.quantile(0.5));
+        assert_eq!(snap.quantile(0.99), reference.quantile(0.99));
+        assert!((snap.mean() - reference.mean()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zero() {
+        let snap = ShardedHistogram::new().snapshot();
+        assert_eq!(snap.count(), 0);
+        assert_eq!(snap.quantile(0.99), 0);
+        assert_eq!(snap.min(), 0);
+    }
+
+    #[test]
+    fn concurrent_recorders_lose_nothing() {
+        let sh = Arc::new(ShardedHistogram::new());
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                let sh = Arc::clone(&sh);
+                std::thread::spawn(move || {
+                    for i in 0..1000u64 {
+                        sh.record(t * 1000 + i);
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        let snap = sh.snapshot();
+        assert_eq!(snap.count(), 8000);
+        assert_eq!(snap.min(), 0);
+        assert_eq!(snap.max(), 7999);
+    }
+}

@@ -1,0 +1,69 @@
+//! Unified telemetry: one process-wide registry, request-scoped spans,
+//! and exporters.
+//!
+//! Before this module, observability was fragmented per layer: the
+//! coordinator kept mutex-guarded histograms private to the server,
+//! `fixed::cache` exposed bare process-global counters, and the thread
+//! pool, kernel builds, and nn forward passes emitted nothing. Everything
+//! now flows through three pieces:
+//!
+//! * **[`Registry`]** ([`registry`]) — named counters, gauges, and
+//!   lock-free sharded histograms with label support (`method`,
+//!   `qformat`, `model`, `server`, `pool`, ...). Handles are cheap
+//!   `Arc`-backed clones; [`Registry::snapshot`] returns a consistent
+//!   point-in-time copy of every metric. [`global()`] is the process
+//!   registry every layer registers into, so a single snapshot covers
+//!   serving, kernel-cache, thread-pool, and nn metrics together.
+//! * **Spans** ([`span`]) — a trace ID is minted at `Server::submit` and
+//!   the [`span::Span`] rides inside the `Request` through batcher
+//!   enqueue → batch close → worker dequeue → backend eval → response
+//!   fan-out, stamping each stage. The finished [`span::SpanRecord`]
+//!   decomposes a single request's latency into
+//!   queue / batch-wait / dispatch / eval / fan-out, and a bounded
+//!   [`span::SpanLog`] keeps recent records so slow requests can be
+//!   dumped individually.
+//! * **Exporters** ([`export`]) — a JSON-lines snapshot writer
+//!   (`CRSPLINE_METRICS_JSON`), a Prometheus-style text formatter, and a
+//!   periodic background [`export::Flusher`] owned by the server
+//!   lifecycle (`CRSPLINE_METRICS_FLUSH_MS` interval).
+
+pub mod export;
+pub mod hist;
+pub mod registry;
+pub mod span;
+
+pub use export::Flusher;
+pub use hist::ShardedHistogram;
+pub use registry::{Counter, Gauge, HistogramHandle, MetricValue, Registry, Snapshot};
+pub use span::{Span, SpanLog, SpanRecord};
+
+use std::sync::OnceLock;
+
+/// The process-wide registry. Every subsystem (coordinator, kernel
+/// cache, thread pools, nn) registers its metrics here, so one snapshot
+/// sees the whole stack.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn global_registry_is_singleton() {
+        let a = global() as *const Registry;
+        let b = global() as *const Registry;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn global_handles_share_state() {
+        let c1 = global().counter("telemetry_mod_test_total", &[]);
+        let c2 = global().counter("telemetry_mod_test_total", &[]);
+        let before = c1.get();
+        c2.add(3);
+        assert_eq!(c1.get(), before + 3);
+    }
+}

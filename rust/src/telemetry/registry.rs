@@ -1,0 +1,309 @@
+//! Metric registry: named counters, gauges, and histograms with labels.
+//!
+//! A metric is identified by `(name, sorted labels)`. Handles returned by
+//! [`Registry::counter`] / [`Registry::gauge`] / [`Registry::histogram`]
+//! are cheap `Arc` clones of the shared state, so hot paths record
+//! through a handle without touching the registry lock; the lock is held
+//! only at registration and snapshot time.
+
+use super::hist::ShardedHistogram;
+use crate::util::hist::Histogram;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Sorted, owned label set — the second half of a metric's identity.
+pub type Labels = Vec<(String, String)>;
+
+fn owned_labels(labels: &[(&str, &str)]) -> Labels {
+    let mut v: Labels =
+        labels.iter().map(|(k, val)| (k.to_string(), val.to_string())).collect();
+    v.sort();
+    v
+}
+
+/// A monotone counter handle.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge handle (instantaneous level, may go up and down).
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicI64>);
+
+impl Gauge {
+    pub fn add(&self, n: i64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn sub(&self, n: i64) {
+        self.0.fetch_sub(n, Ordering::Relaxed);
+    }
+    pub fn set(&self, v: i64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> i64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A histogram handle backed by the lock-free sharded histogram.
+#[derive(Clone)]
+pub struct HistogramHandle(Arc<ShardedHistogram>);
+
+impl HistogramHandle {
+    pub fn record(&self, v: u64) {
+        self.0.record(v);
+    }
+    pub fn record_duration(&self, d: Duration) {
+        self.0.record_duration(d);
+    }
+    pub fn count(&self) -> u64 {
+        self.0.count()
+    }
+    pub fn snapshot(&self) -> Histogram {
+        self.0.snapshot()
+    }
+}
+
+enum Metric {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicI64>),
+    Histogram(Arc<ShardedHistogram>),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// Point-in-time value of one metric.
+#[derive(Clone, Debug)]
+pub enum MetricValue {
+    Counter(u64),
+    Gauge(i64),
+    Histogram(Histogram),
+}
+
+impl MetricValue {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            MetricValue::Counter(_) => "counter",
+            MetricValue::Gauge(_) => "gauge",
+            MetricValue::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// One metric in a snapshot.
+#[derive(Clone, Debug)]
+pub struct MetricEntry {
+    pub name: String,
+    pub labels: Labels,
+    pub value: MetricValue,
+}
+
+/// A consistent point-in-time copy of every registered metric, sorted by
+/// `(name, labels)` so exports are stable across runs.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    pub entries: Vec<MetricEntry>,
+}
+
+impl Snapshot {
+    /// First entry matching `name` and containing every `(key, value)`
+    /// pair of `labels` (extra labels on the entry are allowed).
+    pub fn find(&self, name: &str, labels: &[(&str, &str)]) -> Option<&MetricEntry> {
+        self.entries.iter().find(|e| {
+            e.name == name
+                && labels
+                    .iter()
+                    .all(|(k, v)| e.labels.iter().any(|(ek, ev)| ek == k && ev == v))
+        })
+    }
+
+    /// Counter value shortcut (`None` when missing or a different kind).
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        match self.find(name, labels)?.value {
+            MetricValue::Counter(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// The registry. Cheap to create (tests use private instances); the
+/// process-wide instance is [`super::global`].
+#[derive(Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<(String, Labels), Metric>>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn get_or_insert<T>(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Metric,
+        project: impl Fn(&Metric) -> Option<T>,
+    ) -> T {
+        let id = (name.to_string(), owned_labels(labels));
+        let mut map = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+        let metric = map.entry(id).or_insert_with(make);
+        match project(metric) {
+            Some(handle) => handle,
+            None => panic!(
+                "telemetry metric '{name}' already registered as a {}",
+                metric.kind()
+            ),
+        }
+    }
+
+    /// Get or create a counter. Panics if `(name, labels)` is already a
+    /// different metric kind — a programming error, not a runtime state.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        self.get_or_insert(
+            name,
+            labels,
+            || Metric::Counter(Arc::new(AtomicU64::new(0))),
+            |m| match m {
+                Metric::Counter(c) => Some(Counter(Arc::clone(c))),
+                _ => None,
+            },
+        )
+    }
+
+    /// Get or create a gauge.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        self.get_or_insert(
+            name,
+            labels,
+            || Metric::Gauge(Arc::new(AtomicI64::new(0))),
+            |m| match m {
+                Metric::Gauge(g) => Some(Gauge(Arc::clone(g))),
+                _ => None,
+            },
+        )
+    }
+
+    /// Get or create a histogram.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> HistogramHandle {
+        self.get_or_insert(
+            name,
+            labels,
+            || Metric::Histogram(Arc::new(ShardedHistogram::new())),
+            |m| match m {
+                Metric::Histogram(h) => Some(HistogramHandle(Arc::clone(h))),
+                _ => None,
+            },
+        )
+    }
+
+    /// Copy every metric's current value. Sorted by `(name, labels)`.
+    pub fn snapshot(&self) -> Snapshot {
+        let map = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+        let entries = map
+            .iter()
+            .map(|((name, labels), metric)| MetricEntry {
+                name: name.clone(),
+                labels: labels.clone(),
+                value: match metric {
+                    Metric::Counter(c) => MetricValue::Counter(c.load(Ordering::Relaxed)),
+                    Metric::Gauge(g) => MetricValue::Gauge(g.load(Ordering::Relaxed)),
+                    Metric::Histogram(h) => MetricValue::Histogram(h.snapshot()),
+                },
+            })
+            .collect();
+        Snapshot { entries }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_handles_are_shared_per_identity() {
+        let r = Registry::new();
+        let a = r.counter("reqs_total", &[("model", "tanh")]);
+        let b = r.counter("reqs_total", &[("model", "tanh")]);
+        let other = r.counter("reqs_total", &[("model", "mlp")]);
+        a.inc();
+        b.add(2);
+        other.inc();
+        assert_eq!(a.get(), 3);
+        assert_eq!(other.get(), 1);
+    }
+
+    #[test]
+    fn label_order_does_not_matter() {
+        let r = Registry::new();
+        let a = r.counter("c", &[("x", "1"), ("y", "2")]);
+        let b = r.counter("c", &[("y", "2"), ("x", "1")]);
+        a.inc();
+        assert_eq!(b.get(), 1);
+    }
+
+    #[test]
+    fn snapshot_reflects_all_kinds() {
+        let r = Registry::new();
+        r.counter("c_total", &[]).add(5);
+        r.gauge("depth", &[("pool", "shared")]).set(3);
+        let h = r.histogram("lat_ns", &[]);
+        h.record(100);
+        h.record(200);
+        let s = r.snapshot();
+        assert_eq!(s.entries.len(), 3);
+        assert_eq!(s.counter("c_total", &[]), Some(5));
+        let e = s.find("depth", &[("pool", "shared")]).unwrap();
+        assert!(matches!(e.value, MetricValue::Gauge(3)));
+        match &s.find("lat_ns", &[]).unwrap().value {
+            MetricValue::Histogram(hist) => assert_eq!(hist.count(), 2),
+            other => panic!("wrong kind {}", other.kind()),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("m", &[]);
+        r.gauge("m", &[]);
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_stable() {
+        let r = Registry::new();
+        r.counter("b", &[]).inc();
+        r.counter("a", &[("l", "2")]).inc();
+        r.counter("a", &[("l", "1")]).inc();
+        let names: Vec<String> = r
+            .snapshot()
+            .entries
+            .iter()
+            .map(|e| format!("{}{:?}", e.name, e.labels))
+            .collect();
+        let mut sorted = names.clone();
+        sorted.sort();
+        assert_eq!(names, sorted);
+    }
+}

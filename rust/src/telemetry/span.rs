@@ -1,0 +1,296 @@
+//! Request-scoped spans.
+//!
+//! A [`Span`] is minted at `Server::submit` (the trace ID is the request
+//! id) and rides inside the `Request` through the pipeline; each stage
+//! stamps its timestamp as the request passes:
+//!
+//! ```text
+//! submit ──▶ batcher enqueue ──▶ batch close ──▶ worker dequeue
+//!        ──▶ backend eval start/end ──▶ response fan-out
+//! ```
+//!
+//! [`Span::finish`] seals the span into a [`SpanRecord`] whose stage
+//! timestamps are complete and monotone by construction (a stage an
+//! error path skipped inherits the previous stamp, i.e. zero duration),
+//! so a single request's end-to-end latency always decomposes exactly
+//! into queue + batch-wait + dispatch + eval + fan-out. The bounded
+//! [`SpanLog`] keeps recent records for dumping slow requests.
+
+use crate::util::hist::fmt_ns;
+use crate::util::json::Json;
+use std::collections::VecDeque;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// An in-flight span: the trace id plus optional stage stamps, filled in
+/// as the request moves through the pipeline.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    pub trace_id: u64,
+    /// `Server::submit` entry (always present — spans start here).
+    pub submitted: Instant,
+    /// Batcher thread picked the request off the submit channel.
+    pub enqueued: Option<Instant>,
+    /// The request's batch closed (size or deadline policy fired).
+    pub closed: Option<Instant>,
+    /// A worker dequeued the batch and began assembling it.
+    pub dequeued: Option<Instant>,
+    /// `backend.run` started.
+    pub eval_start: Option<Instant>,
+    /// `backend.run` returned.
+    pub eval_end: Option<Instant>,
+}
+
+impl Span {
+    /// Mint a span now. `trace_id` is the request id.
+    pub fn start(trace_id: u64) -> Self {
+        Self::start_at(trace_id, Instant::now())
+    }
+
+    /// Mint a span with an explicit submit stamp (so `Request.submitted`
+    /// and the span agree exactly).
+    pub fn start_at(trace_id: u64, submitted: Instant) -> Self {
+        Self {
+            trace_id,
+            submitted,
+            enqueued: None,
+            closed: None,
+            dequeued: None,
+            eval_start: None,
+            eval_end: None,
+        }
+    }
+
+    /// Seal into a complete, monotone record: missing stages inherit the
+    /// previous stamp; stamps that drifted backwards (cross-thread clock
+    /// reads) clamp forward.
+    pub fn finish(self, responded: Instant) -> SpanRecord {
+        let submitted = self.submitted;
+        let enqueued = self.enqueued.unwrap_or(submitted).max(submitted);
+        let closed = self.closed.unwrap_or(enqueued).max(enqueued);
+        let dequeued = self.dequeued.unwrap_or(closed).max(closed);
+        let eval_start = self.eval_start.unwrap_or(dequeued).max(dequeued);
+        let eval_end = self.eval_end.unwrap_or(eval_start).max(eval_start);
+        SpanRecord {
+            trace_id: self.trace_id,
+            submitted,
+            enqueued,
+            closed,
+            dequeued,
+            eval_start,
+            eval_end,
+            responded: responded.max(eval_end),
+        }
+    }
+}
+
+/// A sealed span: every stage stamp present, monotone non-decreasing.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRecord {
+    pub trace_id: u64,
+    pub submitted: Instant,
+    pub enqueued: Instant,
+    pub closed: Instant,
+    pub dequeued: Instant,
+    pub eval_start: Instant,
+    pub eval_end: Instant,
+    pub responded: Instant,
+}
+
+impl SpanRecord {
+    /// Submit → batcher pickup (channel transit).
+    pub fn queue(&self) -> Duration {
+        self.enqueued.saturating_duration_since(self.submitted)
+    }
+
+    /// Batcher pickup → batch close (waiting for peers or the deadline).
+    pub fn batch_wait(&self) -> Duration {
+        self.closed.saturating_duration_since(self.enqueued)
+    }
+
+    /// Batch close → backend call (worker dequeue + padding assembly).
+    pub fn dispatch(&self) -> Duration {
+        self.eval_start.saturating_duration_since(self.closed)
+    }
+
+    /// Backend execution.
+    pub fn eval(&self) -> Duration {
+        self.eval_end.saturating_duration_since(self.eval_start)
+    }
+
+    /// Eval end → this request's response send.
+    pub fn fanout(&self) -> Duration {
+        self.responded.saturating_duration_since(self.eval_end)
+    }
+
+    /// Submit → response send. Equals the sum of the five stages exactly
+    /// (the stamps are monotone, so the telescoping sum is lossless).
+    pub fn e2e(&self) -> Duration {
+        self.responded.saturating_duration_since(self.submitted)
+    }
+
+    /// Stage stamps in pipeline order, for monotonicity checks and dumps.
+    pub fn stages(&self) -> [(&'static str, Instant); 7] {
+        [
+            ("submitted", self.submitted),
+            ("enqueued", self.enqueued),
+            ("closed", self.closed),
+            ("dequeued", self.dequeued),
+            ("eval_start", self.eval_start),
+            ("eval_end", self.eval_end),
+            ("responded", self.responded),
+        ]
+    }
+
+    /// One-line human dump (the slow-request format).
+    pub fn summary(&self) -> String {
+        format!(
+            "trace={} e2e={} queue={} batch_wait={} dispatch={} eval={} fanout={}",
+            self.trace_id,
+            fmt_ns(self.e2e().as_nanos() as u64),
+            fmt_ns(self.queue().as_nanos() as u64),
+            fmt_ns(self.batch_wait().as_nanos() as u64),
+            fmt_ns(self.dispatch().as_nanos() as u64),
+            fmt_ns(self.eval().as_nanos() as u64),
+            fmt_ns(self.fanout().as_nanos() as u64),
+        )
+    }
+
+    /// JSON object with per-stage durations in nanoseconds (`Instant`s
+    /// have no absolute meaning, so only durations are exported).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("trace_id", Json::num(self.trace_id as f64)),
+            ("queue_ns", Json::num(self.queue().as_nanos() as f64)),
+            ("batch_wait_ns", Json::num(self.batch_wait().as_nanos() as f64)),
+            ("dispatch_ns", Json::num(self.dispatch().as_nanos() as f64)),
+            ("eval_ns", Json::num(self.eval().as_nanos() as f64)),
+            ("fanout_ns", Json::num(self.fanout().as_nanos() as f64)),
+            ("e2e_ns", Json::num(self.e2e().as_nanos() as f64)),
+        ])
+    }
+}
+
+/// Bounded log of completed spans (most recent `cap`), kept per server
+/// so slow requests can be dumped after a run.
+pub struct SpanLog {
+    cap: usize,
+    inner: Mutex<SpanLogInner>,
+}
+
+struct SpanLogInner {
+    recent: VecDeque<SpanRecord>,
+    recorded: u64,
+}
+
+impl SpanLog {
+    pub fn new(cap: usize) -> Self {
+        Self {
+            cap: cap.max(1),
+            inner: Mutex::new(SpanLogInner { recent: VecDeque::new(), recorded: 0 }),
+        }
+    }
+
+    pub fn record(&self, r: SpanRecord) {
+        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        if inner.recent.len() == self.cap {
+            inner.recent.pop_front();
+        }
+        inner.recent.push_back(r);
+        inner.recorded += 1;
+    }
+
+    /// Total spans ever recorded (including evicted ones).
+    pub fn recorded(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|p| p.into_inner()).recorded
+    }
+
+    /// The retained window, oldest first.
+    pub fn recent(&self) -> Vec<SpanRecord> {
+        let inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        inner.recent.iter().copied().collect()
+    }
+
+    /// The `n` slowest spans (by end-to-end latency) in the retained
+    /// window, slowest first.
+    pub fn slowest(&self, n: usize) -> Vec<SpanRecord> {
+        let mut all = self.recent();
+        all.sort_by_key(|r| std::cmp::Reverse(r.e2e()));
+        all.truncate(n);
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finish_fills_missing_stages_monotonically() {
+        let span = Span::start(7); // no stage ever stamped (error path)
+        let r = span.finish(Instant::now());
+        let stages = r.stages();
+        for w in stages.windows(2) {
+            assert!(w[1].1 >= w[0].1, "{} precedes {}", w[1].0, w[0].0);
+        }
+        assert_eq!(r.trace_id, 7);
+        assert_eq!(r.queue(), Duration::ZERO);
+        assert_eq!(r.eval(), Duration::ZERO);
+    }
+
+    #[test]
+    fn stage_durations_telescope_to_e2e() {
+        let t0 = Instant::now();
+        let mut span = Span::start_at(1, t0);
+        span.enqueued = Some(t0 + Duration::from_micros(10));
+        span.closed = Some(t0 + Duration::from_micros(30));
+        span.dequeued = Some(t0 + Duration::from_micros(35));
+        span.eval_start = Some(t0 + Duration::from_micros(40));
+        span.eval_end = Some(t0 + Duration::from_micros(90));
+        let r = span.finish(t0 + Duration::from_micros(100));
+        let sum = r.queue() + r.batch_wait() + r.dispatch() + r.eval() + r.fanout();
+        assert_eq!(sum, r.e2e());
+        assert_eq!(r.e2e(), Duration::from_micros(100));
+        assert_eq!(r.eval(), Duration::from_micros(50));
+    }
+
+    #[test]
+    fn backwards_stamps_clamp_forward() {
+        let t0 = Instant::now();
+        let mut span = Span::start_at(2, t0 + Duration::from_micros(50));
+        span.enqueued = Some(t0); // "before" submit: cross-thread skew
+        let r = span.finish(t0);
+        assert_eq!(r.queue(), Duration::ZERO);
+        assert_eq!(r.e2e(), Duration::ZERO);
+    }
+
+    #[test]
+    fn span_log_caps_and_ranks() {
+        let log = SpanLog::new(4);
+        let t0 = Instant::now();
+        for i in 0..6u64 {
+            let span = Span::start_at(i, t0);
+            log.record(span.finish(t0 + Duration::from_micros(10 * (i + 1))));
+        }
+        assert_eq!(log.recorded(), 6);
+        let recent = log.recent();
+        assert_eq!(recent.len(), 4);
+        assert_eq!(recent[0].trace_id, 2); // 0 and 1 evicted
+        let slow = log.slowest(2);
+        assert_eq!(slow.len(), 2);
+        assert_eq!(slow[0].trace_id, 5);
+        assert_eq!(slow[1].trace_id, 4);
+    }
+
+    #[test]
+    fn json_and_summary_expose_all_stages() {
+        let r = Span::start(9).finish(Instant::now());
+        let j = r.to_json();
+        let head = ["trace_id", "queue_ns", "batch_wait_ns", "dispatch_ns"];
+        let tail = ["eval_ns", "fanout_ns", "e2e_ns"];
+        for key in head.iter().chain(&tail) {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+        assert!(r.summary().contains("trace=9"));
+    }
+}

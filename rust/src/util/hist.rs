@@ -7,6 +7,11 @@
 
 const SUB: u64 = 4; // sub-buckets per power of two
 
+/// Total bucket count — shared with `telemetry::hist::ShardedHistogram`,
+/// whose per-shard atomic counts fold into a `Histogram` via
+/// [`Histogram::from_raw`].
+pub(crate) const N_BUCKETS: usize = (64 * SUB) as usize;
+
 /// Histogram over u64 values (typically nanoseconds).
 #[derive(Clone, Debug)]
 pub struct Histogram {
@@ -26,10 +31,19 @@ impl Default for Histogram {
 impl Histogram {
     pub fn new() -> Self {
         // 64 powers of two * SUB sub-buckets
-        Self { counts: vec![0; (64 * SUB) as usize], total: 0, sum: 0, min: u64::MAX, max: 0 }
+        Self { counts: vec![0; N_BUCKETS], total: 0, sum: 0, min: u64::MAX, max: 0 }
     }
 
-    fn bucket(v: u64) -> usize {
+    /// Rebuild a histogram from externally-accumulated raw parts (the
+    /// lock-free sharded histogram snapshots through this). `counts` must
+    /// have [`N_BUCKETS`] entries; `min` is `u64::MAX` when empty, like a
+    /// freshly-constructed histogram.
+    pub(crate) fn from_raw(counts: Vec<u64>, total: u64, sum: u128, min: u64, max: u64) -> Self {
+        assert_eq!(counts.len(), N_BUCKETS, "bucket layout mismatch");
+        Self { counts, total, sum, min, max }
+    }
+
+    pub(crate) fn bucket(v: u64) -> usize {
         if v == 0 {
             return 0;
         }

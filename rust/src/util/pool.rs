@@ -6,7 +6,12 @@
 //! threads (see `coordinator::worker`); this pool serves embarrassingly
 //! parallel analysis work where fairness and shutdown correctness matter
 //! more than nanosecond dispatch.
+//!
+//! Each pool registers in the telemetry registry under a `pool` label:
+//! `pool_jobs_total` (submissions), `pool_queue_depth` (gauge of jobs
+//! waiting + running), `pool_busy_ns` (per-job execution time).
 
+use crate::telemetry::{self, Counter, Gauge, HistogramHandle};
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::thread::JoinHandle;
@@ -16,6 +21,12 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 struct Shared {
     queue: Mutex<State>,
     cond: Condvar,
+    /// Jobs ever submitted to this pool.
+    submitted: Counter,
+    /// Jobs accepted but not yet finished (queued + running).
+    depth: Gauge,
+    /// Per-job execution time.
+    busy_ns: HistogramHandle,
 }
 
 struct State {
@@ -33,16 +44,28 @@ pub struct ThreadPool {
 impl ThreadPool {
     /// Spawn `n` workers (n >= 1).
     pub fn new(n: usize) -> Self {
+        Self::named("pool", n)
+    }
+
+    /// Spawn `n` workers whose telemetry registers under `pool=<name>`
+    /// (pools sharing a name share metrics — deliberate for short-lived
+    /// pools created per test or per bench iteration).
+    pub fn named(name: &str, n: usize) -> Self {
         let n = n.max(1);
+        let reg = telemetry::global();
+        let labels: &[(&str, &str)] = &[("pool", name)];
         let shared = Arc::new(Shared {
             queue: Mutex::new(State { jobs: VecDeque::new(), shutdown: false }),
             cond: Condvar::new(),
+            submitted: reg.counter("pool_jobs_total", labels),
+            depth: reg.gauge("pool_queue_depth", labels),
+            busy_ns: reg.histogram("pool_busy_ns", labels),
         });
         let workers = (0..n)
             .map(|i| {
                 let shared = Arc::clone(&shared);
                 std::thread::Builder::new()
-                    .name(format!("pool-{i}"))
+                    .name(format!("{name}-{i}"))
                     .spawn(move || worker_loop(shared))
                     .expect("spawn pool worker")
             })
@@ -66,7 +89,7 @@ impl ThreadPool {
     /// every large batch in the process shares one set of threads.
     pub fn shared() -> &'static ThreadPool {
         static SHARED: OnceLock<ThreadPool> = OnceLock::new();
-        SHARED.get_or_init(|| ThreadPool::new(Self::default_parallelism().min(8)))
+        SHARED.get_or_init(|| ThreadPool::named("shared", Self::default_parallelism().min(8)))
     }
 
     /// Submit a job.
@@ -75,6 +98,8 @@ impl ThreadPool {
         assert!(!st.shutdown, "execute after shutdown");
         st.jobs.push_back(Box::new(job));
         drop(st);
+        self.shared.submitted.inc();
+        self.shared.depth.add(1);
         self.shared.cond.notify_one();
     }
 
@@ -131,7 +156,10 @@ fn worker_loop(shared: Arc<Shared>) {
                 st = shared.cond.wait(st).unwrap();
             }
         };
+        let start = std::time::Instant::now();
         job();
+        shared.busy_ns.record_duration(start.elapsed());
+        shared.depth.sub(1);
     }
 }
 
@@ -204,5 +232,26 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map(vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn telemetry_tracks_jobs_and_queue_depth() {
+        let labels: &[(&str, &str)] = &[("pool", "pool-test-telemetry")];
+        let pool = ThreadPool::named("pool-test-telemetry", 2);
+        let out = pool.map((0..16).collect::<Vec<i64>>(), |x| x * 2);
+        assert_eq!(out.len(), 16);
+        drop(pool); // joins workers: every accepted job has finished
+        let snap = crate::telemetry::global().snapshot();
+        assert!(snap.counter("pool_jobs_total", labels).unwrap() >= 16);
+        let depth = snap.find("pool_queue_depth", labels).unwrap();
+        assert!(
+            matches!(depth.value, crate::telemetry::MetricValue::Gauge(0)),
+            "queue depth must return to zero after drain, got {:?}",
+            depth.value
+        );
+        match &snap.find("pool_busy_ns", labels).unwrap().value {
+            crate::telemetry::MetricValue::Histogram(h) => assert!(h.count() >= 16),
+            other => panic!("wrong kind {}", other.kind()),
+        }
     }
 }

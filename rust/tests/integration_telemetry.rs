@@ -1,0 +1,162 @@
+//! Integration: the unified telemetry subsystem across the whole stack.
+//!
+//! Drives a mock-backend server with an open-loop trace, then checks the
+//! acceptance properties end to end: every replayed request yields a
+//! complete monotone span whose stage durations decompose its latency;
+//! the exporters emit parseable, label-correct output; and one global
+//! snapshot covers serving, kernel-cache, thread-pool, and nn metrics
+//! side by side.
+
+use crspline::coordinator::{
+    replay, BatchPolicy, MockBackend, ModelKey, Router, Server, ServerConfig, Trace,
+};
+use crspline::runtime::Manifest;
+use crspline::telemetry::{self, export, MetricValue};
+use crspline::util::json;
+use std::time::Duration;
+
+fn mock_server(workers: usize) -> Server {
+    let manifest = Manifest::parse(
+        r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "t1", "model": "tanh", "variant": "cr",
+             "path": "x", "batch": 1, "inputs": [[1, 8]], "outputs": [[1, 8]]},
+            {"name": "t8", "model": "tanh", "variant": "cr",
+             "path": "x", "batch": 8, "inputs": [[8, 8]], "outputs": [[8, 8]]}
+        ]}"#,
+        std::path::PathBuf::from("."),
+    )
+    .unwrap();
+    let router = Router::from_manifest(&manifest);
+    let mut cfg = ServerConfig::new(router.clone(), MockBackend::factory(router));
+    cfg.workers = workers;
+    cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(400) };
+    Server::start(cfg).unwrap()
+}
+
+/// Every replayed request must come back with a complete span: stamps
+/// monotone in pipeline order, stage durations telescoping exactly to
+/// the end-to-end latency, and queue + eval never exceeding it.
+#[test]
+fn replayed_requests_yield_complete_decomposable_spans() {
+    let server = mock_server(2);
+    let key = ModelKey::new("tanh", "cr");
+    let trace = Trace::poisson(key, 8_000.0, Duration::from_millis(60), 11);
+    assert!(!trace.is_empty() && trace.len() <= 1024, "trace fits the span log");
+    let report = replay(&server, &trace, |_| vec![0.3; 8]);
+    assert_eq!(report.completed, trace.len());
+    assert_eq!(report.failed, 0);
+
+    let spans = server.recent_spans();
+    assert_eq!(spans.len(), trace.len(), "one span per completed request");
+    for r in &spans {
+        let stages = r.stages();
+        for w in stages.windows(2) {
+            assert!(
+                w[1].1 >= w[0].1,
+                "trace {}: stage {} precedes {}",
+                r.trace_id,
+                w[1].0,
+                w[0].0
+            );
+        }
+        let sum = r.queue() + r.batch_wait() + r.dispatch() + r.eval() + r.fanout();
+        assert_eq!(sum, r.e2e(), "trace {}: stages must telescope to e2e", r.trace_id);
+        assert!(r.queue() + r.eval() <= r.e2e(), "trace {}", r.trace_id);
+    }
+
+    // Slow-request ranking is consistent with the records themselves.
+    let slow = server.slowest_spans(3);
+    assert!(!slow.is_empty());
+    let max_e2e = spans.iter().map(|r| r.e2e()).max().unwrap();
+    assert_eq!(slow[0].e2e(), max_e2e);
+    server.shutdown();
+}
+
+/// The exporters must agree with the registry: JSON lines parse with the
+/// in-tree parser and carry the server label; the Prometheus text names
+/// the same metrics with the same labels.
+#[test]
+fn exporters_emit_parseable_label_correct_output() {
+    let server = mock_server(2);
+    let label = server.server_label().to_string();
+    let key = ModelKey::new("tanh", "cr");
+    for _ in 0..10 {
+        server.submit_wait(key.clone(), vec![0.5; 8]).unwrap();
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 10);
+
+    let snap = telemetry::global().snapshot();
+    assert_eq!(snap.counter("serve_completed_total", &[("server", &label)]), Some(10));
+
+    // JSON-lines: every line parses, and our server's counter is present
+    // with the right label and value.
+    let text = export::jsonl(&snap);
+    let mut found = false;
+    for line in text.lines() {
+        let v = json::parse(line).expect("jsonl line parses");
+        if v.get("metric").and_then(|m| m.as_str()) == Some("serve_completed_total")
+            && v.get("labels").and_then(|l| l.get("server")).and_then(|s| s.as_str())
+                == Some(label.as_str())
+        {
+            assert_eq!(v.get("value").unwrap().as_i64(), Some(10));
+            assert_eq!(v.get("type").unwrap().as_str(), Some("counter"));
+            found = true;
+        }
+    }
+    assert!(found, "serve_completed_total{{server={label}}} missing from jsonl");
+
+    // Prometheus text: same sample with the same label block, and the
+    // latency histogram exports as a summary for this server.
+    let prom = export::prometheus(&snap);
+    assert!(prom.contains("# TYPE serve_completed_total counter"), "{prom}");
+    assert!(prom.contains(&format!("serve_completed_total{{server=\"{label}\"}} 10")));
+    assert!(prom.contains(&format!("serve_e2e_ns_count{{server=\"{label}\"}} 10")));
+    assert!(prom.contains(&format!("serve_e2e_ns{{server=\"{label}\",quantile=\"0.99\"}}")));
+}
+
+/// Acceptance: one snapshot of the one global registry holds serving,
+/// per-model eval, kernel-cache, thread-pool, and nn metrics together.
+#[test]
+fn one_snapshot_covers_serving_cache_pool_and_nn() {
+    // Serving + per-model eval.
+    let server = mock_server(1);
+    let label = server.server_label().to_string();
+    server.submit_wait(ModelKey::new("tanh", "cr"), vec![0.1; 8]).unwrap();
+    server.shutdown();
+
+    // Kernel cache: building an approximator compiles (or re-fetches) a
+    // kernel through fixed::cache.
+    let _cr = crspline::approx::CatmullRom::paper_default();
+
+    // Thread pool.
+    let pool = crspline::util::pool::ThreadPool::named("telemetry-itest", 2);
+    let _ = pool.map(vec![1u64, 2, 3, 4], |x| x + 1);
+    drop(pool);
+
+    // nn forward pass through the hardware activation path.
+    let mut rng = crspline::util::rng::Rng::new(5);
+    let mlp = crspline::nn::mlp::Mlp::new(&[4, 8, 2], &mut rng);
+    let _ = mlp.forward_hw(&[0.1, 0.2, 0.3, 0.4], &crspline::approx::CatmullRom::paper_default());
+
+    let snap = telemetry::global().snapshot();
+    assert!(snap.counter("serve_submitted_total", &[("server", &label)]).unwrap() >= 1);
+    assert!(
+        snap.find("serve_model_eval_ns", &[("server", &label), ("model", "tanh")]).is_some(),
+        "per-model eval histogram missing"
+    );
+    assert!(snap.counter("kernel_cache_hits_total", &[]).is_some() || {
+        // A fresh process may have only misses; either counter proves the
+        // cache reports through the registry.
+        snap.counter("kernel_cache_misses_total", &[]).is_some()
+    });
+    assert!(snap.counter("kernel_cache_misses_total", &[]).unwrap() >= 1);
+    assert!(snap.find("kernel_build_ns", &[]).is_some(), "build timing missing");
+    assert!(snap.counter("pool_jobs_total", &[("pool", "telemetry-itest")]).unwrap() >= 4);
+    match &snap.find("nn_forward_ns", &[("model", "mlp")]).unwrap().value {
+        MetricValue::Histogram(h) => assert!(h.count() >= 1),
+        other => panic!("wrong kind {}", other.kind()),
+    }
+}
