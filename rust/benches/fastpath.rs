@@ -1,0 +1,127 @@
+//! Bench target `fastpath`: staged vs fused float evaluation.
+//!
+//! ```sh
+//! cargo bench --bench fastpath
+//! CRSPLINE_BENCH_FAST=1 cargo bench --bench fastpath
+//! ```
+//!
+//! Three tiers per batch size, Catmull-Rom (the paper method) and PWL:
+//!
+//! 1. `staged`    — the three-pass pipeline the serving path used before
+//!    the fused kernel: quantize the whole batch into an i32 buffer,
+//!    `CompiledKernel::eval_slice`, dequantize into the f32 output.
+//! 2. `fused`     — `CompiledKernel::eval_f32_slice`: quantize → table
+//!    eval → dequantize in one pass over 8-lane chunks.
+//! 3. `fused-par` — `eval_f32_slice_par` sharding the same batch over the
+//!    thread pool (crossover 1, so the tier always measures sharding).
+//!
+//! Writes per-(method, batch) rows to `BENCH_fastpath.json` (path
+//! override: `CRSPLINE_BENCH_FASTPATH_JSON`); CI asserts the file is
+//! non-empty and that fused beats staged at the 4096 tier.
+
+use crspline::approx::{CatmullRom, Pwl, TanhApprox};
+use crspline::bench::{black_box, Bencher};
+use crspline::fixed::{CompiledKernel, QFormat};
+use crspline::util::json::{self, Json};
+use crspline::util::pool::ThreadPool;
+use crspline::util::rng::Rng;
+use std::sync::Arc;
+
+const BATCHES: [usize; 5] = [256, 1024, 4096, 16384, 65536];
+
+fn inputs(n: usize) -> Vec<f32> {
+    let mut rng = Rng::new(42);
+    (0..n).map(|_| (rng.range_i64(-4000, 4000) as f32) / 1000.0).collect()
+}
+
+/// The pre-fused serving pipeline, kept verbatim as the baseline: three
+/// passes, two intermediate buffers (reused across iterations so the
+/// comparison isolates the pass structure, not allocator traffic).
+fn staged(
+    fmt: QFormat,
+    k: &CompiledKernel,
+    xs: &[f32],
+    q: &mut Vec<i32>,
+    y: &mut Vec<i32>,
+    out: &mut [f32],
+) {
+    q.clear();
+    q.extend(xs.iter().map(|&v| fmt.quantize(v as f64) as i32));
+    y.clear();
+    y.resize(xs.len(), 0);
+    k.eval_slice(q, y);
+    for (o, &r) in out.iter_mut().zip(y.iter()) {
+        *o = fmt.to_f64(r as i64) as f32;
+    }
+}
+
+fn per_elem(b: &Bencher, items: usize) -> f64 {
+    b.results.last().unwrap().mean_ns() / items as f64
+}
+
+fn tiers(
+    b: &mut Bencher,
+    pool: &ThreadPool,
+    name: &str,
+    fmt: QFormat,
+    kernel: &Arc<CompiledKernel>,
+) -> Vec<Json> {
+    let mut rows = Vec::new();
+    for n in BATCHES {
+        let xs = inputs(n);
+        let mut out = vec![0f32; n];
+        let (mut q, mut y) = (Vec::new(), Vec::new());
+
+        b.bench_with_items(&format!("{name}/staged/{n}"), n as u64, || {
+            staged(fmt, kernel, black_box(&xs), &mut q, &mut y, black_box(&mut out));
+        });
+        let staged_ns = per_elem(b, n);
+
+        b.bench_with_items(&format!("{name}/fused/{n}"), n as u64, || {
+            kernel.eval_f32_slice(black_box(&xs), black_box(&mut out));
+        });
+        let fused_ns = per_elem(b, n);
+
+        b.bench_with_items(&format!("{name}/fused-par/{n}"), n as u64, || {
+            kernel.eval_f32_slice_par(pool, black_box(&xs), black_box(&mut out), 1);
+        });
+        let par_ns = per_elem(b, n);
+
+        let speedup = staged_ns / fused_ns;
+        println!("    -> {name}/{n}: fused is {speedup:.2}x staged throughput\n");
+        rows.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("batch", Json::num(n as f64)),
+            ("staged_ns_per_elem", Json::num(staged_ns)),
+            ("fused_ns_per_elem", Json::num(fused_ns)),
+            ("fused_par_ns_per_elem", Json::num(par_ns)),
+            ("speedup_fused_vs_staged", Json::num(speedup)),
+            ("speedup_par_vs_fused", Json::num(fused_ns / par_ns)),
+        ]));
+    }
+    rows
+}
+
+fn main() {
+    let mut b = Bencher::new();
+    let pool = ThreadPool::new(ThreadPool::default_parallelism().min(8));
+    println!("# fastpath: staged 3-pass vs fused single-pass f32 batches\n");
+
+    let cr = CatmullRom::paper_default();
+    let pwl = Pwl::paper_default();
+    let mut rows = tiers(&mut b, &pool, "cr-k3", TanhApprox::fmt(&cr), cr.compiled());
+    rows.extend(tiers(&mut b, &pool, "pwl-k3", TanhApprox::fmt(&pwl), pwl.compiled()));
+
+    let doc = Json::obj(vec![
+        ("bench", Json::str("fastpath")),
+        ("batches", Json::Arr(BATCHES.iter().map(|&n| Json::num(n as f64)).collect())),
+        ("pool_workers", Json::num(pool.size() as f64)),
+        ("results", Json::Arr(rows)),
+    ]);
+    let path = std::env::var("CRSPLINE_BENCH_FASTPATH_JSON")
+        .unwrap_or_else(|_| "BENCH_fastpath.json".into());
+    match std::fs::write(&path, json::write(&doc) + "\n") {
+        Ok(()) => println!("\nwrote {} measurements to {path}", b.results.len()),
+        Err(e) => eprintln!("\ncould not write {path}: {e}"),
+    }
+}

@@ -280,6 +280,18 @@ impl TanhApprox for CatmullRom {
         }
     }
 
+    /// The cached compiled kernel, exposed so the float batch paths run
+    /// the fused single-pass kernels. The basis-truncation ablation has
+    /// no compiled form (its rounding sequence differs from the plan), so
+    /// it stays on the staged scalar pipeline.
+    fn compiled_kernel(&self) -> Option<&Arc<CompiledKernel>> {
+        if self.basis_frac.is_some() {
+            None
+        } else {
+            Some(&self.compiled)
+        }
+    }
+
     /// Batch hot path: the compiled kernel — fold → masked shift-index →
     /// 3-multiply Horner MAC on precomputed per-segment rows (or a direct
     /// ROM read under `CRSPLINE_ROM`), sharded across the shared pool for

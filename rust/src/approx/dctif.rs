@@ -163,6 +163,11 @@ impl TanhApprox for Dctif {
         self.compiled.eval_slice_auto(xs, out);
     }
 
+    /// Routes the float batch paths through the fused per-cell kernel.
+    fn compiled_kernel(&self) -> Option<&Arc<CompiledKernel>> {
+        Some(&self.compiled)
+    }
+
     fn resources(&self) -> Option<Resources> {
         Some(crate::hw::baselines::dctif_resources(self.cbits, self.memory_bits()))
     }

@@ -92,6 +92,11 @@ impl TanhApprox for PlainLut {
         self.compiled.eval_slice_auto(xs, out);
     }
 
+    /// Routes the float batch paths through the fused per-cell kernel.
+    fn compiled_kernel(&self) -> Option<&Arc<CompiledKernel>> {
+        Some(&self.compiled)
+    }
+
     fn resources(&self) -> Option<Resources> {
         Some(crate::hw::area::plain_lut_resources_fmt(self.lut.len(), self.fmt))
     }

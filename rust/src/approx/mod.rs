@@ -104,14 +104,72 @@ pub trait TanhApprox: Send + Sync {
         }
     }
 
+    /// The process-shared compiled kernel behind [`TanhApprox::tanh_slice`],
+    /// when this instance has one that is bit-identical to its scalar
+    /// entry point. Plan-backed methods override this; returning `Some`
+    /// routes the float batch paths ([`TanhApprox::tanh_slice_f32`],
+    /// [`TanhApprox::tanh_slice_f64_into`]) through the fused single-pass
+    /// quantize → eval → dequantize kernels instead of the staged
+    /// three-pass pipeline.
+    fn compiled_kernel(&self) -> Option<&std::sync::Arc<crate::fixed::CompiledKernel>> {
+        None
+    }
+
+    /// Batch evaluation on f32 slices through the fixed-point interface:
+    /// quantize in this instance's format, evaluate, dequantize — the
+    /// coordinator workers' eval hot path. Runs the fused single-pass
+    /// kernel when a compiled kernel is available (and `CRSPLINE_FUSED`
+    /// is not disabled); otherwise stages through pooled scratch buffers,
+    /// allocation-free at steady state either way. Bit-identical to
+    /// `fmt.to_f64(eval_raw(fmt.quantize(x as f64))) as f32` per element.
+    ///
+    /// Panics if `xs.len() != out.len()`.
+    fn tanh_slice_f32(&self, xs: &[f32], out: &mut [f32]) {
+        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
+        if crate::fixed::fused_enabled() {
+            if let Some(k) = self.compiled_kernel() {
+                return k.eval_f32_slice_auto(xs, out);
+            }
+        }
+        let fmt = self.fmt();
+        let mut q = crate::util::bufpool::i32s().take();
+        q.extend(xs.iter().map(|&v| fmt.quantize(v as f64) as i32));
+        let mut y = crate::util::bufpool::i32s().take();
+        y.resize(xs.len(), 0);
+        self.tanh_slice(&q, &mut y);
+        for (o, &r) in out.iter_mut().zip(y.iter()) {
+            *o = fmt.to_f64(r as i64) as f32;
+        }
+    }
+
+    /// Batch evaluation on f64 slices into a caller-provided buffer — the
+    /// f64 analogue of [`TanhApprox::tanh_slice_f32`], used by the nn
+    /// activation layers. Same fused-vs-staged routing, same bit-identity
+    /// contract against [`TanhApprox::eval_f64`].
+    fn tanh_slice_f64_into(&self, xs: &[f64], out: &mut [f64]) {
+        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
+        if crate::fixed::fused_enabled() {
+            if let Some(k) = self.compiled_kernel() {
+                return k.eval_f64_slice_auto(xs, out);
+            }
+        }
+        let fmt = self.fmt();
+        let mut q = crate::util::bufpool::i32s().take();
+        q.extend(xs.iter().map(|&v| fmt.quantize(v) as i32));
+        let mut y = crate::util::bufpool::i32s().take();
+        y.resize(xs.len(), 0);
+        self.tanh_slice(&q, &mut y);
+        for (o, &r) in out.iter_mut().zip(y.iter()) {
+            *o = fmt.to_f64(r as i64);
+        }
+    }
+
     /// Batch evaluation on f64 slices through the fixed-point interface —
     /// the vector analogue of [`TanhApprox::eval_f64`].
     fn tanh_slice_f64(&self, xs: &[f64]) -> Vec<f64> {
-        let fmt = self.fmt();
-        let q: Vec<i32> = xs.iter().map(|&v| fmt.quantize(v) as i32).collect();
-        let mut out = vec![0i32; q.len()];
-        self.tanh_slice(&q, &mut out);
-        out.into_iter().map(|r| fmt.to_f64(r as i64)).collect()
+        let mut out = vec![0.0f64; xs.len()];
+        self.tanh_slice_f64_into(xs, &mut out);
+        out
     }
 
     /// Hardware resource summary for the area model (gates, memory bits).

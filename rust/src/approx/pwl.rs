@@ -89,6 +89,11 @@ impl TanhApprox for Pwl {
         self.compiled.eval_slice_auto(xs, out);
     }
 
+    /// Routes the float batch paths through the fused affine kernel.
+    fn compiled_kernel(&self) -> Option<&Arc<CompiledKernel>> {
+        Some(&self.compiled)
+    }
+
     fn resources(&self) -> Option<Resources> {
         Some(crate::hw::area::pwl_resources_fmt(self.lut.len(), self.tbits, self.fmt))
     }

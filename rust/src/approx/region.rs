@@ -115,6 +115,11 @@ impl TanhApprox for RegionBased {
         self.compiled.eval_slice_auto(xs, out);
     }
 
+    /// Routes the float batch paths through the fused direct table.
+    fn compiled_kernel(&self) -> Option<&Arc<CompiledKernel>> {
+        Some(&self.compiled)
+    }
+
     fn resources(&self) -> Option<Resources> {
         Some(crate::hw::baselines::region_resources(self.table_entries()))
     }

@@ -78,12 +78,19 @@ impl<T> Batcher<T> {
             return None;
         }
         let n = q.items.len().min(self.policy.max_batch);
-        let drained: Vec<(Instant, T)> = q.items.drain(..n).collect();
-        let oldest = drained.iter().map(|(t, _)| *t).min().unwrap();
+        // Drain straight into the batch Vec — one allocation, no
+        // intermediate (Instant, T) collection — tracking the oldest
+        // enqueue stamp as items stream past.
+        let mut items = Vec::with_capacity(n);
+        let mut oldest: Option<Instant> = None;
+        for (t, item) in q.items.drain(..n) {
+            oldest = Some(oldest.map_or(t, |o| o.min(t)));
+            items.push(item);
+        }
         Some(Batch {
             key: key.clone(),
-            items: drained.into_iter().map(|(_, i)| i).collect(),
-            oldest,
+            items,
+            oldest: oldest.unwrap(),
             closed: Instant::now(),
         })
     }

@@ -21,8 +21,19 @@ use std::time::Instant;
 /// An inference engine a worker can drive.
 pub trait Backend {
     /// Execute `flat` (bucket·sample_in f32, zero-padded) for `key` at the
-    /// given `bucket` size; return bucket·sample_out f32.
-    fn run(&mut self, key: &ModelKey, bucket: usize, flat: &[f32]) -> Result<Vec<f32>, String>;
+    /// given `bucket` size, writing bucket·sample_out f32 into `out`
+    /// (cleared and sized by the implementation). The out-parameter lets
+    /// the worker loop hand every batch the same pooled buffer, so a
+    /// steady-state batch allocates nothing on the eval path
+    /// (`rust/tests/alloc_fastpath.rs` proves this with a counting
+    /// allocator).
+    fn run(
+        &mut self,
+        key: &ModelKey,
+        bucket: usize,
+        flat: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<(), String>;
 }
 
 /// Builds a backend inside the worker thread.
@@ -50,14 +61,23 @@ impl PjrtBackend {
 }
 
 impl Backend for PjrtBackend {
-    fn run(&mut self, key: &ModelKey, bucket: usize, flat: &[f32]) -> Result<Vec<f32>, String> {
+    fn run(
+        &mut self,
+        key: &ModelKey,
+        bucket: usize,
+        flat: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<(), String> {
         let model = self
             .engine
             .bucket_for(&key.model, &key.variant, bucket)
             .filter(|m| m.spec.batch == bucket)
             .ok_or_else(|| format!("no artifact for {key} bucket {bucket}"))?;
-        let outs = model.run_f32(&[flat.to_vec()]).map_err(|e| e.to_string())?;
-        Ok(outs.into_iter().next().unwrap())
+        // run_f32 borrows the padded batch directly — no input copy.
+        let outs = model.run_f32(&[flat]).map_err(|e| e.to_string())?;
+        out.clear();
+        out.extend_from_slice(&outs[0]);
+        Ok(())
     }
 }
 
@@ -65,17 +85,18 @@ impl Backend for PjrtBackend {
 /// `approx::CatmullRom`/`Pwl`/exact — bit-compatible with the L1 kernel's
 /// quantization model — and echoes shapes for other families.
 ///
-/// The tanh variants run through [`TanhApprox::tanh_slice`] with reused
-/// quantization/output buffers, so a whole padded bucket is one batch
-/// evaluation rather than `bucket · sample_in` virtual calls — the same
-/// amortization the compiled artifacts get from static batch shapes.
+/// The tanh variants run through [`TanhApprox::tanh_slice_f32`]: for the
+/// plan-backed methods that is the fused single-pass quantize → spline →
+/// dequantize kernel (`fixed::compiled`), so a whole padded bucket is one
+/// allocation-free batch evaluation rather than `bucket · sample_in`
+/// virtual calls and three buffer walks. `CRSPLINE_FUSED=0` falls back
+/// to the staged pipeline (still through pooled scratch).
 pub struct MockBackend {
     router: Router,
     cr: crate::approx::CatmullRom,
     pwl: crate::approx::Pwl,
-    /// Scratch buffers reused across `run` calls (quantized in / raw out).
-    q_in: Vec<i32>,
-    q_out: Vec<i32>,
+    /// `serve_fused_total` — batches served by the fused fast path.
+    fused_total: crate::telemetry::Counter,
 }
 
 impl MockBackend {
@@ -84,55 +105,60 @@ impl MockBackend {
             router,
             cr: crate::approx::CatmullRom::paper_default(),
             pwl: crate::approx::Pwl::paper_default(),
-            q_in: Vec::new(),
-            q_out: Vec::new(),
+            fused_total: telemetry::global().counter("serve_fused_total", &[]),
         }
     }
 
     pub fn factory(router: Router) -> BackendFactory {
         Arc::new(move || Ok(Box::new(MockBackend::new(router.clone())) as Box<dyn Backend>))
     }
-}
 
-/// Bulk-evaluate `flat` through a Q2.13 approximation, reusing caller
-/// scratch buffers. Bit-identical to mapping `eval_f64` per element.
-fn run_tanh_slice(
-    approx: &dyn TanhApprox,
-    q_in: &mut Vec<i32>,
-    q_out: &mut Vec<i32>,
-    flat: &[f32],
-) -> Vec<f32> {
-    q_in.clear();
-    q_in.extend(flat.iter().map(|&v| crate::fixed::q13(v as f64)));
-    q_out.resize(flat.len(), 0);
-    approx.tanh_slice(q_in, q_out);
-    q_out.iter().map(|&y| crate::fixed::q13_to_f64(y) as f32).collect()
+    /// Bulk-evaluate `flat` through an approximation into `out`.
+    /// Bit-identical to mapping `eval_f64` per element; counts the batch
+    /// as fused when it will run the single-pass kernel.
+    fn run_tanh(&self, approx: &dyn TanhApprox, flat: &[f32], out: &mut Vec<f32>) {
+        if crate::fixed::fused_enabled() && approx.compiled_kernel().is_some() {
+            self.fused_total.inc();
+        }
+        out.clear();
+        out.resize(flat.len(), 0.0);
+        approx.tanh_slice_f32(flat, out);
+    }
 }
 
 impl Backend for MockBackend {
-    fn run(&mut self, key: &ModelKey, bucket: usize, flat: &[f32]) -> Result<Vec<f32>, String> {
+    fn run(
+        &mut self,
+        key: &ModelKey,
+        bucket: usize,
+        flat: &[f32],
+        out: &mut Vec<f32>,
+    ) -> Result<(), String> {
         let f = self.router.family(key).ok_or_else(|| format!("unknown {key}"))?;
         if flat.len() != bucket * f.sample_in {
             return Err(format!("bad flat len {}", flat.len()));
         }
         match key.model.as_str() {
             "tanh" => match key.variant.as_str() {
-                "cr" => Ok(run_tanh_slice(&self.cr, &mut self.q_in, &mut self.q_out, flat)),
-                "pwl" => Ok(run_tanh_slice(&self.pwl, &mut self.q_in, &mut self.q_out, flat)),
-                _ => Ok(flat.iter().map(|&v| v.tanh()).collect()),
+                "cr" => self.run_tanh(&self.cr, flat, out),
+                "pwl" => self.run_tanh(&self.pwl, flat, out),
+                _ => {
+                    out.clear();
+                    out.extend(flat.iter().map(|&v| v.tanh()));
+                }
             },
             // Other families: deterministic shape-correct stand-in
             // (mean of each sample broadcast over the output width).
             _ => {
-                let mut out = Vec::with_capacity(bucket * f.sample_out);
+                out.clear();
                 for s in 0..bucket {
                     let row = &flat[s * f.sample_in..(s + 1) * f.sample_in];
                     let mean = row.iter().sum::<f32>() / f.sample_in as f32;
                     out.extend(std::iter::repeat(mean.tanh()).take(f.sample_out));
                 }
-                Ok(out)
             }
         }
+        Ok(())
     }
 }
 
@@ -196,10 +222,15 @@ pub fn run_batch(
     let bucket = router.bucket(&key, n);
     // Backend-call window, stamped into every member request's span.
     let mut eval_window: Option<(Instant, Instant)> = None;
-    let result: Result<Vec<f32>, String> = match (family, bucket) {
+    // Pooled batch buffers: after the pool warms up, assembling and
+    // executing a batch reuses capacity from earlier batches instead of
+    // allocating — the eval path is allocation-free at steady state.
+    let mut out_buf = crate::util::bufpool::f32s().take();
+    let result: Result<(), String> = match (family, bucket) {
         (Some(f), Some(bucket)) => {
             // Assemble the padded batch.
-            let mut flat = vec![0f32; bucket * f.sample_in];
+            let mut flat = crate::util::bufpool::f32s().take();
+            flat.resize(bucket * f.sample_in, 0.0);
             for (s, req) in items.iter().enumerate() {
                 flat[s * f.sample_in..(s + 1) * f.sample_in].copy_from_slice(&req.payload);
             }
@@ -209,7 +240,7 @@ pub fn run_batch(
             // Time the backend call alone: exec also covers padding
             // assembly and fan-out, so eval isolates kernel throughput.
             let eval_start = Instant::now();
-            let r = backend.run(&key, bucket, &flat);
+            let r = backend.run(&key, bucket, &flat, &mut out_buf);
             let eval_end = Instant::now();
             let eval_time = eval_end.saturating_duration_since(eval_start);
             metrics.record_eval(eval_time);
@@ -242,9 +273,7 @@ pub fn run_batch(
     let padded_to = bucket.unwrap_or(0);
     for (s, mut req) in items.into_iter().enumerate() {
         let item_result = match &result {
-            Ok(flat_out) => {
-                Ok(flat_out[s * sample_out..(s + 1) * sample_out].to_vec())
-            }
+            Ok(()) => Ok(out_buf[s * sample_out..(s + 1) * sample_out].to_vec()),
             Err(e) => Err(e.clone()),
         };
         let ok = item_result.is_ok();

@@ -28,6 +28,19 @@
 //! [`CompiledKernel::eval_slice_par`] shards large batches across a
 //! [`ThreadPool`]; [`CompiledKernel::eval_slice_auto`] picks serial vs
 //! the process-shared pool at the `CRSPLINE_PAR_THRESHOLD` crossover.
+//!
+//! **Fused float fast path** — [`CompiledKernel::eval_f32_slice`] (and
+//! the `f64` / `_par` / `_auto` variants) performs quantize → table eval
+//! → dequantize in a *single pass* over 8-lane chunks, instead of the
+//! staged three-pass pipeline (quantize the whole batch into a `Vec`,
+//! eval it, dequantize into another `Vec`). The fused loops touch each
+//! element once while it is register/L1-resident, allocate nothing, and
+//! are written as fixed-width lane arrays so LLVM can autovectorize the
+//! quantize and dequantize stages. Bit-identity with the staged path is
+//! structural (the same `QFormat::quantize`, the same table arms, the
+//! same `QFormat::to_f64`) and proven exhaustively over the 2^16 Q2.13
+//! domain in `tests/integration_fastpath.rs`. `CRSPLINE_FUSED=0` routes
+//! callers back to the staged pipeline ([`fused_enabled`]).
 
 use super::kernel::{fold_mag, Coeff, KernelPlan, Select};
 use super::{round_shift, round_shift_half_even_i64, QFormat, Rounding};
@@ -316,13 +329,188 @@ impl CompiledKernel {
         out: &mut [i32],
         crossover: usize,
     ) {
+        self.shard_par(pool, xs, out, crossover, CompiledKernel::eval_slice);
+    }
+
+    /// Serial below the [`par_threshold`] crossover, sharded across the
+    /// process-shared pool above it.
+    pub fn eval_slice_auto(self: &Arc<Self>, xs: &[i32], out: &mut [i32]) {
+        let threshold = par_threshold();
+        if threshold > 0 && xs.len() >= threshold {
+            self.eval_slice_par(ThreadPool::shared(), xs, out, threshold);
+        } else {
+            self.eval_slice(xs, out);
+        }
+    }
+
+    /// Fused single-pass f32 batch evaluation: quantize → branch-free
+    /// table eval → dequantize per 8-lane chunk, no intermediate buffers.
+    /// Bit-identical to the staged pipeline
+    /// `xs.map(fmt.quantize) → eval_slice → map(fmt.to_f64 as f32)`.
+    pub fn eval_f32_slice(&self, xs: &[f32], out: &mut [f32]) {
+        self.eval_fused_slice(xs, out);
+    }
+
+    /// Fused single-pass f64 batch evaluation (the nn activation layers'
+    /// element type); same contract as [`Self::eval_f32_slice`].
+    pub fn eval_f64_slice(&self, xs: &[f64], out: &mut [f64]) {
+        self.eval_fused_slice(xs, out);
+    }
+
+    /// Shard a fused f32 batch across `pool`; bit-identical to
+    /// [`Self::eval_f32_slice`]. Same contract as [`Self::eval_slice_par`].
+    pub fn eval_f32_slice_par(
+        self: &Arc<Self>,
+        pool: &ThreadPool,
+        xs: &[f32],
+        out: &mut [f32],
+        crossover: usize,
+    ) {
+        self.shard_par(pool, xs, out, crossover, CompiledKernel::eval_f32_slice);
+    }
+
+    /// Shard a fused f64 batch across `pool`; bit-identical to
+    /// [`Self::eval_f64_slice`].
+    pub fn eval_f64_slice_par(
+        self: &Arc<Self>,
+        pool: &ThreadPool,
+        xs: &[f64],
+        out: &mut [f64],
+        crossover: usize,
+    ) {
+        self.shard_par(pool, xs, out, crossover, CompiledKernel::eval_f64_slice);
+    }
+
+    /// Fused f32 path with automatic serial/parallel routing at the
+    /// [`par_threshold`] crossover.
+    pub fn eval_f32_slice_auto(self: &Arc<Self>, xs: &[f32], out: &mut [f32]) {
+        let threshold = par_threshold();
+        if threshold > 0 && xs.len() >= threshold {
+            self.eval_f32_slice_par(ThreadPool::shared(), xs, out, threshold);
+        } else {
+            self.eval_f32_slice(xs, out);
+        }
+    }
+
+    /// Fused f64 path with automatic serial/parallel routing.
+    pub fn eval_f64_slice_auto(self: &Arc<Self>, xs: &[f64], out: &mut [f64]) {
+        let threshold = par_threshold();
+        if threshold > 0 && xs.len() >= threshold {
+            self.eval_f64_slice_par(ThreadPool::shared(), xs, out, threshold);
+        } else {
+            self.eval_f64_slice(xs, out);
+        }
+    }
+
+    /// The fused element loop, monomorphized per float type and table
+    /// strategy: each match arm hoists its table constants and hands
+    /// [`fused_lanes`] a tight eval closure, so the quantize / eval /
+    /// dequantize stages all run inside one pass over 8-lane chunks.
+    fn eval_fused_slice<E: FusedElem>(&self, xs: &[E], out: &mut [E]) {
+        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
+        let fmt = self.fmt;
+        let max_mag = fmt.max_raw();
+        let clamp = self.clamp;
+        let quant = move |v: E| fmt.quantize(v.into_f64());
+        let deq = move |y: i64| E::from_f64(fmt.to_f64(y));
+        match &self.table {
+            Table::Poly { shift, tmask, mask, post, rows } => {
+                let (tb, tmask, mask, post) = (*shift, *tmask, *mask, *post);
+                fused_lanes(xs, out, quant, deq, move |x| {
+                    let (neg, u) = fold_mag(x, max_mag);
+                    let r = &rows[((u >> tb) as usize) & mask];
+                    let tu = u & tmask;
+                    let acc = ((r[3] * tu + r[2]) * tu + r[1]) * tu + r[0];
+                    let y = round_shift_half_even_i64(acc, post).clamp(-clamp, clamp);
+                    if neg { -y } else { y }
+                });
+            }
+            Table::PolyWide { shift, tmask, mask, post, rows } => {
+                let (tb, tmask, mask, post) = (*shift, *tmask, *mask, *post);
+                fused_lanes(xs, out, quant, deq, move |x| {
+                    let (neg, u) = fold_mag(x, max_mag);
+                    let r = &rows[((u >> tb) as usize) & mask];
+                    let tu = (u & tmask) as i128;
+                    let acc = (((r[3] as i128) * tu + ((r[2] as i128) << tb)) * tu
+                        + ((r[1] as i128) << (2 * tb)))
+                        * tu
+                        + ((r[0] as i128) << (3 * tb));
+                    let y = round_shift(acc, post, Rounding::HalfEven).clamp(-clamp, clamp);
+                    if neg { -y } else { y }
+                });
+            }
+            Table::Affine { shift, tmask, mask, post, rows } => {
+                let (tb, tmask, mask, post) = (*shift, *tmask, *mask, *post);
+                fused_lanes(xs, out, quant, deq, move |x| {
+                    let (neg, u) = fold_mag(x, max_mag);
+                    let r = &rows[((u >> tb) as usize) & mask];
+                    let acc = r[1] * (u & tmask) + r[0];
+                    let y = round_shift_half_even_i64(acc, post).clamp(-clamp, clamp);
+                    if neg { -y } else { y }
+                });
+            }
+            Table::Const { shift, mask, vals } => {
+                let (shift, mask) = (*shift, *mask);
+                fused_lanes(xs, out, quant, deq, move |x| {
+                    let (neg, u) = fold_mag(x, max_mag);
+                    let y = vals[((u >> shift) as usize) & mask] as i64;
+                    if neg { -y } else { y }
+                });
+            }
+            Table::Rom16 { base, mask, vals } => {
+                let (min, base, mask) = (fmt.min_raw(), *base, *mask);
+                fused_lanes(xs, out, quant, deq, move |x| {
+                    vals[(x.clamp(min, max_mag) - base) as usize & mask] as i64
+                });
+            }
+            Table::Rom32 { base, mask, vals } => {
+                let (min, base, mask) = (fmt.min_raw(), *base, *mask);
+                fused_lanes(xs, out, quant, deq, move |x| {
+                    vals[(x.clamp(min, max_mag) - base) as usize & mask]
+                });
+            }
+            // Interpreter fallback: stage through fixed stack chunks so
+            // the fused contract (no allocation, single memory pass)
+            // still holds for shapes without a table strategy.
+            Table::Interp(plan) => {
+                const CHUNK: usize = 256;
+                let mut q = [0i32; CHUNK];
+                let mut y = [0i32; CHUNK];
+                for (xc, oc) in xs.chunks(CHUNK).zip(out.chunks_mut(CHUNK)) {
+                    let n = xc.len();
+                    for (qi, &x) in q[..n].iter_mut().zip(xc) {
+                        *qi = quant(x) as i32;
+                    }
+                    plan.eval_slice(&q[..n], &mut y[..n]);
+                    for (o, &yi) in oc.iter_mut().zip(&y[..n]) {
+                        *o = deq(yi as i64);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Split `xs`/`out` into per-worker shards and run `run` on each,
+    /// blocking until every shard completes. Serial below `crossover`
+    /// elements (or a pool with one worker) — sharding tiny batches costs
+    /// more in dispatch than it recovers. Must not be invoked from inside
+    /// `pool`'s own workers (the caller would wait on jobs queued behind
+    /// itself).
+    fn shard_par<E: Copy + Send + Sync + 'static>(
+        self: &Arc<Self>,
+        pool: &ThreadPool,
+        xs: &[E],
+        out: &mut [E],
+        crossover: usize,
+        run: fn(&CompiledKernel, &[E], &mut [E]),
+    ) {
         assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
         let n = xs.len();
         if n == 0 {
             return;
         }
         if n < crossover || pool.size() < 2 {
-            return self.eval_slice(xs, out);
+            return run(self, xs, out);
         }
         let chunk = n.div_ceil(pool.size());
         let latch = Arc::new((Mutex::new(0usize), Condvar::new()));
@@ -347,7 +535,7 @@ impl CompiledKernel {
                         std::slice::from_raw_parts_mut(shard.out, shard.len),
                     )
                 };
-                kernel.eval_slice(xs, out);
+                run(&kernel, xs, out);
                 let (count, cond) = &*latch;
                 *count.lock().unwrap() += 1;
                 cond.notify_one();
@@ -361,30 +549,103 @@ impl CompiledKernel {
             done = cond.wait(done).unwrap();
         }
     }
-
-    /// Serial below the [`par_threshold`] crossover, sharded across the
-    /// process-shared pool above it.
-    pub fn eval_slice_auto(self: &Arc<Self>, xs: &[i32], out: &mut [i32]) {
-        let threshold = par_threshold();
-        if threshold > 0 && xs.len() >= threshold {
-            self.eval_slice_par(ThreadPool::shared(), xs, out, threshold);
-        } else {
-            self.eval_slice(xs, out);
-        }
-    }
 }
 
-/// One parallel shard: raw disjoint subrange pointers, safe to move to a
-/// worker because the spawning call joins before returning.
-struct Shard {
-    xs: *const i32,
-    out: *mut i32,
+/// Raw shard handed to a pool worker: start pointers + length into the
+/// caller's `xs`/`out`. Pointers (not slices) because the job closures
+/// must be `'static`; disjointness and lifetime are enforced by
+/// `shard_par`'s latch (see the SAFETY comment there).
+struct Shard<T> {
+    xs: *const T,
+    out: *mut T,
     len: usize,
 }
 
-// SAFETY: the pointers address disjoint shard ranges whose referents the
-// spawning thread keeps alive (and unaliased) until the latch releases.
-unsafe impl Send for Shard {}
+// SAFETY: a Shard is just a span descriptor; sending it to another thread
+// is sound because shard_par guarantees exclusive, disjoint access for
+// the duration of the job.
+unsafe impl<T: Send> Send for Shard<T> {}
+
+/// A float element the fused path can quantize from / dequantize to.
+/// Conversions go through f64 so both widths share the normative
+/// [`QFormat::quantize`] / [`QFormat::to_f64`] — the staged pipelines
+/// do exactly the same conversions, which is what makes fused-vs-staged
+/// bit-identity structural rather than approximate.
+pub trait FusedElem: Copy + Send + Sync + 'static {
+    fn into_f64(self) -> f64;
+    fn from_f64(v: f64) -> Self;
+}
+
+impl FusedElem for f32 {
+    #[inline(always)]
+    fn into_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+}
+
+impl FusedElem for f64 {
+    #[inline(always)]
+    fn into_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+}
+
+/// Lane width of the fused loops: 8 elements per chunk keeps the lane
+/// arrays inside two AVX2 registers' worth of i64 work per stage.
+const FUSED_LANES: usize = 8;
+
+/// Drive quantize → eval → dequantize over fixed-width lane chunks.
+/// Each stage is its own short loop over a stack array, so the float
+/// conversions autovectorize independently of the (gather-shaped) table
+/// stage; the remainder tail runs the same closures element-wise.
+#[inline(always)]
+fn fused_lanes<E: FusedElem>(
+    xs: &[E],
+    out: &mut [E],
+    quant: impl Fn(E) -> i64 + Copy,
+    deq: impl Fn(i64) -> E + Copy,
+    eval: impl Fn(i64) -> i64 + Copy,
+) {
+    let mut xc = xs.chunks_exact(FUSED_LANES);
+    let mut oc = out.chunks_exact_mut(FUSED_LANES);
+    for (c, o) in (&mut xc).zip(&mut oc) {
+        let mut lane = [0i64; FUSED_LANES];
+        for (l, &x) in lane.iter_mut().zip(c) {
+            *l = quant(x);
+        }
+        for l in lane.iter_mut() {
+            *l = eval(*l);
+        }
+        for (o, &l) in o.iter_mut().zip(&lane) {
+            *o = deq(l);
+        }
+    }
+    for (&x, o) in xc.remainder().iter().zip(oc.into_remainder()) {
+        *o = deq(eval(quant(x)));
+    }
+}
+
+/// Whether the fused float fast path is enabled: `CRSPLINE_FUSED` unset
+/// or truthy (read once; `0`/`false`/`off` fall back to the staged
+/// quantize → eval → dequantize pipeline everywhere the fused path is
+/// routed).
+pub fn fused_enabled() -> bool {
+    static F: OnceLock<bool> = OnceLock::new();
+    *F.get_or_init(|| {
+        !matches!(
+            std::env::var("CRSPLINE_FUSED").ok().as_deref().map(str::trim),
+            Some("0") | Some("false") | Some("off")
+        )
+    })
+}
 
 /// The `eval_slice_auto` crossover: `CRSPLINE_PAR_THRESHOLD` elements
 /// (read once; 0 disables sharding), default [`DEFAULT_PAR_THRESHOLD`].

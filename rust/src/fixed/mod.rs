@@ -14,7 +14,7 @@ pub mod kernel;
 mod qformat;
 mod rounding;
 
-pub use compiled::CompiledKernel;
+pub use compiled::{fused_enabled, CompiledKernel, FusedElem};
 pub use fx::Fx;
 pub use kernel::{Coeff, KernelPlan, Select};
 pub use qformat::QFormat;

@@ -59,40 +59,62 @@ impl Lstm {
 
     fn step_inner(&self, x: &[f64], st: &LstmState, act: Act) -> LstmState {
         assert_eq!(x.len(), self.input);
-        let mut xh = Vec::with_capacity(self.input + self.hidden);
+        let pool = crate::util::bufpool::f64s();
+        let mut xh = pool.take();
         xh.extend_from_slice(x);
         xh.extend_from_slice(&st.h);
-        let gate = |k: usize| -> Vec<f64> {
-            let mut z = self.w[k].matvec(&xh);
+        let n = self.hidden;
+        // Whole-gate activation: each of the five activation passes per
+        // step is one batch call through the tanh block (the fused
+        // `*_slice_into` paths), not `hidden` scalar dispatches — this is
+        // how the hardware consumes a gate vector, and it amortizes the
+        // virtual call per step. All gate scratch comes from the shared
+        // buffer pool: the returned state is the only allocation a
+        // steady-state step makes.
+        let mut z = pool.take();
+        let mut gate_act = |k: usize, sigmoid: bool, out: &mut Vec<f64>| {
+            self.w[k].matvec_into(&xh, &mut z);
             for (zi, bi) in z.iter_mut().zip(&self.b[k]) {
                 *zi += bi;
             }
-            z
-        };
-        let (zi, zf, zg, zo) = (gate(0), gate(1), gate(2), gate(3));
-        // Whole-gate activation: each of the five activation passes per
-        // step is one batch call through the tanh block (tanh_slice), not
-        // `hidden` scalar dispatches — this is how the hardware consumes
-        // a gate vector, and it amortizes the virtual call per step.
-        let sig_vec = |z: &[f64]| -> Vec<f64> {
+            out.clear();
+            out.resize(n, 0.0);
             match &act {
-                Act::Exact => z.iter().map(|&v| 1.0 / (1.0 + (-v).exp())).collect(),
-                Act::Hw(a) => super::hw_sigmoid_slice(*a, z),
+                Act::Exact if sigmoid => {
+                    for (o, &v) in out.iter_mut().zip(z.iter()) {
+                        *o = 1.0 / (1.0 + (-v).exp());
+                    }
+                }
+                Act::Exact => {
+                    for (o, &v) in out.iter_mut().zip(z.iter()) {
+                        *o = v.tanh();
+                    }
+                }
+                Act::Hw(a) if sigmoid => super::hw_sigmoid_slice_into(*a, &z, out),
+                Act::Hw(a) => super::hw_tanh_slice_into(*a, &z, out),
             }
         };
-        let tanh_vec = |z: &[f64]| -> Vec<f64> {
-            match &act {
-                Act::Exact => z.iter().map(|&v| v.tanh()).collect(),
-                Act::Hw(a) => super::hw_tanh_slice(*a, z),
-            }
-        };
-        let (iv, fv, gv, ov) = (sig_vec(&zi), sig_vec(&zf), tanh_vec(&zg), sig_vec(&zo));
-        let mut c = vec![0.0; self.hidden];
-        for j in 0..self.hidden {
+        let (mut iv, mut fv, mut gv, mut ov) =
+            (pool.take(), pool.take(), pool.take(), pool.take());
+        gate_act(0, true, &mut iv);
+        gate_act(1, true, &mut fv);
+        gate_act(2, false, &mut gv);
+        gate_act(3, true, &mut ov);
+        let mut c = vec![0.0; n];
+        for j in 0..n {
             c[j] = fv[j] * st.c[j] + iv[j] * gv[j];
         }
-        let ct = tanh_vec(&c);
-        let h = (0..self.hidden).map(|j| ov[j] * ct[j]).collect();
+        let mut ct = pool.take();
+        ct.resize(n, 0.0);
+        match &act {
+            Act::Exact => {
+                for (o, &v) in ct.iter_mut().zip(c.iter()) {
+                    *o = v.tanh();
+                }
+            }
+            Act::Hw(a) => super::hw_tanh_slice_into(*a, &c, &mut ct),
+        }
+        let h = (0..n).map(|j| ov[j] * ct[j]).collect();
         LstmState { h, c }
     }
 

@@ -1,6 +1,6 @@
 //! Tanh MLP with a swappable hardware activation unit.
 
-use super::tensor::{argmax, quantize_vec_fmt, Matrix};
+use super::tensor::{argmax, Matrix};
 use crate::approx::TanhApprox;
 use crate::util::rng::Rng;
 use std::sync::OnceLock;
@@ -61,27 +61,35 @@ impl Mlp {
     /// activation unit's own format (`act.fmt()`, Q2.13 by default),
     /// hardware tanh block. The matmul accumulates in high precision (as
     /// real integer MACs do) and requantizes at the activation boundary.
-    /// Each hidden layer's activations go through one `tanh_slice` batch
-    /// call — the whole layer is a single pass through the activation
-    /// unit, exactly like the hardware's vectorized datapath.
+    /// Each hidden layer's activations go through one fused batch call
+    /// (`hw_tanh_slice_into`) — the whole layer is a single pass through
+    /// the activation unit, exactly like the hardware's vectorized
+    /// datapath — and the activation/pre-activation vectors ping-pong
+    /// between two pooled scratch buffers, so a steady-state forward pass
+    /// allocates only its returned output.
     pub fn forward_hw(&self, x: &[f64], act: &dyn TanhApprox) -> Vec<f64> {
         let start = Instant::now();
         let fmt = act.fmt();
-        let mut h = quantize_vec_fmt(x, fmt);
+        let mut h = crate::util::bufpool::f64s().take();
+        h.extend(x.iter().map(|&v| fmt.to_f64(fmt.quantize(v))));
+        let mut z = crate::util::bufpool::f64s().take();
         for (i, layer) in self.layers.iter().enumerate() {
             let wq = layer.w.quantized_fmt(fmt);
-            let mut z = wq.matvec(&h);
+            wq.matvec_into(&h, &mut z);
             for (zi, bi) in z.iter_mut().zip(&layer.b) {
                 *zi += bi;
             }
             if i + 1 < self.layers.len() {
-                h = super::hw_tanh_slice(act, &z);
+                h.clear();
+                h.resize(z.len(), 0.0);
+                super::hw_tanh_slice_into(act, &z, &mut h);
             } else {
-                h = quantize_vec_fmt(&z, fmt);
+                h.clear();
+                h.extend(z.iter().map(|&v| fmt.to_f64(fmt.quantize(v))));
             }
         }
         forward_hist().record_duration(start.elapsed());
-        h
+        h.to_vec()
     }
 
     /// Classification decision of the reference net.

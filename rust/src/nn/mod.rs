@@ -39,23 +39,42 @@ pub fn hw_sigmoid(approx: &dyn TanhApprox, x: f64) -> f64 {
 }
 
 /// Vector tanh through the fixed-point hardware interface — one
-/// [`TanhApprox::tanh_slice`] call per activation layer instead of one
-/// virtual dispatch per neuron; for plan-backed methods this runs on the
-/// process-wide cached compiled kernel (`fixed::compiled`), so every
-/// layer of every model shares one table build. Bit-identical to mapping
-/// [`hw_tanh`].
+/// [`TanhApprox::tanh_slice_f64_into`] call per activation layer instead
+/// of one virtual dispatch per neuron; for plan-backed methods this runs
+/// the fused single-pass kernel on the process-wide cached compiled form
+/// (`fixed::compiled`), so every layer of every model shares one table
+/// build and the pass makes no intermediate buffer walk. Bit-identical
+/// to mapping [`hw_tanh`].
 pub fn hw_tanh_slice(approx: &dyn TanhApprox, xs: &[f64]) -> Vec<f64> {
     approx.tanh_slice_f64(xs)
 }
 
+/// In-place variant of [`hw_tanh_slice`] for callers holding a pooled
+/// output buffer (`out.len() == xs.len()`).
+pub fn hw_tanh_slice_into(approx: &dyn TanhApprox, xs: &[f64], out: &mut [f64]) {
+    approx.tanh_slice_f64_into(xs, out);
+}
+
 /// Vector sigmoid via the tanh block — the batch analogue of
-/// [`hw_sigmoid`], bit-identical to mapping it per element.
+/// [`hw_sigmoid`], bit-identical to mapping it per element (the halving
+/// and the (1+·)/2 rescale are exact in f64, so routing through the
+/// fused tanh path changes no bits). The halved input stages through a
+/// pooled scratch buffer.
 pub fn hw_sigmoid_slice(approx: &dyn TanhApprox, xs: &[f64]) -> Vec<f64> {
-    let fmt = approx.fmt();
-    let q: Vec<i32> = xs.iter().map(|&v| fmt.quantize(v / 2.0) as i32).collect();
-    let mut out = vec![0i32; q.len()];
-    approx.tanh_slice(&q, &mut out);
-    out.into_iter().map(|t| (1.0 + fmt.to_f64(t as i64)) / 2.0).collect()
+    let mut out = vec![0.0f64; xs.len()];
+    hw_sigmoid_slice_into(approx, xs, &mut out);
+    out
+}
+
+/// In-place variant of [`hw_sigmoid_slice`] for callers holding a pooled
+/// output buffer (`out.len() == xs.len()`).
+pub fn hw_sigmoid_slice_into(approx: &dyn TanhApprox, xs: &[f64], out: &mut [f64]) {
+    let mut half = crate::util::bufpool::f64s().take();
+    half.extend(xs.iter().map(|&v| v / 2.0));
+    approx.tanh_slice_f64_into(&half, out);
+    for t in out.iter_mut() {
+        *t = (1.0 + *t) / 2.0;
+    }
 }
 
 #[cfg(test)]

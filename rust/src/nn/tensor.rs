@@ -42,13 +42,22 @@ impl Matrix {
 
     /// y = W·x (x of length cols, y of length rows).
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        let mut y = Vec::new();
+        self.matvec_into(x, &mut y);
+        y
+    }
+
+    /// [`Matrix::matvec`] into a caller-held buffer (cleared and resized)
+    /// so forward passes can reuse pooled scratch instead of allocating
+    /// per layer.
+    pub fn matvec_into(&self, x: &[f64], y: &mut Vec<f64>) {
         assert_eq!(x.len(), self.cols, "matvec dims");
-        let mut y = vec![0.0; self.rows];
+        y.clear();
+        y.resize(self.rows, 0.0);
         for r in 0..self.rows {
             let row = &self.data[r * self.cols..(r + 1) * self.cols];
             y[r] = row.iter().zip(x).map(|(w, xi)| w * xi).sum();
         }
-        y
     }
 
     /// Quantize every weight to Q2.13 (the accelerator's default stored

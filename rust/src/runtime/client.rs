@@ -14,9 +14,13 @@ impl LoadedModel {
     /// Execute with f32 inputs matching the spec's shapes; returns the
     /// flat f32 outputs (one Vec per output).
     ///
+    /// Generic over anything slice-shaped (`Vec<f32>`, `&[f32]`) so the
+    /// serving hot path can pass its pooled batch buffer without copying
+    /// it into a fresh `Vec` first.
+    ///
     /// The AOT pipeline lowers with `return_tuple=True`, so the program
     /// output is a tuple even when singular.
-    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+    pub fn run_f32<S: AsRef<[f32]>>(&self, inputs: &[S]) -> Result<Vec<Vec<f32>>> {
         if inputs.len() != self.spec.inputs.len() {
             bail!(
                 "{}: expected {} inputs, got {}",
@@ -27,6 +31,7 @@ impl LoadedModel {
         }
         let mut literals = Vec::with_capacity(inputs.len());
         for (i, data) in inputs.iter().enumerate() {
+            let data = data.as_ref();
             if data.len() != self.spec.input_elems(i) {
                 bail!(
                     "{}: input {i} has {} elems, expected {}",

@@ -1,0 +1,207 @@
+//! Process-wide reusable-buffer pools for the serving hot path.
+//!
+//! Steady-state serving used to allocate several `Vec`s per batch:
+//! the padded input assembly, the quantize/dequantize intermediates and
+//! the backend output. Each pool here keeps a small free list of
+//! previously-used buffers (capacity retained), so after warm-up a batch
+//! borrows and returns buffers without touching the allocator at all —
+//! the property `rust/tests/alloc_fastpath.rs` proves with a counting
+//! global allocator.
+//!
+//! Usage: [`take`](BufPool::take) a [`PooledBuf`], use it as a `Vec`
+//! (clear/extend/resize reuse the retained capacity), and let it drop —
+//! the buffer returns to the pool unless the free list is already at the
+//! retention cap (`CRSPLINE_POOL_CAP` buffers per pool, default
+//! [`DEFAULT_POOL_CAP`]; 0 disables pooling).
+//!
+//! Telemetry: each pool registers `bufpool_hits_total` /
+//! `bufpool_misses_total` counters and a `bufpool_free` gauge in the
+//! global registry, labeled by element type, so a snapshot shows whether
+//! the serving path is actually recycling (hits) or still warming up
+//! (misses).
+
+use crate::telemetry::{self, Counter, Gauge};
+use std::ops::{Deref, DerefMut};
+use std::sync::{Mutex, OnceLock};
+
+/// Default retention cap: free buffers kept per pool. Sized for a
+/// handful of workers double-buffering (input + output) with headroom;
+/// override with `CRSPLINE_POOL_CAP`.
+pub const DEFAULT_POOL_CAP: usize = 64;
+
+/// Retention cap per pool: `CRSPLINE_POOL_CAP` buffers (read once;
+/// 0 disables reuse entirely), default [`DEFAULT_POOL_CAP`].
+pub fn pool_cap() -> usize {
+    static CAP: OnceLock<usize> = OnceLock::new();
+    *CAP.get_or_init(|| {
+        std::env::var("CRSPLINE_POOL_CAP")
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(DEFAULT_POOL_CAP)
+    })
+}
+
+/// A thread-safe free list of `Vec<T>` buffers with telemetry counters.
+pub struct BufPool<T: 'static> {
+    free: Mutex<Vec<Vec<T>>>,
+    hits: Counter,
+    misses: Counter,
+    free_gauge: Gauge,
+}
+
+impl<T: 'static> BufPool<T> {
+    fn new(type_label: &str) -> Self {
+        let reg = telemetry::global();
+        Self {
+            free: Mutex::new(Vec::new()),
+            hits: reg.counter("bufpool_hits_total", &[("type", type_label)]),
+            misses: reg.counter("bufpool_misses_total", &[("type", type_label)]),
+            free_gauge: reg.gauge("bufpool_free", &[("type", type_label)]),
+        }
+    }
+
+    /// Borrow a buffer: a recycled one when the free list is non-empty
+    /// (its capacity is whatever its last user grew it to), a fresh empty
+    /// `Vec` otherwise. The returned guard hands the buffer back on drop.
+    pub fn take(&'static self) -> PooledBuf<T> {
+        let recycled = self.free.lock().unwrap_or_else(|p| p.into_inner()).pop();
+        let buf = match recycled {
+            Some(mut b) => {
+                b.clear();
+                self.hits.inc();
+                self.free_gauge.sub(1);
+                b
+            }
+            None => {
+                self.misses.inc();
+                Vec::new()
+            }
+        };
+        PooledBuf { buf, pool: self }
+    }
+
+    /// Free buffers currently retained (for tests and reporting).
+    pub fn free_len(&self) -> usize {
+        self.free.lock().map(|f| f.len()).unwrap_or(0)
+    }
+
+    fn put_back(&self, buf: Vec<T>) {
+        if buf.capacity() == 0 {
+            return; // nothing worth retaining
+        }
+        let mut free = self.free.lock().unwrap_or_else(|p| p.into_inner());
+        if free.len() < pool_cap() {
+            free.push(buf);
+            self.free_gauge.add(1);
+        }
+    }
+}
+
+/// A borrowed pool buffer; derefs to `Vec<T>` and returns itself to the
+/// owning pool on drop (contents cleared at the next [`BufPool::take`]).
+pub struct PooledBuf<T: 'static> {
+    buf: Vec<T>,
+    pool: &'static BufPool<T>,
+}
+
+impl<T> Deref for PooledBuf<T> {
+    type Target = Vec<T>;
+    fn deref(&self) -> &Vec<T> {
+        &self.buf
+    }
+}
+
+impl<T> DerefMut for PooledBuf<T> {
+    fn deref_mut(&mut self) -> &mut Vec<T> {
+        &mut self.buf
+    }
+}
+
+impl<T> Drop for PooledBuf<T> {
+    fn drop(&mut self) {
+        self.pool.put_back(std::mem::take(&mut self.buf));
+    }
+}
+
+/// The process-wide `Vec<i32>` pool (quantized inputs / raw outputs).
+pub fn i32s() -> &'static BufPool<i32> {
+    static P: OnceLock<BufPool<i32>> = OnceLock::new();
+    P.get_or_init(|| BufPool::new("i32"))
+}
+
+/// The process-wide `Vec<f32>` pool (batch assembly / backend outputs).
+pub fn f32s() -> &'static BufPool<f32> {
+    static P: OnceLock<BufPool<f32>> = OnceLock::new();
+    P.get_or_init(|| BufPool::new("f32"))
+}
+
+/// The process-wide `Vec<f64>` pool (nn activation staging).
+pub fn f64s() -> &'static BufPool<f64> {
+    static P: OnceLock<BufPool<f64>> = OnceLock::new();
+    P.get_or_init(|| BufPool::new("f64"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_drop_take_recycles_capacity() {
+        let pool = f64s();
+        {
+            let mut b = pool.take();
+            b.extend(std::iter::repeat(1.0).take(4096));
+        }
+        // The returned buffer must come back, capacity intact, cleared.
+        let free_before = pool.free_len();
+        assert!(free_before >= 1);
+        let b = pool.take();
+        assert!(b.is_empty());
+        assert!(b.capacity() >= 4096, "capacity {} lost", b.capacity());
+        assert_eq!(pool.free_len(), free_before - 1);
+    }
+
+    #[test]
+    fn empty_buffers_are_not_retained() {
+        let pool = i32s();
+        let free_before = pool.free_len();
+        drop(pool.take()); // never grew: capacity 0, not worth keeping
+        assert_eq!(pool.free_len(), free_before);
+    }
+
+    #[test]
+    fn hit_miss_counters_register_in_global_telemetry() {
+        let pool = f32s();
+        {
+            let mut b = pool.take();
+            b.push(1.0);
+        }
+        let _ = pool.take(); // guaranteed at least one hit by now
+        let snap = telemetry::global().snapshot();
+        let hits = snap.counter("bufpool_hits_total", &[("type", "f32")]).unwrap_or(0);
+        let misses = snap.counter("bufpool_misses_total", &[("type", "f32")]).unwrap_or(0);
+        assert!(hits + misses >= 2, "hits={hits} misses={misses}");
+    }
+
+    #[test]
+    fn concurrent_take_drop_is_sound() {
+        let pool = i32s();
+        let handles: Vec<_> = (0..8)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    for i in 0..200 {
+                        let mut b = pool.take();
+                        b.clear();
+                        b.extend(0..(t * 37 + i) % 64);
+                        let want: Vec<i32> = (0..(t * 37 + i) % 64).collect();
+                        assert_eq!(*b, want);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert!(pool.free_len() <= pool_cap());
+    }
+}

@@ -5,6 +5,7 @@
 //! crates.io — PRNG, JSON, CLI parsing, thread pool, histograms — are
 //! implemented here as small, fully-tested modules.
 
+pub mod bufpool;
 pub mod cli;
 pub mod hist;
 pub mod json;

@@ -1,0 +1,86 @@
+//! Counting-allocator proof: a steady-state batch on the worker eval
+//! path performs **zero** heap allocations.
+//!
+//! Own test binary because `#[global_allocator]` is binary-wide: a
+//! counting wrapper around the system allocator tallies every
+//! `alloc`/`realloc`, and the test drives `MockBackend::run` (the exact
+//! call `run_batch` times as "eval") with the same pooled output buffer
+//! the worker loop holds. After warm-up — buffer pool primed, compiled
+//! kernel built and cached, telemetry handles registered — repeated
+//! batches must leave the counter untouched, on both the fused and the
+//! pooled staged path.
+//!
+//! Single #[test] entry point: libtest may run tests on multiple threads
+//! and any other test's allocations would race the counter.
+
+use crspline::coordinator::{Backend, MockBackend, ModelKey, Router};
+use crspline::runtime::Manifest;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static A: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+fn router() -> Router {
+    let manifest = Manifest::parse(
+        r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "tanh_cr_256", "model": "tanh", "variant": "cr",
+             "path": "a", "batch": 256, "inputs": [[256, 16]], "outputs": [[256, 16]]},
+            {"name": "tanh_pwl_256", "model": "tanh", "variant": "pwl",
+             "path": "b", "batch": 256, "inputs": [[256, 16]], "outputs": [[256, 16]]}
+        ]}"#,
+        std::path::PathBuf::from("."),
+    )
+    .unwrap();
+    Router::from_manifest(&manifest)
+}
+
+#[test]
+fn steady_state_batches_do_not_allocate() {
+    let router = router();
+    let mut backend = MockBackend::new(router);
+    // 256 samples × 16 elems: a real serving bucket, below the parallel
+    // crossover so the whole evaluation stays on this thread.
+    let flat: Vec<f32> = (0..256 * 16).map(|i| (i % 97) as f32 * 0.04 - 2.0).collect();
+    let mut out: Vec<f32> = Vec::new();
+    for key in [ModelKey::new("tanh", "cr"), ModelKey::new("tanh", "pwl")] {
+        // Warm-up: builds the compiled kernel (cache), registers telemetry
+        // handles, grows the pooled scratch and `out` to steady capacity.
+        for _ in 0..4 {
+            backend.run(&key, 256, &flat, &mut out).unwrap();
+        }
+        let before = allocs();
+        for _ in 0..32 {
+            backend.run(&key, 256, &flat, &mut out).unwrap();
+        }
+        let grew = allocs() - before;
+        assert_eq!(grew, 0, "{key}: {grew} allocations across 32 steady-state batches");
+        // And the answers are still right (not a no-op loop).
+        assert_eq!(out.len(), 256 * 16);
+        assert!(out.iter().all(|v| v.abs() <= 1.0));
+    }
+}

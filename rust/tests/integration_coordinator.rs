@@ -192,12 +192,13 @@ impl crspline::coordinator::Backend for FlakyBackend {
         key: &ModelKey,
         bucket: usize,
         flat: &[f32],
-    ) -> Result<Vec<f32>, String> {
+        out: &mut Vec<f32>,
+    ) -> Result<(), String> {
         self.calls += 1;
         if self.calls % self.fail_every == 0 {
             return Err("injected backend fault".into());
         }
-        crspline::coordinator::Backend::run(&mut self.inner, key, bucket, flat)
+        crspline::coordinator::Backend::run(&mut self.inner, key, bucket, flat, out)
     }
 }
 

@@ -1,0 +1,169 @@
+//! Fused fast-path proofs: the single-pass float kernels
+//! (`eval_f32_slice` / `eval_f64_slice` and the routed
+//! `tanh_slice_f32` / `tanh_slice_f64_into` trait paths) are bit-identical
+//! to the staged quantize → eval → dequantize pipeline, exhaustively over
+//! the 2^16 Q2.13 raw domain for every plan-backed method.
+
+use crspline::approx::{
+    CatmullRom, Dctif, PlainLut, Pwl, Ralut, RegionBased, TanhApprox,
+};
+use crspline::util::pool::ThreadPool;
+
+fn plan_backed() -> Vec<Box<dyn TanhApprox>> {
+    vec![
+        Box::new(CatmullRom::paper_default()),
+        Box::new(Pwl::paper_default()),
+        Box::new(PlainLut::paper_default()),
+        Box::new(Ralut::paper_default()),
+        Box::new(RegionBased::paper_default()),
+        Box::new(Dctif::paper_default()),
+    ]
+}
+
+/// Every f32 exactly representing a Q2.13 raw value, plus off-grid and
+/// out-of-range probes: `to_f64(raw)` is a multiple of 2^-13, exact in
+/// f32, so covering all 2^16 raws exercises every table entry.
+fn f32_domain(m: &dyn TanhApprox) -> Vec<f32> {
+    let fmt = m.fmt();
+    let mut xs: Vec<f32> =
+        (fmt.min_raw()..=fmt.max_raw()).map(|r| fmt.to_f64(r) as f32).collect();
+    // Halfway points (round-half-even decisions) and saturating inputs.
+    xs.extend((-200..200).map(|i| i as f32 * 0.017_31 + 0.000_061));
+    xs.extend([-1e9f32, -5.5, -4.0001, 4.0001, 5.5, 1e9, 0.0, -0.0]);
+    xs
+}
+
+/// The staged reference pipeline the fused kernels must reproduce.
+fn staged_f32(m: &dyn TanhApprox, xs: &[f32]) -> Vec<f32> {
+    let fmt = m.fmt();
+    let q: Vec<i32> = xs.iter().map(|&v| fmt.quantize(v as f64) as i32).collect();
+    let mut y = vec![0i32; q.len()];
+    m.tanh_slice(&q, &mut y);
+    y.into_iter().map(|r| fmt.to_f64(r as i64) as f32).collect()
+}
+
+fn staged_f64(m: &dyn TanhApprox, xs: &[f64]) -> Vec<f64> {
+    let fmt = m.fmt();
+    let q: Vec<i32> = xs.iter().map(|&v| fmt.quantize(v) as i32).collect();
+    let mut y = vec![0i32; q.len()];
+    m.tanh_slice(&q, &mut y);
+    y.into_iter().map(|r| fmt.to_f64(r as i64)).collect()
+}
+
+#[test]
+fn fused_f32_bit_identical_to_staged_exhaustive() {
+    for m in plan_backed() {
+        let k = m.compiled_kernel().unwrap_or_else(|| {
+            panic!("{}: plan-backed method must expose a compiled kernel", m.name())
+        });
+        let xs = f32_domain(m.as_ref());
+        let want = staged_f32(m.as_ref(), &xs);
+        let mut got = vec![0f32; xs.len()];
+        k.eval_f32_slice(&xs, &mut got);
+        for (i, (&w, &g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(
+                w.to_bits(),
+                g.to_bits(),
+                "{} x={} fused={g} staged={w}",
+                m.name(),
+                xs[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_f64_bit_identical_to_staged_exhaustive() {
+    for m in plan_backed() {
+        let k = m.compiled_kernel().unwrap();
+        let fmt = m.fmt();
+        let xs: Vec<f64> = (fmt.min_raw()..=fmt.max_raw()).map(|r| fmt.to_f64(r)).collect();
+        let want = staged_f64(m.as_ref(), &xs);
+        let mut got = vec![0f64; xs.len()];
+        k.eval_f64_slice(&xs, &mut got);
+        for (i, (&w, &g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(
+                w.to_bits(),
+                g.to_bits(),
+                "{} x={} fused={g} staged={w}",
+                m.name(),
+                xs[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn trait_slice_f32_routes_identically_for_all_methods() {
+    // The trait default must agree with the staged pipeline whether it
+    // picked the fused kernel (plan-backed) or the pooled staged
+    // fallback (no compiled kernel / ablations).
+    let mut methods = plan_backed();
+    methods.push(Box::new(CatmullRom::paper_default().with_basis_frac(12)));
+    for m in methods {
+        let xs = f32_domain(m.as_ref());
+        let want = staged_f32(m.as_ref(), &xs);
+        let mut got = vec![0f32; xs.len()];
+        m.tanh_slice_f32(&xs, &mut got);
+        for (i, (&w, &g)) in want.iter().zip(&got).enumerate() {
+            assert_eq!(w.to_bits(), g.to_bits(), "{} x={}", m.name(), xs[i]);
+        }
+    }
+}
+
+#[test]
+fn ablation_has_no_compiled_kernel() {
+    // The basis-truncation ablation rounds differently from the plan:
+    // routing it through the fused kernel would change bits.
+    let abl = CatmullRom::paper_default().with_basis_frac(12);
+    assert!(abl.compiled_kernel().is_none());
+    assert!(CatmullRom::paper_default().compiled_kernel().is_some());
+}
+
+#[test]
+fn fused_parallel_matches_serial() {
+    let cr = CatmullRom::paper_default();
+    let k = cr.compiled_kernel().unwrap();
+    let pool = ThreadPool::new(4);
+    let xs = f32_domain(&cr);
+    let mut serial = vec![0f32; xs.len()];
+    let mut par = vec![0f32; xs.len()];
+    k.eval_f32_slice(&xs, &mut serial);
+    k.eval_f32_slice_par(&pool, &xs, &mut par, 1);
+    assert_eq!(
+        serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        par.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+    );
+    // Odd shard remainder: length not divisible by workers or lanes.
+    let xs = &xs[..4097];
+    let mut serial = vec![0f32; xs.len()];
+    let mut par = vec![0f32; xs.len()];
+    k.eval_f32_slice(xs, &mut serial);
+    k.eval_f32_slice_par(&pool, xs, &mut par, 1);
+    assert_eq!(serial, par);
+}
+
+#[test]
+fn nn_slice_helpers_still_bit_identical_to_scalar() {
+    // The pooled/fused rewrite of the nn activation helpers must not
+    // change a single bit against the scalar wrappers.
+    let cr = CatmullRom::paper_default();
+    let xs: Vec<f64> = (-500..=500).map(|i| i as f64 * 0.011).collect();
+    let t = crspline::nn::hw_tanh_slice(&cr, &xs);
+    let s = crspline::nn::hw_sigmoid_slice(&cr, &xs);
+    for (i, &x) in xs.iter().enumerate() {
+        assert_eq!(t[i].to_bits(), crspline::nn::hw_tanh(&cr, x).to_bits(), "tanh x={x}");
+        assert_eq!(s[i].to_bits(), crspline::nn::hw_sigmoid(&cr, x).to_bits(), "sigmoid x={x}");
+    }
+}
+
+#[test]
+fn empty_and_single_element_slices() {
+    let cr = CatmullRom::paper_default();
+    let k = cr.compiled_kernel().unwrap();
+    let mut out: Vec<f32> = vec![];
+    k.eval_f32_slice(&[], &mut out);
+    let mut out = [0f32; 1];
+    k.eval_f32_slice(&[0.5f32], &mut out);
+    assert_eq!(out[0], crspline::approx::TanhApprox::eval_f64(&cr, 0.5) as f32);
+}

@@ -135,7 +135,7 @@ fn runtime_rejects_shape_violations() {
     let spec = manifest.by_name("tanh_cr_1").expect("artifact").clone();
     engine.load(&manifest, &spec).expect("load");
     let m = engine.by_name("tanh_cr_1").unwrap();
-    assert!(m.run_f32(&[]).is_err());
+    assert!(m.run_f32::<Vec<f32>>(&[]).is_err());
     assert!(m.run_f32(&[vec![0.0; 255]]).is_err());
     assert!(m.run_f32(&[vec![0.0; 256], vec![0.0; 1]]).is_err());
     assert!(m.run_f32(&[vec![0.0; 256]]).is_ok());
