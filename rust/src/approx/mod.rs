@@ -125,12 +125,26 @@ pub trait TanhApprox: Send + Sync {
     ///
     /// Panics if `xs.len() != out.len()`.
     fn tanh_slice_f32(&self, xs: &[f32], out: &mut [f32]) {
-        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
         if crate::fixed::fused_enabled() {
             if let Some(k) = self.compiled_kernel() {
+                assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
                 return k.eval_f32_slice_auto(xs, out);
             }
         }
+        self.tanh_slice_f32_staged(xs, out);
+    }
+
+    /// The staged (quantize → [`TanhApprox::tanh_slice`] interpreter →
+    /// dequantize) pipeline behind [`TanhApprox::tanh_slice_f32`],
+    /// callable directly. This is the graceful-degradation path: when the
+    /// fused compiled kernel faults mid-batch, the coordinator re-runs
+    /// the batch here — bit-identical by the fused-vs-staged proofs in
+    /// `tests/integration_fastpath.rs` — instead of failing it. Rewrites
+    /// every element of `out`.
+    ///
+    /// Panics if `xs.len() != out.len()`.
+    fn tanh_slice_f32_staged(&self, xs: &[f32], out: &mut [f32]) {
+        assert_eq!(xs.len(), out.len(), "tanh_slice length mismatch");
         let fmt = self.fmt();
         let mut q = crate::util::bufpool::i32s().take();
         q.extend(xs.iter().map(|&v| fmt.quantize(v as f64) as i32));

@@ -36,6 +36,29 @@ pub struct Batch<T> {
     /// When the batch closed (size or deadline policy fired) — the
     /// `closed` stamp of every member request's trace span.
     pub closed: Instant,
+    /// Execution attempts completed so far: 0 for a freshly closed batch,
+    /// incremented each time a worker panic sends it back for a retry.
+    pub attempt: u32,
+}
+
+impl<T> Batch<T> {
+    /// Remove and return every item matching `pred`, preserving the
+    /// relative order of both the kept and the removed items. Used to
+    /// shed deadline-expired requests at batch close so they are never
+    /// evaluated.
+    pub fn shed(&mut self, mut pred: impl FnMut(&T) -> bool) -> Vec<T> {
+        let mut out = Vec::new();
+        let mut kept = Vec::with_capacity(self.items.len());
+        for item in self.items.drain(..) {
+            if pred(&item) {
+                out.push(item);
+            } else {
+                kept.push(item);
+            }
+        }
+        self.items = kept;
+        out
+    }
 }
 
 struct Queue<T> {
@@ -92,6 +115,7 @@ impl<T> Batcher<T> {
             items,
             oldest: oldest.unwrap(),
             closed: Instant::now(),
+            attempt: 0,
         })
     }
 
@@ -228,6 +252,52 @@ mod tests {
         }
         // scratch stays internal: capacity can persist, contents must not
         assert!(b.poll_expired(t0 + Duration::from_secs(60)).is_empty());
+    }
+
+    #[test]
+    fn shed_partitions_preserving_order() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 6, max_wait: Duration::from_secs(9) });
+        let now = Instant::now();
+        for v in [1, 2, 3, 4, 5, 6] {
+            b.push(key("m"), v, now);
+        }
+        let mut batch = b.close(&key("m")).unwrap();
+        assert_eq!(batch.attempt, 0);
+        let shed = batch.shed(|v| v % 2 == 0);
+        assert_eq!(shed, vec![2, 4, 6]);
+        assert_eq!(batch.items, vec![1, 3, 5]);
+        // shedding nothing leaves the batch intact
+        assert!(batch.shed(|_| false).is_empty());
+        assert_eq!(batch.items, vec![1, 3, 5]);
+        // shedding everything empties it
+        assert_eq!(batch.shed(|_| true), vec![1, 3, 5]);
+        assert!(batch.items.is_empty());
+    }
+
+    /// Regression: once `poll_expired` (or any close) has shed a key's
+    /// batch, a subsequent poll at the same (or a later) timestamp must
+    /// not re-close it — the queue is empty and must stay closed until
+    /// new items arrive.
+    #[test]
+    fn poll_expired_never_recloses_a_shed_batch() {
+        let mut b = Batcher::new(BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        b.push(key("m"), 1, t0);
+        b.push(key("m"), 2, t0);
+        let late = t0 + Duration::from_millis(5);
+        let first = b.poll_expired(late);
+        assert_eq!(first.len(), 1);
+        assert_eq!(first[0].items, vec![1, 2]);
+        // Same timestamp again, and later ones: nothing left to close.
+        assert!(b.poll_expired(late).is_empty());
+        assert!(b.poll_expired(late + Duration::from_secs(1)).is_empty());
+        assert!(b.next_deadline().is_none());
+        assert_eq!(b.pending(), 0);
+        // New traffic on the same key batches afresh, unaffected.
+        b.push(key("m"), 3, late);
+        let second = b.poll_expired(late + Duration::from_millis(5));
+        assert_eq!(second.len(), 1);
+        assert_eq!(second[0].items, vec![3]);
     }
 
     #[test]

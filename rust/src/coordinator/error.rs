@@ -5,6 +5,14 @@
 //! is an expected condition, not a panic. Every fallible coordinator
 //! entry point returns [`ServeError`] instead of unwinding; callers that
 //! live in `anyhow` land convert for free through `?`.
+//!
+//! The hardened lifecycle adds three rejection reasons a robust caller
+//! must handle distinctly: [`ServeError::Overloaded`] (admission control
+//! shed the request — back off), [`ServeError::DeadlineExceeded`] (the
+//! request's own deadline lapsed before evaluation — retrying with the
+//! same deadline is pointless), and [`ServeError::WorkerPanicked`] (the
+//! batch kept crashing workers through every retry — a bug or an injected
+//! fault, not load).
 
 /// Why a coordinator operation could not complete.
 #[derive(Clone, Debug, PartialEq, Eq)]
@@ -17,6 +25,17 @@ pub enum ServeError {
     /// The reply channel closed before a response arrived — the batch was
     /// dropped mid-flight (worker exited during shutdown).
     ChannelClosed,
+    /// The request's deadline lapsed before its batch was evaluated; it
+    /// was shed at batch close and never executed.
+    DeadlineExceeded,
+    /// Admission control rejected the request: the submit queue already
+    /// holds `queue_depth` requests, at or beyond the configured capacity.
+    Overloaded { queue_depth: usize },
+    /// The backend reported an execution error for the request's batch.
+    Backend(String),
+    /// The batch panicked the worker on every attempt (initial try plus
+    /// retries); `attempts` is the total number of executions tried.
+    WorkerPanicked { attempts: u32 },
 }
 
 impl std::fmt::Display for ServeError {
@@ -26,6 +45,16 @@ impl std::fmt::Display for ServeError {
             ServeError::InvalidRequest(why) => write!(f, "invalid request: {why}"),
             ServeError::ChannelClosed => {
                 write!(f, "reply channel closed before a response arrived")
+            }
+            ServeError::DeadlineExceeded => {
+                write!(f, "deadline exceeded: request shed before evaluation")
+            }
+            ServeError::Overloaded { queue_depth } => {
+                write!(f, "server overloaded: {queue_depth} requests queued")
+            }
+            ServeError::Backend(why) => write!(f, "backend error: {why}"),
+            ServeError::WorkerPanicked { attempts } => {
+                write!(f, "batch panicked the worker on all {attempts} attempts")
             }
         }
     }
@@ -44,6 +73,14 @@ mod tests {
             .to_string()
             .contains("bad len"));
         assert!(ServeError::ChannelClosed.to_string().contains("reply channel"));
+        assert!(ServeError::DeadlineExceeded.to_string().contains("deadline"));
+        let over = ServeError::Overloaded { queue_depth: 512 };
+        assert!(over.to_string().contains("512"));
+        assert!(ServeError::Backend("injected backend fault".into())
+            .to_string()
+            .contains("injected backend fault"));
+        let crashed = ServeError::WorkerPanicked { attempts: 3 };
+        assert!(crashed.to_string().contains('3'));
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! atomic buckets — workers record latencies without ever blocking each
 //! other.
 
-use crate::telemetry::{self, Counter, HistogramHandle, SpanLog, SpanRecord};
+use crate::telemetry::{self, Counter, Gauge, HistogramHandle, SpanLog, SpanRecord};
 use crate::util::hist::{fmt_ns, Histogram};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
@@ -28,6 +28,20 @@ pub struct Metrics {
     pub batched_items: Counter,
     /// Sum of padded slots (bucket size − items).
     pub padding_slots: Counter,
+    /// `serve_shed_total{reason="deadline"}` — requests shed at batch
+    /// close because their deadline lapsed before evaluation.
+    pub shed_deadline: Counter,
+    /// `serve_shed_total{reason="overload"}` — submits rejected by
+    /// admission control (queue at capacity).
+    pub shed_overload: Counter,
+    /// `serve_retries_total{reason="worker_panic"}` — batch re-executions
+    /// after a contained worker panic.
+    pub retries: Counter,
+    /// `serve_worker_panics_total` — worker panics contained by
+    /// `catch_unwind` (each may or may not lead to a retry).
+    pub worker_panics: Counter,
+    /// `serve_queue_depth` — requests admitted but not yet dispatched.
+    pub queue_depth: Gauge,
     queue_ns: HistogramHandle,
     exec_ns: HistogramHandle,
     /// Backend evaluation time alone (the `backend.run` call inside a
@@ -60,6 +74,14 @@ impl Metrics {
             batches: reg.counter("serve_batches_total", labels),
             batched_items: reg.counter("serve_batched_items_total", labels),
             padding_slots: reg.counter("serve_padding_slots_total", labels),
+            shed_deadline: reg
+                .counter("serve_shed_total", &[("server", &server), ("reason", "deadline")]),
+            shed_overload: reg
+                .counter("serve_shed_total", &[("server", &server), ("reason", "overload")]),
+            retries: reg
+                .counter("serve_retries_total", &[("server", &server), ("reason", "worker_panic")]),
+            worker_panics: reg.counter("serve_worker_panics_total", labels),
+            queue_depth: reg.gauge("serve_queue_depth", labels),
             queue_ns: reg.histogram("serve_queue_ns", labels),
             exec_ns: reg.histogram("serve_exec_ns", labels),
             eval_ns: reg.histogram("serve_eval_ns", labels),
@@ -107,6 +129,10 @@ impl Metrics {
             batches: self.batches.get(),
             batched_items: self.batched_items.get(),
             padding_slots: self.padding_slots.get(),
+            shed_deadline: self.shed_deadline.get(),
+            shed_overload: self.shed_overload.get(),
+            retries: self.retries.get(),
+            worker_panics: self.worker_panics.get(),
             queue: self.queue_ns.snapshot(),
             exec: self.exec_ns.snapshot(),
             eval: self.eval_ns.snapshot(),
@@ -124,6 +150,14 @@ pub struct MetricsSnapshot {
     pub batches: u64,
     pub batched_items: u64,
     pub padding_slots: u64,
+    /// Requests shed for lapsed deadlines (never evaluated).
+    pub shed_deadline: u64,
+    /// Submits rejected by admission control.
+    pub shed_overload: u64,
+    /// Batch re-executions after contained worker panics.
+    pub retries: u64,
+    /// Worker panics contained by `catch_unwind`.
+    pub worker_panics: u64,
     pub queue: Histogram,
     pub exec: Histogram,
     pub eval: Histogram,
@@ -164,6 +198,13 @@ impl std::fmt::Display for MetricsSnapshot {
             self.mean_batch(),
             self.padding_ratio() * 100.0
         )?;
+        if self.shed_deadline + self.shed_overload + self.retries + self.worker_panics > 0 {
+            writeln!(
+                f,
+                "faults:   shed_deadline={} shed_overload={} retries={} worker_panics={}",
+                self.shed_deadline, self.shed_overload, self.retries, self.worker_panics
+            )?;
+        }
         writeln!(
             f,
             "queue:    p50={} p99={}",
@@ -222,6 +263,39 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.mean_batch(), 0.0);
         assert_eq!(s.padding_ratio(), 0.0);
+    }
+
+    #[test]
+    fn fault_counters_surface_in_snapshot_display_and_registry() {
+        let m = Metrics::new();
+        m.shed_deadline.add(2);
+        m.shed_overload.inc();
+        m.retries.add(3);
+        m.worker_panics.add(3);
+        m.queue_depth.set(5);
+        let s = m.snapshot();
+        assert_eq!(s.shed_deadline, 2);
+        assert_eq!(s.shed_overload, 1);
+        assert_eq!(s.retries, 3);
+        assert_eq!(s.worker_panics, 3);
+        let text = s.to_string();
+        assert!(text.contains("shed_deadline=2"), "{text}");
+        assert!(text.contains("worker_panics=3"), "{text}");
+        // One registry snapshot sees all three acceptance counters.
+        let snap = crate::telemetry::global().snapshot();
+        let srv = m.server_label();
+        assert_eq!(
+            snap.counter("serve_shed_total", &[("server", srv), ("reason", "deadline")]),
+            Some(2)
+        );
+        assert_eq!(
+            snap.counter("serve_retries_total", &[("server", srv), ("reason", "worker_panic")]),
+            Some(3)
+        );
+        assert_eq!(snap.counter("serve_worker_panics_total", &[("server", srv)]), Some(3));
+        // Fault-free servers keep the old Display shape (no faults line).
+        let clean = Metrics::new().snapshot();
+        assert!(!clean.to_string().contains("faults:"));
     }
 
     #[test]

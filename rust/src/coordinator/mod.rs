@@ -32,8 +32,8 @@ pub mod worker;
 pub use batcher::{BatchPolicy, Batcher};
 pub use error::ServeError;
 pub use metrics::{Metrics, MetricsSnapshot};
-pub use request::{ModelKey, Request, Response};
+pub use request::{ModelKey, Request, Response, SubmitOptions, DEFAULT_RETRIES};
 pub use router::Router;
-pub use server::{Server, ServerConfig};
+pub use server::{Server, ServerConfig, DEFAULT_CAPACITY};
 pub use trace::{replay, Trace};
 pub use worker::{Backend, BackendFactory, MockBackend, PjrtBackend};

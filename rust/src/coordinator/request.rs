@@ -1,9 +1,40 @@
 //! Request/response types of the serving layer.
 
+use super::error::ServeError;
 use crate::fixed::{QFormat, Q2_13};
 use crate::telemetry::{Span, SpanRecord};
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
+
+/// Default retry budget for batches whose worker panicked mid-eval: the
+/// initial attempt plus this many retries before the batch is failed
+/// with [`ServeError::WorkerPanicked`].
+pub const DEFAULT_RETRIES: u32 = 2;
+
+/// Per-request lifecycle options for [`super::Server::submit_with`].
+#[derive(Clone, Copy, Debug)]
+pub struct SubmitOptions {
+    /// Maximum time from submit to evaluation. A request whose deadline
+    /// lapses is shed at batch-close time — never evaluated — and its
+    /// reply is [`ServeError::DeadlineExceeded`]. `None` waits forever.
+    pub deadline: Option<Duration>,
+    /// Worker-panic retry budget for batches containing this request
+    /// (the batch retries at the *smallest* budget among its members).
+    pub retries: u32,
+}
+
+impl Default for SubmitOptions {
+    fn default() -> Self {
+        Self { deadline: None, retries: DEFAULT_RETRIES }
+    }
+}
+
+impl SubmitOptions {
+    /// Options with a deadline and the default retry budget.
+    pub fn with_deadline(deadline: Duration) -> Self {
+        Self { deadline: Some(deadline), ..Self::default() }
+    }
+}
 
 /// Routing key: one queue + one executable family per
 /// (model, variant, number format).
@@ -56,16 +87,28 @@ pub struct Request {
     /// [`crate::telemetry::span`]). `span.submitted == submitted` and
     /// `span.trace_id == id`.
     pub span: Span,
+    /// Absolute deadline (`submitted + options.deadline`); a request past
+    /// this instant is shed at batch close instead of evaluated.
+    pub expires: Option<Instant>,
+    /// Remaining worker-panic retry budget (see [`SubmitOptions::retries`]).
+    pub retries: u32,
     /// Where the response goes.
     pub reply: mpsc::Sender<Response>,
+}
+
+impl Request {
+    /// Whether the request's deadline has lapsed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.expires.is_some_and(|e| e <= now)
+    }
 }
 
 /// The response to one request.
 #[derive(Clone, Debug)]
 pub struct Response {
     pub id: u64,
-    /// Flattened per-sample output, or an error message.
-    pub result: Result<Vec<f32>, String>,
+    /// Flattened per-sample output, or the typed reason it failed.
+    pub result: Result<Vec<f32>, ServeError>,
     /// Time spent queued before the batch closed.
     pub queue_time: Duration,
     /// End-to-end latency (submit → response send).
@@ -126,7 +169,36 @@ mod tests {
             span: Span::start(1).finish(Instant::now()),
         };
         assert_eq!(ok.output().unwrap(), &[1.0]);
-        let err = Response { result: Err("boom".into()), ..ok };
-        assert!(err.output().is_err());
+        let err = Response { result: Err(ServeError::Backend("boom".into())), ..ok };
+        let msg = err.output().unwrap_err().to_string();
+        assert!(msg.contains("boom"), "{msg}");
+    }
+
+    #[test]
+    fn submit_options_defaults_and_expiry() {
+        let opts = SubmitOptions::default();
+        assert!(opts.deadline.is_none());
+        assert_eq!(opts.retries, DEFAULT_RETRIES);
+        let with = SubmitOptions::with_deadline(Duration::from_millis(5));
+        assert_eq!(with.deadline, Some(Duration::from_millis(5)));
+        assert_eq!(with.retries, DEFAULT_RETRIES);
+
+        let now = Instant::now();
+        let (reply, _rx) = mpsc::channel();
+        let mut req = Request {
+            id: 1,
+            key: ModelKey::new("tanh", "cr"),
+            payload: vec![0.0],
+            submitted: now,
+            span: Span::start_at(1, now),
+            expires: None,
+            retries: DEFAULT_RETRIES,
+            reply,
+        };
+        assert!(!req.expired(now + Duration::from_secs(3600)), "no deadline never expires");
+        req.expires = Some(now + Duration::from_millis(2));
+        assert!(!req.expired(now));
+        assert!(req.expired(now + Duration::from_millis(2)));
+        assert!(req.expired(now + Duration::from_millis(3)));
     }
 }

@@ -3,16 +3,23 @@
 use super::batcher::{BatchPolicy, Batcher};
 use super::error::ServeError;
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::request::{ModelKey, Request, Response};
+use super::request::{ModelKey, Request, Response, SubmitOptions};
 use super::router::Router;
 use super::worker::{spawn_workers, BackendFactory};
 use crate::telemetry::{Flusher, Span, SpanRecord};
+use crate::util::faults::{self, FaultPlan, FaultSite};
+use crate::util::lock_unpoisoned;
 use anyhow::Result;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Default admission-queue capacity (requests admitted but not yet
+/// dispatched to a worker) before submits shed with
+/// [`ServeError::Overloaded`].
+pub const DEFAULT_CAPACITY: usize = 8192;
 
 /// Server configuration.
 #[derive(Clone)]
@@ -21,22 +28,43 @@ pub struct ServerConfig {
     pub policy: BatchPolicy,
     pub router: Router,
     pub backend: BackendFactory,
+    /// Admission-control bound: submits beyond this many undispatched
+    /// requests are shed with [`ServeError::Overloaded`] instead of
+    /// growing the queue without limit.
+    pub capacity: usize,
+    /// Fault plan for the coordinator's injection points. `None` reads
+    /// `CRSPLINE_FAULTS` from the environment (disabled when unset);
+    /// tests pass an explicit plan instead of racing on the env var.
+    pub faults: Option<Arc<FaultPlan>>,
 }
 
 impl ServerConfig {
     pub fn new(router: Router, backend: BackendFactory) -> Self {
-        Self { workers: 2, policy: BatchPolicy::default(), router, backend }
+        Self {
+            workers: 2,
+            policy: BatchPolicy::default(),
+            router,
+            backend,
+            capacity: DEFAULT_CAPACITY,
+            faults: None,
+        }
     }
 }
 
 /// A running coordinator instance.
 pub struct Server {
-    submit_tx: Option<Sender<Request>>,
+    /// `Mutex<Option<..>>` so [`Server::halt`] can close the submit
+    /// channel from a shared reference while concurrent submitters race
+    /// it — they observe `None` (or a disconnected send) and get a typed
+    /// [`ServeError::ShutDown`], never a panic.
+    submit_tx: Mutex<Option<Sender<Request>>>,
     batcher_thread: Option<JoinHandle<()>>,
     workers: Vec<JoinHandle<()>>,
     router: Router,
     metrics: Arc<Metrics>,
     next_id: AtomicU64,
+    capacity: usize,
+    faults: Arc<FaultPlan>,
     /// Background JSON-lines exporter, present when
     /// `CRSPLINE_METRICS_JSON` was set at start. Stopped (final flush)
     /// during shutdown.
@@ -47,6 +75,8 @@ impl Server {
     /// Start the batcher thread and worker pool.
     pub fn start(config: ServerConfig) -> Result<Server> {
         let metrics = Arc::new(Metrics::new());
+        let faults =
+            config.faults.unwrap_or_else(|| Arc::clone(faults::env_plan()));
         let (submit_tx, submit_rx) = mpsc::channel::<Request>();
         let (batch_tx, batch_rx) = mpsc::channel();
         let workers = spawn_workers(
@@ -55,19 +85,24 @@ impl Server {
             config.router.clone(),
             Arc::clone(&config.backend),
             Arc::clone(&metrics),
+            Arc::clone(&faults),
         );
         let router = config.router.clone();
         let policy = config.policy;
+        let b_metrics = Arc::clone(&metrics);
+        let b_faults = Arc::clone(&faults);
         let batcher_thread = std::thread::Builder::new()
             .name("batcher".into())
-            .spawn(move || batcher_loop(submit_rx, batch_tx, router, policy))?;
+            .spawn(move || batcher_loop(submit_rx, batch_tx, router, policy, b_metrics, b_faults))?;
         Ok(Server {
-            submit_tx: Some(submit_tx),
+            submit_tx: Mutex::new(Some(submit_tx)),
             batcher_thread: Some(batcher_thread),
             workers,
             router: config.router,
             metrics,
             next_id: AtomicU64::new(1),
+            capacity: config.capacity.max(1),
+            faults,
             flusher: Flusher::from_env(),
         })
     }
@@ -76,44 +111,97 @@ impl Server {
         &self.router
     }
 
-    /// Submit one sample; returns the channel the response arrives on.
+    /// Submit one sample with default lifecycle options (no deadline,
+    /// default retry budget); returns the channel the response arrives on.
     ///
     /// Fails with a typed [`ServeError`] — never panics — even when racing
     /// a concurrent shutdown: a closed submit channel is
     /// [`ServeError::ShutDown`], a contract violation is
-    /// [`ServeError::InvalidRequest`].
+    /// [`ServeError::InvalidRequest`], a full admission queue is
+    /// [`ServeError::Overloaded`].
     pub fn submit(
         &self,
         key: ModelKey,
         payload: Vec<f32>,
     ) -> Result<Receiver<Response>, ServeError> {
+        self.submit_with(key, payload, SubmitOptions::default())
+    }
+
+    /// Submit one sample with explicit deadline / retry options.
+    pub fn submit_with(
+        &self,
+        key: ModelKey,
+        payload: Vec<f32>,
+        options: SubmitOptions,
+    ) -> Result<Receiver<Response>, ServeError> {
         self.router
             .validate(&key, payload.len())
             .map_err(ServeError::InvalidRequest)?;
+        // Admission control: bound the undispatched queue. The check is
+        // advisory under races (two submits can both pass at capacity−1),
+        // which bounds the queue at capacity + submitter count — what
+        // load shedding needs, without serializing submitters.
+        let depth = self.metrics.queue_depth.get().max(0) as usize;
+        if depth >= self.capacity {
+            self.metrics.shed_overload.inc();
+            return Err(ServeError::Overloaded { queue_depth: depth });
+        }
         let (reply, rx) = mpsc::channel();
         let span = Span::start(self.next_id.fetch_add(1, Ordering::Relaxed));
+        let expires = options.deadline.map(|d| span.submitted + d);
         let req = Request {
             id: span.trace_id,
             key,
             payload,
             submitted: span.submitted,
             span,
+            expires,
+            retries: options.retries,
             reply,
         };
         self.metrics.submitted.inc();
-        match &self.submit_tx {
+        // Injected submit drop: the request vanishes between admission
+        // and the batcher, as a crashed transport would lose it. The
+        // caller still holds `rx`; dropping `req` (and its reply sender)
+        // resolves that receiver with a disconnect — a typed
+        // ChannelClosed at the call site, never a hang.
+        if self.faults.fires(FaultSite::SubmitDrop) {
+            drop(req);
+            return Ok(rx);
+        }
+        match &*lock_unpoisoned(&self.submit_tx) {
             Some(tx) => tx.send(req).map_err(|_| ServeError::ShutDown)?,
             None => return Err(ServeError::ShutDown),
         }
+        self.metrics.queue_depth.add(1);
         Ok(rx)
     }
 
     /// Submit and block for the response. A reply channel that closes
-    /// before a response arrives (batch dropped mid-shutdown) surfaces as
-    /// [`ServeError::ChannelClosed`] rather than a panic.
+    /// before a response arrives (batch dropped mid-shutdown, or an
+    /// injected submit drop) surfaces as [`ServeError::ChannelClosed`]
+    /// rather than a panic.
     pub fn submit_wait(&self, key: ModelKey, payload: Vec<f32>) -> Result<Response, ServeError> {
-        let rx = self.submit(key, payload)?;
+        self.submit_wait_with(key, payload, SubmitOptions::default())
+    }
+
+    /// [`Server::submit_wait`] with explicit lifecycle options.
+    pub fn submit_wait_with(
+        &self,
+        key: ModelKey,
+        payload: Vec<f32>,
+        options: SubmitOptions,
+    ) -> Result<Response, ServeError> {
+        let rx = self.submit_with(key, payload, options)?;
         rx.recv().map_err(|_| ServeError::ChannelClosed)
+    }
+
+    /// Stop accepting new submits from a shared reference (concurrent
+    /// submitters get [`ServeError::ShutDown`]); the pipeline keeps
+    /// draining already-admitted requests. [`Server::shutdown`] (or drop)
+    /// still joins the threads.
+    pub fn halt(&self) {
+        lock_unpoisoned(&self.submit_tx).take();
     }
 
     pub fn metrics(&self) -> MetricsSnapshot {
@@ -144,7 +232,8 @@ impl Server {
     }
 
     fn shutdown_inner(&mut self) {
-        self.submit_tx.take(); // closes submit channel -> batcher flushes + exits
+        // Closes the submit channel -> batcher flushes + exits.
+        lock_unpoisoned(&self.submit_tx).take();
         if let Some(t) = self.batcher_thread.take() {
             let _ = t.join();
         }
@@ -172,8 +261,21 @@ fn batcher_loop(
     batch_tx: Sender<super::batcher::Batch<Request>>,
     router: Router,
     policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+    faults: Arc<FaultPlan>,
 ) {
     let mut batcher: Batcher<Request> = Batcher::new(policy);
+    // Dispatch one closed batch to the worker pool: apply the injected
+    // close stall (a slow batcher, not a lost batch), then retire the
+    // members from the admission-queue depth — they are the workers'
+    // responsibility from here.
+    let dispatch = |batch: super::batcher::Batch<Request>| -> bool {
+        faults.sleep_if(FaultSite::CloseDelay);
+        let n = batch.items.len() as i64;
+        let sent = batch_tx.send(batch).is_ok();
+        metrics.queue_depth.sub(n);
+        sent
+    };
     loop {
         // Sleep until the earliest deadline (or indefinitely if idle).
         let recv = match batcher.next_deadline() {
@@ -198,20 +300,20 @@ fn batcher_loop(
             let key = req.key.clone();
             let _ = router; // router consulted at worker; batcher only sizes
             if let Some(batch) = batcher.push(key, req, now) {
-                if batch_tx.send(batch).is_err() {
+                if !dispatch(batch) {
                     break;
                 }
             }
         }
         for batch in batcher.poll_expired(now) {
-            if batch_tx.send(batch).is_err() {
+            if !dispatch(batch) {
                 return;
             }
         }
     }
     // Shutdown: flush whatever is queued.
     for batch in batcher.flush() {
-        let _ = batch_tx.send(batch);
+        let _ = dispatch(batch);
     }
 }
 
@@ -324,6 +426,90 @@ mod tests {
         assert_eq!(slow.len(), 1);
         assert_eq!(slow[0].trace_id, resp.id);
         s.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_sheds_with_typed_error() {
+        use super::super::request::SubmitOptions;
+        let s = start(4, 2);
+        let key = ModelKey::new("tanh", "cr");
+        // Deadline of zero: expired before the batch can close.
+        let resp = s
+            .submit_wait_with(key, vec![0.5; 8], SubmitOptions::with_deadline(Duration::ZERO))
+            .unwrap();
+        assert!(matches!(resp.result, Err(ServeError::DeadlineExceeded)));
+        assert_eq!(resp.span.fault, Some("deadline_shed"));
+        let m = s.shutdown();
+        assert_eq!(m.shed_deadline, 1);
+        assert_eq!(m.failed, 1);
+        assert_eq!(m.completed, 0);
+    }
+
+    #[test]
+    fn admission_control_sheds_overload() {
+        let router = test_router();
+        let mut cfg = ServerConfig::new(router.clone(), MockBackend::factory(router));
+        cfg.workers = 1;
+        // Nothing dispatches by itself: big batches, long deadline.
+        cfg.policy = BatchPolicy { max_batch: 64, max_wait: Duration::from_secs(30) };
+        cfg.capacity = 2;
+        let s = Server::start(cfg).unwrap();
+        let key = ModelKey::new("tanh", "cr");
+        let rx1 = s.submit(key.clone(), vec![0.1; 8]).unwrap();
+        // Give the batcher a moment to drain the submit channel; depth
+        // counts admitted-not-dispatched either way.
+        let rx2 = s.submit(key.clone(), vec![0.2; 8]).unwrap();
+        // Depth is now 2 >= capacity: the third submit sheds.
+        let err = s.submit(key.clone(), vec![0.3; 8]).unwrap_err();
+        assert!(matches!(err, ServeError::Overloaded { queue_depth: 2 }), "{err}");
+        let m = s.shutdown(); // flush delivers the two admitted requests
+        assert_eq!(m.shed_overload, 1);
+        assert_eq!(m.completed, 2);
+        assert!(rx1.recv().unwrap().result.is_ok());
+        assert!(rx2.recv().unwrap().result.is_ok());
+    }
+
+    #[test]
+    fn halt_rejects_new_submits_but_drains_admitted() {
+        let s = start(64, 10_000);
+        let key = ModelKey::new("tanh", "cr");
+        let rx = s.submit(key.clone(), vec![0.25; 8]).unwrap();
+        s.halt();
+        assert!(matches!(s.submit(key, vec![0.5; 8]), Err(ServeError::ShutDown)));
+        let m = s.shutdown();
+        assert_eq!(m.completed, 1);
+        assert!(rx.recv().unwrap().result.is_ok());
+    }
+
+    #[test]
+    fn worker_panics_are_contained_and_exhaust_retries() {
+        use crate::util::faults::FaultPlan;
+        let router = test_router();
+        let mut cfg = ServerConfig::new(router.clone(), MockBackend::factory(router));
+        cfg.workers = 1;
+        cfg.policy = BatchPolicy { max_batch: 1, max_wait: Duration::from_millis(1) };
+        // Every eval attempt panics: the batch burns its whole retry
+        // budget and fails typed; the worker thread itself survives.
+        cfg.faults = Some(Arc::new(FaultPlan::parse("eval_panic=1").unwrap()));
+        let s = Server::start(cfg).unwrap();
+        let key = ModelKey::new("tanh", "cr");
+        let resp = s.submit_wait(key.clone(), vec![0.5; 8]).unwrap();
+        match resp.result {
+            Err(ServeError::WorkerPanicked { attempts }) => {
+                assert_eq!(attempts, 1 + super::super::request::DEFAULT_RETRIES)
+            }
+            other => panic!("expected WorkerPanicked, got {other:?}"),
+        }
+        assert_eq!(resp.span.fault, Some("worker_panic"));
+        // The pool is still alive: a second request round-trips (and
+        // fails the same way, proving the worker survived the panics).
+        let resp2 = s.submit_wait(key, vec![0.5; 8]).unwrap();
+        assert!(resp2.result.is_err());
+        let m = s.shutdown();
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.failed, 2);
+        assert_eq!(m.worker_panics, 2 * (1 + super::super::request::DEFAULT_RETRIES) as u64);
+        assert_eq!(m.retries, 2 * super::super::request::DEFAULT_RETRIES as u64);
     }
 
     #[test]

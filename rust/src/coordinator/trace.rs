@@ -98,6 +98,9 @@ pub struct ReplayReport {
     /// [`ServeError::ChannelClosed`]): the server was gone, not the request
     /// wrong.
     pub submit_closed: usize,
+    /// Submits shed by admission control ([`ServeError::Overloaded`]):
+    /// the trace out-ran the server's configured capacity.
+    pub submit_shed: usize,
     pub e2e: Histogram,
     pub wall: Duration,
 }
@@ -120,6 +123,7 @@ pub fn replay(
     let mut pending: Vec<Receiver<Response>> = Vec::with_capacity(trace.len());
     let mut submit_rejected = 0usize;
     let mut submit_closed = 0usize;
+    let mut submit_shed = 0usize;
     for arrival in &trace.arrivals {
         // pace to the trace
         let target = start + arrival.at;
@@ -138,12 +142,15 @@ pub fn replay(
         match server.submit(arrival.key.clone(), payload_for(&arrival.key)) {
             Ok(rx) => pending.push(rx),
             Err(ServeError::InvalidRequest(_)) => submit_rejected += 1,
-            Err(ServeError::ShutDown) | Err(ServeError::ChannelClosed) => submit_closed += 1,
+            Err(ServeError::Overloaded { .. }) => submit_shed += 1,
+            // ShutDown / ChannelClosed, or any future submit-side error:
+            // the pipeline was gone, not the request wrong.
+            Err(_) => submit_closed += 1,
         }
     }
     let mut e2e = Histogram::new();
     let mut completed = 0usize;
-    let mut failed = submit_rejected + submit_closed;
+    let mut failed = submit_rejected + submit_closed + submit_shed;
     for rx in pending {
         match rx.recv() {
             Ok(resp) => {
@@ -163,6 +170,7 @@ pub fn replay(
         failed,
         submit_rejected,
         submit_closed,
+        submit_shed,
         e2e,
         wall: start.elapsed(),
     }
@@ -247,6 +255,7 @@ mod tests {
         assert_eq!(report.failed, 0);
         assert_eq!(report.submit_rejected, 0);
         assert_eq!(report.submit_closed, 0);
+        assert_eq!(report.submit_shed, 0);
         assert!(report.e2e.count() as usize == trace.len());
         server.shutdown();
     }
@@ -259,6 +268,7 @@ mod tests {
         let report = replay(&server, &bad, |_| vec![0.0; 4]);
         assert_eq!(report.submit_rejected, 3);
         assert_eq!(report.submit_closed, 0);
+        assert_eq!(report.submit_shed, 0);
         assert_eq!(report.failed, 3);
         assert_eq!(report.completed, 0);
         server.shutdown();

@@ -7,16 +7,30 @@
 //! [`BackendFactory`] because PJRT handles are not `Send`.
 
 use super::batcher::Batch;
+use super::error::ServeError;
 use super::metrics::Metrics;
 use super::request::{ModelKey, Request, Response};
 use super::router::Router;
 use crate::approx::TanhApprox;
 use crate::runtime::{Engine, Manifest};
 use crate::telemetry;
+use crate::util::faults::{self, FaultPlan, FaultSite};
+use crate::util::lock_unpoisoned;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc::Receiver;
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+/// Exponential backoff before re-running a batch whose worker panicked:
+/// `1ms · 2^(attempt-1)`, capped at [`MAX_BACKOFF`].
+fn backoff(attempt: u32) -> Duration {
+    let ms = 1u64 << (attempt.saturating_sub(1)).min(5);
+    Duration::from_millis(ms).min(MAX_BACKOFF)
+}
+
+/// Upper bound on the per-retry backoff sleep.
+const MAX_BACKOFF: Duration = Duration::from_millis(32);
 
 /// An inference engine a worker can drive.
 pub trait Backend {
@@ -97,15 +111,28 @@ pub struct MockBackend {
     pwl: crate::approx::Pwl,
     /// `serve_fused_total` — batches served by the fused fast path.
     fused_total: crate::telemetry::Counter,
+    /// `serve_kernel_downgrades_total` — batches where a fused-kernel
+    /// fault forced the fallback to the staged interpreter pipeline.
+    downgrades: crate::telemetry::Counter,
+    /// Fault plan driving the [`FaultSite::FusedPanic`] injection point.
+    faults: Arc<FaultPlan>,
 }
 
 impl MockBackend {
     pub fn new(router: Router) -> Self {
+        Self::with_faults(router, Arc::clone(faults::env_plan()))
+    }
+
+    /// A backend with an explicit fault plan (tests construct plans
+    /// directly instead of racing on `CRSPLINE_FAULTS`).
+    pub fn with_faults(router: Router, faults: Arc<FaultPlan>) -> Self {
         Self {
             router,
             cr: crate::approx::CatmullRom::paper_default(),
             pwl: crate::approx::Pwl::paper_default(),
             fused_total: telemetry::global().counter("serve_fused_total", &[]),
+            downgrades: telemetry::global().counter("serve_kernel_downgrades_total", &[]),
+            faults,
         }
     }
 
@@ -113,16 +140,42 @@ impl MockBackend {
         Arc::new(move || Ok(Box::new(MockBackend::new(router.clone())) as Box<dyn Backend>))
     }
 
+    /// A factory whose backends share the given fault plan.
+    pub fn factory_with_faults(router: Router, faults: Arc<FaultPlan>) -> BackendFactory {
+        Arc::new(move || {
+            Ok(Box::new(MockBackend::with_faults(router.clone(), Arc::clone(&faults)))
+                as Box<dyn Backend>)
+        })
+    }
+
     /// Bulk-evaluate `flat` through an approximation into `out`.
     /// Bit-identical to mapping `eval_f64` per element; counts the batch
-    /// as fused when it will run the single-pass kernel.
+    /// as fused when the single-pass kernel served it. A fault on the
+    /// fused path (injected via [`FaultSite::FusedPanic`], or a real
+    /// panic in the compiled kernel) degrades gracefully: the batch is
+    /// re-evaluated through the staged `KernelPlan` interpreter pipeline
+    /// — proven bit-identical to the fused path in
+    /// `tests/integration_fastpath.rs` — and the downgrade is counted.
     fn run_tanh(&self, approx: &dyn TanhApprox, flat: &[f32], out: &mut Vec<f32>) {
-        if crate::fixed::fused_enabled() && approx.compiled_kernel().is_some() {
-            self.fused_total.inc();
-        }
         out.clear();
         out.resize(flat.len(), 0.0);
-        approx.tanh_slice_f32(flat, out);
+        if crate::fixed::fused_enabled() && approx.compiled_kernel().is_some() {
+            let fused = catch_unwind(AssertUnwindSafe(|| {
+                self.faults.panic_if(FaultSite::FusedPanic);
+                approx.tanh_slice_f32(flat, out);
+            }));
+            match fused {
+                Ok(()) => {
+                    self.fused_total.inc();
+                    return;
+                }
+                // Degrade: fall through to the interpreter, which
+                // rewrites every output element, so a partially-written
+                // fused attempt leaves no residue.
+                Err(_) => self.downgrades.inc(),
+            }
+        }
+        approx.tanh_slice_f32_staged(flat, out);
     }
 }
 
@@ -169,6 +222,7 @@ pub fn spawn_workers(
     router: Router,
     factory: BackendFactory,
     metrics: Arc<Metrics>,
+    faults: Arc<FaultPlan>,
 ) -> Vec<JoinHandle<()>> {
     (0..n.max(1))
         .map(|i| {
@@ -176,6 +230,7 @@ pub fn spawn_workers(
             let router = router.clone();
             let factory = Arc::clone(&factory);
             let metrics = Arc::clone(&metrics);
+            let faults = Arc::clone(&faults);
             std::thread::Builder::new()
                 .name(format!("worker-{i}"))
                 .spawn(move || {
@@ -192,14 +247,13 @@ pub fn spawn_workers(
                             // the mutex; the receiver itself is still
                             // sound, so recover the guard instead of
                             // cascading the panic through the whole pool.
-                            let guard =
-                                rx.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+                            let guard = lock_unpoisoned(&rx);
                             match guard.recv() {
                                 Ok(b) => b,
                                 Err(_) => return, // channel closed: shutdown
                             }
                         };
-                        run_batch(&mut *backend, &router, batch, &metrics);
+                        run_batch_with(&mut *backend, &router, batch, &metrics, &faults);
                     }
                 })
                 .expect("spawn worker")
@@ -208,14 +262,66 @@ pub fn spawn_workers(
 }
 
 /// Execute one batch and fan responses back out (also used directly by
-/// the bench harness to measure without threads).
+/// the bench harness to measure without threads). Fault injection
+/// disabled; panic containment and retries still apply.
 pub fn run_batch(
     backend: &mut dyn Backend,
     router: &Router,
     batch: Batch<Request>,
     metrics: &Metrics,
 ) {
-    let Batch { key, items, oldest, closed } = batch;
+    run_batch_with(backend, router, batch, metrics, faults::disabled_plan());
+}
+
+/// Execute one batch to completion: shed expired members, contain
+/// panics, retry with exponential backoff up to the members' retry
+/// budget, and fan a response out to *every* member — a submitted
+/// request always resolves (output, typed error, or a closed reply
+/// channel at shutdown), never hangs.
+pub fn run_batch_with(
+    backend: &mut dyn Backend,
+    router: &Router,
+    mut batch: Batch<Request>,
+    metrics: &Metrics,
+    faults: &FaultPlan,
+) {
+    loop {
+        match try_batch(backend, router, batch, metrics, faults) {
+            None => return,
+            Some(retry) => {
+                // Retry in place (no re-queue: handing the batch back to
+                // the channel would require workers to hold a sender,
+                // keeping the channel open forever and wedging shutdown).
+                std::thread::sleep(backoff(retry.attempt));
+                batch = retry;
+            }
+        }
+    }
+}
+
+/// One execution attempt. Returns the batch back when a contained panic
+/// left retry budget, `None` when every member got its response.
+fn try_batch(
+    backend: &mut dyn Backend,
+    router: &Router,
+    mut batch: Batch<Request>,
+    metrics: &Metrics,
+    faults: &FaultPlan,
+) -> Option<Batch<Request>> {
+    // Deadline shed: drop expired members *before* evaluation — covers
+    // deadlines that lapsed in the queue, during a batcher stall, or
+    // while earlier panicked attempts backed off.
+    let now = Instant::now();
+    let closed_stamp = batch.closed;
+    for mut req in batch.shed(|r| r.expired(now)) {
+        metrics.shed_deadline.inc();
+        req.span.closed = Some(closed_stamp);
+        fail_request(req, ServeError::DeadlineExceeded, metrics, Some("deadline_shed"));
+    }
+    if batch.items.is_empty() {
+        return None;
+    }
+    let Batch { key, items, oldest, closed, attempt } = batch;
     let n = items.len();
     let exec_start = Instant::now();
     let family = router.family(&key);
@@ -226,7 +332,7 @@ pub fn run_batch(
     // executing a batch reuses capacity from earlier batches instead of
     // allocating — the eval path is allocation-free at steady state.
     let mut out_buf = crate::util::bufpool::f32s().take();
-    let result: Result<(), String> = match (family, bucket) {
+    let result: Result<(), ServeError> = match (family, bucket) {
         (Some(f), Some(bucket)) => {
             // Assemble the padded batch.
             let mut flat = crate::util::bufpool::f32s().take();
@@ -240,7 +346,14 @@ pub fn run_batch(
             // Time the backend call alone: exec also covers padding
             // assembly and fan-out, so eval isolates kernel throughput.
             let eval_start = Instant::now();
-            let r = backend.run(&key, bucket, &flat, &mut out_buf);
+            // Panic containment: a panicking backend (or an injected
+            // eval fault) must cost at most this batch — never the
+            // worker thread, never the process.
+            let run = catch_unwind(AssertUnwindSafe(|| {
+                faults.sleep_if(FaultSite::EvalDelay);
+                faults.panic_if(FaultSite::EvalPanic);
+                backend.run(&key, bucket, &flat, &mut out_buf)
+            }));
             let eval_end = Instant::now();
             let eval_time = eval_end.saturating_duration_since(eval_start);
             metrics.record_eval(eval_time);
@@ -259,10 +372,30 @@ pub fn run_batch(
                 )
                 .record_duration(eval_time);
             eval_window = Some((eval_start, eval_end));
-            r
+            match run {
+                Ok(r) => r.map_err(ServeError::Backend),
+                Err(_panic) => {
+                    metrics.worker_panics.inc();
+                    // The batch retries at the smallest budget among its
+                    // members (every member opted into at least that many).
+                    let budget = items.iter().map(|r| r.retries).min().unwrap_or(0);
+                    if attempt < budget {
+                        metrics.retries.inc();
+                        let mut retry =
+                            Batch { key, items, oldest, closed, attempt: attempt + 1 };
+                        for req in &mut retry.items {
+                            req.span.mark_fault("worker_panic");
+                        }
+                        return Some(retry);
+                    }
+                    Err(ServeError::WorkerPanicked { attempts: attempt + 1 })
+                }
+            }
         }
-        (None, _) => Err(format!("unknown model {key}")),
-        (_, None) => Err(format!("batch of {n} exceeds largest bucket for {key}")),
+        (None, _) => Err(ServeError::Backend(format!("unknown model {key}"))),
+        (_, None) => {
+            Err(ServeError::Backend(format!("batch of {n} exceeds largest bucket for {key}")))
+        }
     };
     let exec_time = exec_start.elapsed();
     metrics.record_exec(exec_time);
@@ -277,6 +410,9 @@ pub fn run_batch(
             Err(e) => Err(e.clone()),
         };
         let ok = item_result.is_ok();
+        if let Err(ServeError::WorkerPanicked { .. }) = &item_result {
+            req.span.mark_fault("worker_panic");
+        }
         // Seal the span: batch-level stamps apply to every member. Error
         // paths (no backend call) leave eval stamps unset; `finish` gives
         // those stages zero duration so the record stays complete.
@@ -309,4 +445,34 @@ pub fn run_batch(
             metrics.failed.inc();
         }
     }
+    None
+}
+
+/// Resolve one request with a typed failure outside batch execution
+/// (deadline shed, terminal retry exhaustion): seal and log its span,
+/// record the e2e latency, send the response, count the failure.
+pub(crate) fn fail_request(
+    mut req: Request,
+    err: ServeError,
+    metrics: &Metrics,
+    fault_tag: Option<&'static str>,
+) {
+    if let Some(tag) = fault_tag {
+        req.span.mark_fault(tag);
+    }
+    let record = req.span.finish(Instant::now());
+    let latency = record.e2e();
+    metrics.record_e2e(latency);
+    metrics.record_span(record);
+    let resp = Response {
+        id: req.id,
+        result: Err(err),
+        queue_time: Duration::ZERO,
+        latency,
+        batch_size: 0,
+        padded_to: 0,
+        span: record,
+    };
+    let _ = req.reply.send(resp);
+    metrics.failed.inc();
 }

@@ -21,6 +21,7 @@ use super::compiled::CompiledKernel;
 use super::kernel::KernelPlan;
 use super::QFormat;
 use crate::telemetry::{self, Counter};
+use crate::util::lock_unpoisoned;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
@@ -45,7 +46,9 @@ fn cache() -> &'static Mutex<HashMap<String, Arc<CompiledKernel>>> {
 /// — `Display`-formatted floats are not enough for e.g. RALUT's ε, use
 /// the bit pattern).
 pub fn get_or_compile(key: &str, build: impl FnOnce() -> CompiledKernel) -> Arc<CompiledKernel> {
-    let mut map = cache().lock().unwrap_or_else(|p| p.into_inner());
+    // Recover from poisoning: a worker panicking elsewhere (including
+    // injected chaos faults) must not wedge the kernel cache.
+    let mut map = lock_unpoisoned(cache());
     if let Some(k) = map.get(key) {
         hits_counter().inc();
         return Arc::clone(k);
@@ -127,7 +130,7 @@ pub fn misses() -> u64 {
 
 /// Distinct kernels currently cached.
 pub fn entries() -> usize {
-    cache().lock().map(|m| m.len()).unwrap_or(0)
+    lock_unpoisoned(cache()).len()
 }
 
 #[cfg(test)]

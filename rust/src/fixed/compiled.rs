@@ -651,12 +651,7 @@ pub fn fused_enabled() -> bool {
 /// (read once; 0 disables sharding), default [`DEFAULT_PAR_THRESHOLD`].
 pub fn par_threshold() -> usize {
     static T: OnceLock<usize> = OnceLock::new();
-    *T.get_or_init(|| {
-        std::env::var("CRSPLINE_PAR_THRESHOLD")
-            .ok()
-            .and_then(|s| s.trim().parse().ok())
-            .unwrap_or(DEFAULT_PAR_THRESHOLD)
-    })
+    *T.get_or_init(|| crate::util::env_parse("CRSPLINE_PAR_THRESHOLD", DEFAULT_PAR_THRESHOLD))
 }
 
 /// Collapse each CR segment's 4 taps into power-basis coefficients of

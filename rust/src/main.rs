@@ -15,13 +15,16 @@
 use crspline::analysis::{figures, tables};
 use crspline::approx::{self, TanhApprox};
 use crspline::coordinator::{
-    BatchPolicy, MockBackend, ModelKey, PjrtBackend, Router, Server, ServerConfig,
+    BatchPolicy, MockBackend, ModelKey, PjrtBackend, Router, Server, ServerConfig, SubmitOptions,
+    DEFAULT_CAPACITY, DEFAULT_RETRIES,
 };
 use crspline::hw::synth;
 use crspline::runtime::{artifacts, Manifest};
 use crspline::telemetry;
 use crspline::util::cli::{Args, Spec};
+use crspline::util::faults::{self, FaultPlan, INJECTED_PANIC_PREFIX};
 use crspline::util::rng::Rng;
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -191,6 +194,10 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         Spec::flag("mock", "use the pure-Rust mock backend (no artifacts needed)"),
         Spec::flag("stats", "print the full telemetry snapshot + slowest spans at shutdown"),
         Spec::opt("json", "write the final telemetry snapshot to this path as JSON lines"),
+        Spec::opt("deadline-ms", "per-request deadline in ms; lapsed requests are shed"),
+        Spec::opt("capacity", "admission-queue capacity before submits shed (default 8192)"),
+        Spec::opt("retries", "worker-panic retry budget per request (default 2)"),
+        Spec::opt("faults", "fault spec, e.g. eval_panic=0.01,seed=7 (overrides CRSPLINE_FAULTS)"),
     ];
     let args = Args::parse(argv, SPECS).map_err(|e| anyhow::anyhow!(e))?;
     let model = args.get_or("model", "tanh").to_string();
@@ -201,6 +208,24 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let max_batch = args.get_usize("max-batch", 32).map_err(|e| anyhow::anyhow!(e))?;
     let max_wait =
         Duration::from_micros(args.get_u64("max-wait-us", 2000).map_err(|e| anyhow::anyhow!(e))?);
+    let deadline = match args.get("deadline-ms") {
+        Some(_) => Some(Duration::from_millis(
+            args.get_u64("deadline-ms", 0).map_err(|e| anyhow::anyhow!(e))?,
+        )),
+        None => None,
+    };
+    let capacity =
+        args.get_usize("capacity", DEFAULT_CAPACITY).map_err(|e| anyhow::anyhow!(e))?;
+    let retries =
+        args.get_u64("retries", DEFAULT_RETRIES as u64).map_err(|e| anyhow::anyhow!(e))? as u32;
+    let plan: Arc<FaultPlan> = match args.get("faults") {
+        Some(spec) => Arc::new(FaultPlan::parse(spec).map_err(|e| anyhow::anyhow!(e))?),
+        None => Arc::clone(faults::env_plan()),
+    };
+    if plan.is_active() {
+        println!("fault injection: {plan}");
+        quiet_injected_panics();
+    }
 
     let dir = std::path::PathBuf::from(
         args.get("artifacts")
@@ -227,7 +252,9 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let mut cfg = ServerConfig::new(router, backend);
     cfg.workers = workers;
     cfg.policy = BatchPolicy { max_batch, max_wait };
-    let server = std::sync::Arc::new(Server::start(cfg)?);
+    cfg.capacity = capacity;
+    cfg.faults = Some(Arc::clone(&plan));
+    let server = Arc::new(Server::start(cfg)?);
     println!(
         "serving {key}: sample_in={} sample_out={} buckets={:?}",
         family.sample_in, family.sample_out, family.buckets
@@ -235,9 +262,13 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
 
     let t0 = std::time::Instant::now();
     let per_client = requests / clients;
+    let opts = SubmitOptions { deadline, retries };
+    // With chaos or deadlines in play, submit-side errors are expected
+    // outcomes; in a clean run they still indicate a real bug.
+    let tolerant = plan.is_active() || deadline.is_some();
     let handles: Vec<_> = (0..clients)
         .map(|c| {
-            let server = std::sync::Arc::clone(&server);
+            let server = Arc::clone(&server);
             let key = key.clone();
             let n_in = family.sample_in;
             std::thread::spawn(move || {
@@ -245,8 +276,20 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
                 for _ in 0..per_client {
                     let payload: Vec<f32> =
                         (0..n_in).map(|_| rng.f64_range(-4.0, 4.0) as f32).collect();
-                    let resp = server.submit_wait(key.clone(), payload).expect("submit");
-                    resp.output().expect("inference ok");
+                    // Under fault injection every outcome is expected:
+                    // success, a typed shed/retry error, or a dropped
+                    // reply channel. All are counted in the metrics the
+                    // summary prints; none should kill a client thread.
+                    match server.submit_wait_with(key.clone(), payload, opts) {
+                        Ok(resp) => {
+                            let _ = resp.output();
+                        }
+                        Err(e) => {
+                            if !tolerant {
+                                panic!("submit failed: {e}");
+                            }
+                        }
+                    }
                 }
             })
         })
@@ -255,7 +298,7 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         h.join().unwrap();
     }
     let elapsed = t0.elapsed();
-    let server = std::sync::Arc::try_unwrap(server).ok().expect("sole owner");
+    let server = Arc::try_unwrap(server).ok().expect("sole owner");
     let slowest = server.slowest_spans(5);
     let m = server.shutdown();
     println!("\n{m}");
@@ -280,6 +323,26 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         println!("wrote telemetry snapshot to {path}");
     }
     Ok(())
+}
+
+/// Silence the default panic banner for *injected* faults (their whole
+/// point is to be thrown and contained thousands of times per run); real
+/// panics still print through the previous hook.
+fn quiet_injected_panics() {
+    let prev = std::panic::take_hook();
+    std::panic::set_hook(Box::new(move |info| {
+        let injected = info
+            .payload()
+            .downcast_ref::<String>()
+            .map(|s| s.contains(INJECTED_PANIC_PREFIX))
+            .or_else(|| {
+                info.payload().downcast_ref::<&str>().map(|s| s.contains(INJECTED_PANIC_PREFIX))
+            })
+            .unwrap_or(false);
+        if !injected {
+            prev(info);
+        }
+    }));
 }
 
 /// Fallback manifest for `--mock` when artifacts have not been built.

@@ -161,10 +161,7 @@ impl Flusher {
                 let interval = interval.max(Duration::from_millis(10));
                 loop {
                     let stopped = {
-                        let guard = thread_shared
-                            .stop
-                            .lock()
-                            .unwrap_or_else(|p| p.into_inner());
+                        let guard = crate::util::lock_unpoisoned(&thread_shared.stop);
                         let (guard, _timeout) = thread_shared
                             .cond
                             .wait_timeout(guard, interval)
@@ -194,10 +191,7 @@ impl Flusher {
         if path.is_empty() {
             return None;
         }
-        let interval = std::env::var("CRSPLINE_METRICS_FLUSH_MS")
-            .ok()
-            .and_then(|s| s.trim().parse().ok())
-            .unwrap_or(DEFAULT_FLUSH_MS);
+        let interval = crate::util::env_parse("CRSPLINE_METRICS_FLUSH_MS", DEFAULT_FLUSH_MS);
         Some(Flusher::start(PathBuf::from(path), Duration::from_millis(interval)))
     }
 
@@ -209,7 +203,7 @@ impl Flusher {
     /// Signal the thread, wait for its final flush, and join it.
     pub fn stop(&mut self) {
         if let Some(handle) = self.handle.take() {
-            *self.shared.stop.lock().unwrap_or_else(|p| p.into_inner()) = true;
+            *crate::util::lock_unpoisoned(&self.shared.stop) = true;
             self.shared.cond.notify_all();
             let _ = handle.join();
         }

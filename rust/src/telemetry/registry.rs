@@ -8,6 +8,7 @@
 
 use super::hist::ShardedHistogram;
 use crate::util::hist::Histogram;
+use crate::util::lock_unpoisoned;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
@@ -167,7 +168,10 @@ impl Registry {
         project: impl Fn(&Metric) -> Option<T>,
     ) -> T {
         let id = (name.to_string(), owned_labels(labels));
-        let mut map = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+        // A thread that panics while registering (e.g. an injected worker
+        // fault during its first batch) must not wedge telemetry for the
+        // whole process.
+        let mut map = lock_unpoisoned(&self.metrics);
         let metric = map.entry(id).or_insert_with(make);
         match project(metric) {
             Some(handle) => handle,
@@ -220,7 +224,7 @@ impl Registry {
 
     /// Copy every metric's current value. Sorted by `(name, labels)`.
     pub fn snapshot(&self) -> Snapshot {
-        let map = self.metrics.lock().unwrap_or_else(|p| p.into_inner());
+        let map = lock_unpoisoned(&self.metrics);
         let entries = map
             .iter()
             .map(|((name, labels), metric)| MetricEntry {

@@ -18,6 +18,7 @@
 
 use crate::util::hist::fmt_ns;
 use crate::util::json::Json;
+use crate::util::lock_unpoisoned;
 use std::collections::VecDeque;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
@@ -39,6 +40,10 @@ pub struct Span {
     pub eval_start: Option<Instant>,
     /// `backend.run` returned.
     pub eval_end: Option<Instant>,
+    /// First fault that touched this request's lifecycle (worker panic,
+    /// deadline shed, kernel downgrade, ...). Static tags keep the span
+    /// `Copy`; later faults don't overwrite the first.
+    pub fault: Option<&'static str>,
 }
 
 impl Span {
@@ -58,7 +63,14 @@ impl Span {
             dequeued: None,
             eval_start: None,
             eval_end: None,
+            fault: None,
         }
+    }
+
+    /// Tag the span with a fault, keeping the earliest tag when several
+    /// faults hit the same request (the first is the root cause).
+    pub fn mark_fault(&mut self, tag: &'static str) {
+        self.fault.get_or_insert(tag);
     }
 
     /// Seal into a complete, monotone record: missing stages inherit the
@@ -80,6 +92,7 @@ impl Span {
             eval_start,
             eval_end,
             responded: responded.max(eval_end),
+            fault: self.fault,
         }
     }
 }
@@ -95,6 +108,8 @@ pub struct SpanRecord {
     pub eval_start: Instant,
     pub eval_end: Instant,
     pub responded: Instant,
+    /// First fault that touched this request, if any (see [`Span::fault`]).
+    pub fault: Option<&'static str>,
 }
 
 impl SpanRecord {
@@ -144,7 +159,7 @@ impl SpanRecord {
 
     /// One-line human dump (the slow-request format).
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "trace={} e2e={} queue={} batch_wait={} dispatch={} eval={} fanout={}",
             self.trace_id,
             fmt_ns(self.e2e().as_nanos() as u64),
@@ -153,13 +168,18 @@ impl SpanRecord {
             fmt_ns(self.dispatch().as_nanos() as u64),
             fmt_ns(self.eval().as_nanos() as u64),
             fmt_ns(self.fanout().as_nanos() as u64),
-        )
+        );
+        if let Some(tag) = self.fault {
+            line.push_str(" fault=");
+            line.push_str(tag);
+        }
+        line
     }
 
     /// JSON object with per-stage durations in nanoseconds (`Instant`s
     /// have no absolute meaning, so only durations are exported).
     pub fn to_json(&self) -> Json {
-        Json::obj(vec![
+        let mut fields = vec![
             ("trace_id", Json::num(self.trace_id as f64)),
             ("queue_ns", Json::num(self.queue().as_nanos() as f64)),
             ("batch_wait_ns", Json::num(self.batch_wait().as_nanos() as f64)),
@@ -167,7 +187,11 @@ impl SpanRecord {
             ("eval_ns", Json::num(self.eval().as_nanos() as f64)),
             ("fanout_ns", Json::num(self.fanout().as_nanos() as f64)),
             ("e2e_ns", Json::num(self.e2e().as_nanos() as f64)),
-        ])
+        ];
+        if let Some(tag) = self.fault {
+            fields.push(("fault", Json::str(tag.to_string())));
+        }
+        Json::obj(fields)
     }
 }
 
@@ -192,7 +216,7 @@ impl SpanLog {
     }
 
     pub fn record(&self, r: SpanRecord) {
-        let mut inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let mut inner = lock_unpoisoned(&self.inner);
         if inner.recent.len() == self.cap {
             inner.recent.pop_front();
         }
@@ -202,12 +226,12 @@ impl SpanLog {
 
     /// Total spans ever recorded (including evicted ones).
     pub fn recorded(&self) -> u64 {
-        self.inner.lock().unwrap_or_else(|p| p.into_inner()).recorded
+        lock_unpoisoned(&self.inner).recorded
     }
 
     /// The retained window, oldest first.
     pub fn recent(&self) -> Vec<SpanRecord> {
-        let inner = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        let inner = lock_unpoisoned(&self.inner);
         inner.recent.iter().copied().collect()
     }
 
@@ -280,6 +304,26 @@ mod tests {
         assert_eq!(slow.len(), 2);
         assert_eq!(slow[0].trace_id, 5);
         assert_eq!(slow[1].trace_id, 4);
+    }
+
+    #[test]
+    fn fault_tag_survives_finish_and_keeps_first() {
+        let mut span = Span::start(11);
+        assert!(span.fault.is_none());
+        span.mark_fault("worker_panic");
+        span.mark_fault("deadline_shed"); // later fault must not overwrite
+        let r = span.finish(Instant::now());
+        assert_eq!(r.fault, Some("worker_panic"));
+        assert!(r.summary().ends_with("fault=worker_panic"), "{}", r.summary());
+        assert_eq!(
+            r.to_json().get("fault").and_then(|j| j.as_str().map(String::from)),
+            Some("worker_panic".to_string())
+        );
+        // Fault-free spans don't mention faults at all.
+        let clean = Span::start(12).finish(Instant::now());
+        assert!(clean.fault.is_none());
+        assert!(!clean.summary().contains("fault="));
+        assert!(clean.to_json().get("fault").is_none());
     }
 
     #[test]

@@ -81,16 +81,13 @@ pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
     }
 }
 
-/// Config from env: number of cases and base seed.
+/// Config from env: number of cases and base seed. Malformed values warn
+/// once (via [`crate::util::env_parse`]) instead of silently running the
+/// defaults — a typo'd `CRSPLINE_PT_CASES` should not quietly shrink a
+/// property run.
 fn config() -> (u64, u64) {
-    let cases = std::env::var("CRSPLINE_PT_CASES")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(256);
-    let seed = std::env::var("CRSPLINE_PT_SEED")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(0x5EED_CA75_u64);
+    let cases = crate::util::env_parse("CRSPLINE_PT_CASES", 256u64);
+    let seed = crate::util::env_parse("CRSPLINE_PT_SEED", 0x5EED_CA75_u64);
     (cases, seed)
 }
 

@@ -21,6 +21,7 @@
 //! (misses).
 
 use crate::telemetry::{self, Counter, Gauge};
+use crate::util::{env_parse, lock_unpoisoned};
 use std::ops::{Deref, DerefMut};
 use std::sync::{Mutex, OnceLock};
 
@@ -33,12 +34,7 @@ pub const DEFAULT_POOL_CAP: usize = 64;
 /// 0 disables reuse entirely), default [`DEFAULT_POOL_CAP`].
 pub fn pool_cap() -> usize {
     static CAP: OnceLock<usize> = OnceLock::new();
-    *CAP.get_or_init(|| {
-        std::env::var("CRSPLINE_POOL_CAP")
-            .ok()
-            .and_then(|s| s.trim().parse().ok())
-            .unwrap_or(DEFAULT_POOL_CAP)
-    })
+    *CAP.get_or_init(|| env_parse("CRSPLINE_POOL_CAP", DEFAULT_POOL_CAP))
 }
 
 /// A thread-safe free list of `Vec<T>` buffers with telemetry counters.
@@ -64,7 +60,7 @@ impl<T: 'static> BufPool<T> {
     /// (its capacity is whatever its last user grew it to), a fresh empty
     /// `Vec` otherwise. The returned guard hands the buffer back on drop.
     pub fn take(&'static self) -> PooledBuf<T> {
-        let recycled = self.free.lock().unwrap_or_else(|p| p.into_inner()).pop();
+        let recycled = lock_unpoisoned(&self.free).pop();
         let buf = match recycled {
             Some(mut b) => {
                 b.clear();
@@ -82,14 +78,14 @@ impl<T: 'static> BufPool<T> {
 
     /// Free buffers currently retained (for tests and reporting).
     pub fn free_len(&self) -> usize {
-        self.free.lock().map(|f| f.len()).unwrap_or(0)
+        lock_unpoisoned(&self.free).len()
     }
 
     fn put_back(&self, buf: Vec<T>) {
         if buf.capacity() == 0 {
             return; // nothing worth retaining
         }
-        let mut free = self.free.lock().unwrap_or_else(|p| p.into_inner());
+        let mut free = lock_unpoisoned(&self.free);
         if free.len() < pool_cap() {
             free.push(buf);
             self.free_gauge.add(1);

@@ -1,0 +1,396 @@
+//! Seeded, deterministic fault injection for chaos testing the serving
+//! stack.
+//!
+//! A [`FaultPlan`] names a set of injection *sites* (submit drop, worker
+//! eval panic/delay, batch-close delay, fused-kernel panic) with a
+//! per-site probability, plus a seed. Decisions are drawn from a
+//! stateless hash of `(seed, site, draw_index)` — no shared RNG stream —
+//! so a chaos run is reproducible from its seed: the n-th draw at a
+//! given site always resolves the same way regardless of thread
+//! interleaving, and two runs with the same seed and the same per-site
+//! draw counts inject the same fault pattern.
+//!
+//! The plan is env-gated: `CRSPLINE_FAULTS` holds a comma-separated
+//! spec, e.g.
+//!
+//! ```text
+//! CRSPLINE_FAULTS=eval_panic=0.01,eval_delay_ms=5@0.02,submit_drop=0.005,seed=42
+//! ```
+//!
+//! Sites taking a value use `value@prob`; probability-only sites use
+//! `prob`. Tests and the `serve --faults` CLI construct plans directly
+//! through [`FaultPlan::parse`] instead of the environment, so parallel
+//! tests never race on env state.
+//!
+//! Every injected fault increments `faults_injected_total{site=...}` in
+//! the global telemetry registry, so a chaos run's telemetry snapshot
+//! records exactly how much chaos was actually delivered.
+
+use crate::telemetry::{self, Counter};
+use crate::util::rng::SplitMix64;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+use std::time::Duration;
+
+/// The environment variable holding the process-wide fault spec.
+pub const ENV_FAULTS: &str = "CRSPLINE_FAULTS";
+
+/// Prefix of every injected panic message, so panic hooks and worker
+/// error text can distinguish injected chaos from real bugs.
+pub const INJECTED_PANIC_PREFIX: &str = "injected fault:";
+
+const N_SITES: usize = 5;
+
+/// Where a fault can be injected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// `Server::submit` silently drops the request after admission — the
+    /// caller holds a reply channel that will never receive; its `recv`
+    /// resolves to a typed `ChannelClosed`, never a hang.
+    SubmitDrop = 0,
+    /// The worker panics instead of calling `Backend::run` — exercises
+    /// `catch_unwind` containment and the retry/backoff path.
+    EvalPanic = 1,
+    /// The worker sleeps before `Backend::run` — inflates eval latency,
+    /// exercises deadline shedding on retried batches.
+    EvalDelay = 2,
+    /// The batcher sleeps at batch close — simulates a stalled batcher,
+    /// exercises close-time deadline shedding.
+    CloseDelay = 3,
+    /// The fused compiled-kernel path panics mid-batch — exercises the
+    /// graceful downgrade to the `KernelPlan` interpreter.
+    FusedPanic = 4,
+}
+
+impl FaultSite {
+    /// All sites, in spec order.
+    pub const ALL: [FaultSite; N_SITES] = [
+        FaultSite::SubmitDrop,
+        FaultSite::EvalPanic,
+        FaultSite::EvalDelay,
+        FaultSite::CloseDelay,
+        FaultSite::FusedPanic,
+    ];
+
+    /// The spec key (and telemetry `site` label) for this site.
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::SubmitDrop => "submit_drop",
+            FaultSite::EvalPanic => "eval_panic",
+            FaultSite::EvalDelay => "eval_delay_ms",
+            FaultSite::CloseDelay => "close_delay_ms",
+            FaultSite::FusedPanic => "fused_panic",
+        }
+    }
+
+    /// Whether the spec for this site carries a `value@prob` payload
+    /// (a delay in milliseconds) rather than a bare probability.
+    fn takes_value(self) -> bool {
+        matches!(self, FaultSite::EvalDelay | FaultSite::CloseDelay)
+    }
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+struct SiteSpec {
+    prob: f64,
+    value_ms: u64,
+}
+
+/// A seeded fault-injection plan. Cheap to query when disabled (one
+/// branch per site); thread-safe (decision indices are atomic).
+pub struct FaultPlan {
+    seed: u64,
+    sites: [SiteSpec; N_SITES],
+    draws: [AtomicU64; N_SITES],
+    /// `faults_injected_total{site=...}` counters, present iff the plan
+    /// has at least one active site (disabled plans register nothing).
+    injected: Vec<Counter>,
+}
+
+impl FaultPlan {
+    /// A plan that never fires (the default when `CRSPLINE_FAULTS` is
+    /// unset).
+    pub fn disabled() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            sites: [SiteSpec::default(); N_SITES],
+            draws: Default::default(),
+            injected: Vec::new(),
+        }
+    }
+
+    /// Parse a spec like `eval_panic=0.01,eval_delay_ms=5@0.02,seed=42`.
+    /// Unknown keys, malformed probabilities, and probabilities outside
+    /// `[0, 1]` are errors — a chaos run with a typo'd plan silently
+    /// running fault-free would defeat the point.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut seed = 0xC4A0_5u64;
+        let mut sites = [SiteSpec::default(); N_SITES];
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, rhs) = part
+                .split_once('=')
+                .ok_or_else(|| format!("fault spec item '{part}' is not key=value"))?;
+            let (key, rhs) = (key.trim(), rhs.trim());
+            if key == "seed" {
+                seed = rhs
+                    .parse()
+                    .map_err(|_| format!("fault spec seed '{rhs}' is not a u64"))?;
+                continue;
+            }
+            let site = *FaultSite::ALL
+                .iter()
+                .find(|s| s.name() == key)
+                .ok_or_else(|| format!("unknown fault site '{key}'"))?;
+            let (value_ms, prob_s) = if site.takes_value() {
+                let (v, p) = rhs.split_once('@').ok_or_else(|| {
+                    format!("site '{key}' needs value@prob (e.g. {key}=5@0.02), got '{rhs}'")
+                })?;
+                let v = v
+                    .trim()
+                    .parse()
+                    .map_err(|_| format!("site '{key}' value '{v}' is not a u64"))?;
+                (v, p.trim())
+            } else {
+                (0, rhs)
+            };
+            let prob: f64 = prob_s
+                .parse()
+                .map_err(|_| format!("site '{key}' probability '{prob_s}' is not a float"))?;
+            if !(0.0..=1.0).contains(&prob) {
+                return Err(format!("site '{key}' probability {prob} outside [0, 1]"));
+            }
+            sites[site as usize] = SiteSpec { prob, value_ms };
+        }
+        let active = sites.iter().any(|s| s.prob > 0.0);
+        let injected = if active {
+            FaultSite::ALL
+                .iter()
+                .map(|s| {
+                    telemetry::global().counter("faults_injected_total", &[("site", s.name())])
+                })
+                .collect()
+        } else {
+            Vec::new()
+        };
+        Ok(FaultPlan { seed, sites, draws: Default::default(), injected })
+    }
+
+    /// Whether any site can ever fire.
+    pub fn is_active(&self) -> bool {
+        self.sites.iter().any(|s| s.prob > 0.0)
+    }
+
+    /// The seed decisions derive from.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Draw the next decision for `site`. Deterministic in
+    /// `(seed, site, draw index)`; counts the injection in telemetry
+    /// when it fires.
+    pub fn fires(&self, site: FaultSite) -> bool {
+        let i = site as usize;
+        let spec = self.sites[i];
+        if spec.prob <= 0.0 {
+            return false;
+        }
+        let n = self.draws[i].fetch_add(1, Ordering::Relaxed);
+        // Stateless per-(site, n) hash: SplitMix64's finalizer over a
+        // mix of seed, site salt, and draw index.
+        let mixed = self
+            .seed
+            .wrapping_add((i as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F))
+            .wrapping_add(n.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let u = SplitMix64::new(mixed).next_u64() >> 11; // 53 uniform bits
+        let hit = (u as f64) * (1.0 / (1u64 << 53) as f64) < spec.prob;
+        if hit {
+            if let Some(c) = self.injected.get(i) {
+                c.inc();
+            }
+        }
+        hit
+    }
+
+    /// The delay for `site` if its next decision fires.
+    pub fn delay(&self, site: FaultSite) -> Option<Duration> {
+        if self.fires(site) {
+            Some(Duration::from_millis(self.sites[site as usize].value_ms))
+        } else {
+            None
+        }
+    }
+
+    /// Sleep the site's configured delay if its next decision fires.
+    pub fn sleep_if(&self, site: FaultSite) {
+        if let Some(d) = self.delay(site) {
+            std::thread::sleep(d);
+        }
+    }
+
+    /// Panic (to be contained by the caller's `catch_unwind` layer) if
+    /// the site's next decision fires. The message carries
+    /// [`INJECTED_PANIC_PREFIX`] so hooks can silence injected chaos.
+    pub fn panic_if(&self, site: FaultSite) {
+        if self.fires(site) {
+            panic!("{INJECTED_PANIC_PREFIX} {}", site.name());
+        }
+    }
+
+    /// Total decisions drawn at `site` so far (for tests and reports).
+    pub fn draws(&self, site: FaultSite) -> u64 {
+        self.draws[site as usize].load(Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Display for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if !self.is_active() {
+            return write!(f, "disabled");
+        }
+        let mut first = true;
+        for site in FaultSite::ALL {
+            let s = self.sites[site as usize];
+            if s.prob <= 0.0 {
+                continue;
+            }
+            if !first {
+                write!(f, ",")?;
+            }
+            first = false;
+            if site.takes_value() {
+                write!(f, "{}={}@{}", site.name(), s.value_ms, s.prob)?;
+            } else {
+                write!(f, "{}={}", site.name(), s.prob)?;
+            }
+        }
+        write!(f, ",seed={}", self.seed)
+    }
+}
+
+/// The process-wide plan from `CRSPLINE_FAULTS` (read once). A malformed
+/// spec warns and disables injection rather than silently dropping part
+/// of the plan.
+pub fn env_plan() -> &'static Arc<FaultPlan> {
+    static PLAN: OnceLock<Arc<FaultPlan>> = OnceLock::new();
+    PLAN.get_or_init(|| match std::env::var(ENV_FAULTS) {
+        Err(_) => Arc::new(FaultPlan::disabled()),
+        Ok(spec) => match FaultPlan::parse(&spec) {
+            Ok(p) => Arc::new(p),
+            Err(e) => {
+                eprintln!("warning: {ENV_FAULTS}: {e}; fault injection disabled");
+                Arc::new(FaultPlan::disabled())
+            }
+        },
+    })
+}
+
+/// A shared always-disabled plan, for call sites that need a plan but
+/// inject nothing (benches, the plain `run_batch` entry point).
+pub fn disabled_plan() -> &'static Arc<FaultPlan> {
+    static PLAN: OnceLock<Arc<FaultPlan>> = OnceLock::new();
+    PLAN.get_or_init(|| Arc::new(FaultPlan::disabled()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_plan_never_fires() {
+        let p = FaultPlan::disabled();
+        assert!(!p.is_active());
+        for _ in 0..1000 {
+            assert!(!p.fires(FaultSite::EvalPanic));
+            assert!(p.delay(FaultSite::EvalDelay).is_none());
+        }
+        // Disabled sites do not even consume draw indices.
+        assert_eq!(p.draws(FaultSite::EvalPanic), 0);
+    }
+
+    #[test]
+    fn parse_full_spec_round_trips() {
+        let p = FaultPlan::parse(
+            "eval_panic=0.25,eval_delay_ms=5@0.5,submit_drop=0.1,close_delay_ms=2@0.125,\
+             fused_panic=0.0625,seed=42",
+        )
+        .unwrap();
+        assert!(p.is_active());
+        assert_eq!(p.seed(), 42);
+        let shown = p.to_string();
+        assert!(shown.contains("eval_panic=0.25"), "{shown}");
+        assert!(shown.contains("eval_delay_ms=5@0.5"), "{shown}");
+        assert!(shown.contains("seed=42"), "{shown}");
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(FaultPlan::parse("nonsense=0.5").is_err());
+        assert!(FaultPlan::parse("eval_panic").is_err());
+        assert!(FaultPlan::parse("eval_panic=1.5").is_err());
+        assert!(FaultPlan::parse("eval_delay_ms=0.5").is_err()); // needs value@prob
+        assert!(FaultPlan::parse("seed=notanumber").is_err());
+        // Empty and whitespace specs are valid no-op plans.
+        assert!(!FaultPlan::parse("").unwrap().is_active());
+        assert!(!FaultPlan::parse("  ").unwrap().is_active());
+    }
+
+    #[test]
+    fn decisions_are_deterministic_per_seed_and_draw_index() {
+        let spec = "eval_panic=0.3,seed=7";
+        let a = FaultPlan::parse(spec).unwrap();
+        let b = FaultPlan::parse(spec).unwrap();
+        let da: Vec<bool> = (0..256).map(|_| a.fires(FaultSite::EvalPanic)).collect();
+        let db: Vec<bool> = (0..256).map(|_| b.fires(FaultSite::EvalPanic)).collect();
+        assert_eq!(da, db);
+        // Not all the same value, and roughly the configured rate.
+        let hits = da.iter().filter(|&&h| h).count();
+        assert!((30..=130).contains(&hits), "hits={hits}");
+        // A different seed produces a different decision sequence.
+        let c = FaultPlan::parse("eval_panic=0.3,seed=8").unwrap();
+        let dc: Vec<bool> = (0..256).map(|_| c.fires(FaultSite::EvalPanic)).collect();
+        assert_ne!(da, dc);
+    }
+
+    #[test]
+    fn sites_draw_independently() {
+        let p = FaultPlan::parse("eval_panic=1.0,submit_drop=0.0,seed=1").unwrap();
+        assert!(p.fires(FaultSite::EvalPanic));
+        assert!(!p.fires(FaultSite::SubmitDrop));
+        assert_eq!(p.draws(FaultSite::EvalPanic), 1);
+        assert_eq!(p.draws(FaultSite::SubmitDrop), 0);
+    }
+
+    #[test]
+    fn delay_carries_configured_value() {
+        let p = FaultPlan::parse("eval_delay_ms=7@1.0,seed=3").unwrap();
+        assert_eq!(p.delay(FaultSite::EvalDelay), Some(Duration::from_millis(7)));
+    }
+
+    #[test]
+    #[should_panic(expected = "injected fault: eval_panic")]
+    fn panic_if_fires_with_marker_prefix() {
+        let p = FaultPlan::parse("eval_panic=1.0,seed=1").unwrap();
+        p.panic_if(FaultSite::EvalPanic);
+    }
+
+    #[test]
+    fn injections_are_counted_in_telemetry() {
+        let p = FaultPlan::parse("submit_drop=1.0,seed=9").unwrap();
+        let before = telemetry::global()
+            .snapshot()
+            .counter("faults_injected_total", &[("site", "submit_drop")])
+            .unwrap_or(0);
+        for _ in 0..5 {
+            assert!(p.fires(FaultSite::SubmitDrop));
+        }
+        let after = telemetry::global()
+            .snapshot()
+            .counter("faults_injected_total", &[("site", "submit_drop")])
+            .unwrap();
+        assert!(after >= before + 5, "before={before} after={after}");
+    }
+}

@@ -7,10 +7,62 @@
 
 pub mod bufpool;
 pub mod cli;
+pub mod faults;
 pub mod hist;
 pub mod json;
 pub mod pool;
 pub mod rng;
+
+use std::str::FromStr;
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+///
+/// Every shared structure in this crate guarded by a `Mutex` (kernel
+/// cache, telemetry registry, buffer pools, worker batch receiver) stays
+/// structurally sound even when a holder unwinds mid-critical-section —
+/// the worst case is a torn *logical* update (e.g. a cache entry that
+/// was being inserted), never a torn data structure, because updates
+/// complete before the lock drops. Poisoning would otherwise let a
+/// single injected worker panic wedge the cache and metrics for the
+/// whole process, which is exactly the cascade the fault-injection
+/// harness exists to rule out.
+pub fn lock_unpoisoned<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|poisoned| poisoned.into_inner())
+}
+
+/// Parse env var `name` as a `T`, falling back to `default` — loudly.
+///
+/// A malformed value warns once (per process, per variable) with the
+/// offending value and the default actually used, instead of the old
+/// silent `.parse().ok()` fallback that made typos indistinguishable
+/// from deliberate defaults. An unset variable is the normal case and
+/// stays silent.
+pub fn env_parse<T: FromStr + std::fmt::Display + Copy>(name: &str, default: T) -> T {
+    match std::env::var(name) {
+        Err(_) => default,
+        Ok(raw) => match raw.trim().parse() {
+            Ok(v) => v,
+            Err(_) => {
+                warn_once(name, &raw, &default.to_string());
+                default
+            }
+        },
+    }
+}
+
+/// One warning per (process, variable): repeated lookups of a bad value
+/// (e.g. a per-call parse in a hot path) don't spam stderr.
+fn warn_once(name: &str, raw: &str, default: &str) {
+    use std::sync::OnceLock;
+    static WARNED: OnceLock<Mutex<Vec<String>>> = OnceLock::new();
+    let warned = WARNED.get_or_init(|| Mutex::new(Vec::new()));
+    let mut seen = lock_unpoisoned(warned);
+    if !seen.iter().any(|n| n == name) {
+        seen.push(name.to_string());
+        eprintln!("warning: {name}={raw:?} is not a valid value; using default {default}");
+    }
+}
 
 /// Format a float with a fixed number of significant decimals, matching the
 /// paper's table formatting (6 fractional digits).
@@ -59,6 +111,36 @@ pub fn render_table(header: &[&str], rows: &[Vec<String>]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn lock_unpoisoned_recovers_after_holder_panics() {
+        use std::sync::Arc;
+        let m = Arc::new(Mutex::new(41));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.lock().is_err(), "mutex should be poisoned");
+        let mut g = lock_unpoisoned(&m);
+        *g += 1;
+        assert_eq!(*g, 42);
+    }
+
+    #[test]
+    fn env_parse_reads_valid_and_falls_back_on_invalid() {
+        std::env::set_var("CRSPLINE_TEST_ENV_PARSE_OK", "17");
+        assert_eq!(env_parse("CRSPLINE_TEST_ENV_PARSE_OK", 3usize), 17);
+        std::env::set_var("CRSPLINE_TEST_ENV_PARSE_BAD", "banana");
+        assert_eq!(env_parse("CRSPLINE_TEST_ENV_PARSE_BAD", 3usize), 3);
+        // Unset stays the default.
+        std::env::remove_var("CRSPLINE_TEST_ENV_PARSE_UNSET");
+        assert_eq!(env_parse("CRSPLINE_TEST_ENV_PARSE_UNSET", 5u64), 5);
+        // Whitespace is tolerated.
+        std::env::set_var("CRSPLINE_TEST_ENV_PARSE_WS", " 9 ");
+        assert_eq!(env_parse("CRSPLINE_TEST_ENV_PARSE_WS", 1u64), 9);
+    }
 
     #[test]
     fn render_table_aligns_columns() {

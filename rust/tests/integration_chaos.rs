@@ -1,0 +1,292 @@
+//! Chaos soak: the serving stack under seeded fault injection.
+//!
+//! The contract under test: **every submitted request resolves** — with
+//! an output, a typed `ServeError`, or a disconnected reply channel —
+//! never a hang; and every reply that is not shed or failed is
+//! bit-identical to the fault-free evaluation. Fault plans are passed
+//! explicitly through `ServerConfig::faults` (never the env var), so
+//! these tests are deterministic per seed and safe to run in parallel.
+
+use crspline::approx::TanhApprox;
+use crspline::coordinator::{
+    BatchPolicy, MockBackend, ModelKey, ServeError, Server, ServerConfig, SubmitOptions,
+};
+use crspline::runtime::Manifest;
+use crspline::telemetry;
+use crspline::util::faults::{FaultPlan, INJECTED_PANIC_PREFIX};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Suppress the default panic banner for injected faults (they fire by
+/// the hundreds in a soak); real panics still print. Installed once per
+/// test process.
+fn quiet_injected_panics() {
+    static ONCE: std::sync::Once = std::sync::Once::new();
+    ONCE.call_once(|| {
+        let prev = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<String>()
+                .map(|s| s.contains(INJECTED_PANIC_PREFIX))
+                .or_else(|| {
+                    info.payload()
+                        .downcast_ref::<&str>()
+                        .map(|s| s.contains(INJECTED_PANIC_PREFIX))
+                })
+                .unwrap_or(false);
+            if !injected {
+                prev(info);
+            }
+        }));
+    });
+}
+
+fn router() -> crspline::coordinator::Router {
+    let manifest = Manifest::parse(
+        r#"{
+        "version": 1,
+        "artifacts": [
+            {"name": "t1", "model": "tanh", "variant": "cr",
+             "path": "x", "batch": 1, "inputs": [[1, 4]], "outputs": [[1, 4]]},
+            {"name": "t8", "model": "tanh", "variant": "cr",
+             "path": "x", "batch": 8, "inputs": [[8, 4]], "outputs": [[8, 4]]}
+        ]}"#,
+        std::path::PathBuf::from("."),
+    )
+    .unwrap();
+    crspline::coordinator::Router::from_manifest(&manifest)
+}
+
+fn chaos_server(spec: &str, workers: usize, max_batch: usize, max_wait: Duration) -> Server {
+    let r = router();
+    let mut cfg = ServerConfig::new(r.clone(), MockBackend::factory(r));
+    cfg.workers = workers;
+    cfg.policy = BatchPolicy { max_batch, max_wait };
+    cfg.faults = Some(Arc::new(FaultPlan::parse(spec).expect("fault spec")));
+    Server::start(cfg).unwrap()
+}
+
+/// Telemetry `site` labels of every fault-injection site.
+const FAULT_SITES: [&str; 5] =
+    ["submit_drop", "eval_panic", "eval_delay_ms", "close_delay_ms", "fused_panic"];
+
+/// Deterministic payload for request `i`, spanning the tanh domain.
+fn payload(i: usize) -> Vec<f32> {
+    let x = (i % 161) as f32 * 0.05 - 4.0;
+    vec![x, -x, x * 0.5, x + 0.125]
+}
+
+/// Thousands of requests through panics, delays, and fused-kernel faults:
+/// every request resolves (no hangs), failures are typed, and every
+/// successful reply is bit-identical to the fault-free reference.
+#[test]
+fn chaos_soak_every_request_resolves_and_survivors_are_bit_identical() {
+    quiet_injected_panics();
+    const N: usize = 2000;
+    let server = chaos_server(
+        "eval_panic=0.05,eval_delay_ms=1@0.02,close_delay_ms=1@0.01,fused_panic=0.1,seed=4242",
+        3,
+        8,
+        Duration::from_micros(300),
+    );
+    let snap0 = telemetry::global().snapshot();
+    let injected0: u64 = FAULT_SITES
+        .into_iter()
+        .filter_map(|s| snap0.counter("faults_injected_total", &[("site", s)]))
+        .sum();
+
+    let key = ModelKey::new("tanh", "cr");
+    let cr = crspline::approx::CatmullRom::paper_default();
+    let rxs: Vec<_> = (0..N)
+        .map(|i| server.submit(key.clone(), payload(i)).expect("submit"))
+        .collect();
+
+    let (mut ok, mut failed) = (0usize, 0usize);
+    for (i, rx) in rxs.into_iter().enumerate() {
+        // The no-hang contract: every reply arrives well within the soak
+        // budget even through retries, backoff, and injected delays.
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|_| panic!("request {i} hung"));
+        match &resp.result {
+            Ok(out) => {
+                ok += 1;
+                // Bit-identical to the fault-free reference — including
+                // batches that degraded from the fused kernel to the
+                // staged interpreter mid-soak.
+                for (&x, &y) in payload(i).iter().zip(out.iter()) {
+                    assert_eq!(y, cr.eval_f64(x as f64) as f32, "req {i} x={x}");
+                }
+            }
+            // No deadline and no submit_drop in this plan: the only
+            // legal failure is a batch that burned its retry budget.
+            Err(ServeError::WorkerPanicked { attempts }) => {
+                failed += 1;
+                assert!(*attempts >= 1);
+                assert_eq!(resp.span.fault, Some("worker_panic"), "req {i}");
+            }
+            Err(other) => panic!("req {i}: unexpected error {other:?}"),
+        }
+    }
+    assert_eq!(ok + failed, N, "every request accounted for");
+
+    let m = server.shutdown();
+    assert_eq!(m.submitted, N as u64);
+    assert_eq!(m.completed, ok as u64);
+    assert_eq!(m.failed, failed as u64);
+    assert_eq!(m.shed_deadline, 0);
+    assert_eq!(m.shed_overload, 0);
+    // With eval_panic at 5% over ~hundreds of batches, containment and
+    // retry must actually have happened — otherwise the chaos plan was a
+    // no-op and this soak proves nothing.
+    assert!(m.worker_panics > 0, "no panics were injected");
+    assert!(m.retries > 0, "no batch was retried");
+    assert!(m.worker_panics >= m.retries);
+
+    // The telemetry snapshot records how much chaos was delivered.
+    let snap = telemetry::global().snapshot();
+    let injected: u64 = FAULT_SITES
+        .into_iter()
+        .filter_map(|s| snap.counter("faults_injected_total", &[("site", s)]))
+        .sum();
+    assert!(injected > injected0, "faults_injected_total never moved");
+}
+
+/// An injected submit drop loses the request in transit; the caller's
+/// reply channel disconnects — a typed error at the call site, no hang.
+#[test]
+fn submit_drop_resolves_as_channel_closed_not_a_hang() {
+    let server = chaos_server("submit_drop=1.0,seed=7", 1, 4, Duration::from_millis(1));
+    let key = ModelKey::new("tanh", "cr");
+    for i in 0..20 {
+        let err = server.submit_wait(key.clone(), payload(i)).unwrap_err();
+        assert_eq!(err, ServeError::ChannelClosed, "req {i}");
+    }
+    let m = server.shutdown();
+    assert_eq!(m.submitted, 20);
+    assert_eq!(m.completed, 0);
+    assert_eq!(m.failed, 0); // dropped requests never reached a worker
+}
+
+/// Requests stuck behind an injected worker stall are shed once their
+/// deadline lapses, instead of being evaluated pointlessly late.
+#[test]
+fn deadline_sheds_requests_stuck_behind_a_stalled_worker() {
+    quiet_injected_panics();
+    // Every batch eval stalls 100ms; one worker serializes the stalls.
+    let server = chaos_server("eval_delay_ms=100@1.0,seed=3", 1, 1, Duration::from_micros(100));
+    let key = ModelKey::new("tanh", "cr");
+    let opts = SubmitOptions::with_deadline(Duration::from_millis(20));
+    let rxs: Vec<_> = (0..3)
+        .map(|i| server.submit_with(key.clone(), payload(i), opts).expect("submit"))
+        .collect();
+    let mut shed = 0;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx
+            .recv_timeout(Duration::from_secs(30))
+            .unwrap_or_else(|_| panic!("request {i} hung"));
+        if matches!(resp.result, Err(ServeError::DeadlineExceeded)) {
+            shed += 1;
+            assert_eq!(resp.span.fault, Some("deadline_shed"));
+        }
+    }
+    // The first batch passes its shed check before the stall begins, so
+    // it completes; the ones queued behind the 100ms stalls cannot make
+    // a 20ms deadline.
+    assert!(shed >= 1, "no request was shed");
+    let m = server.shutdown();
+    assert_eq!(m.shed_deadline, shed as u64);
+    assert_eq!(m.completed + m.failed, 3);
+}
+
+/// A permanently faulting fused kernel degrades every batch to the
+/// staged interpreter — same bits out, downgrades counted, zero failures.
+#[test]
+fn fused_kernel_faults_degrade_gracefully_with_identical_results() {
+    quiet_injected_panics();
+    if !crspline::fixed::fused_enabled() {
+        eprintln!("SKIP fused degrade test: CRSPLINE_FUSED disabled");
+        return;
+    }
+    let snap0 = telemetry::global().snapshot();
+    let down0 = snap0.counter("serve_kernel_downgrades_total", &[]).unwrap_or(0);
+    let server = chaos_server("fused_panic=1.0,seed=11", 2, 8, Duration::from_micros(200));
+    let key = ModelKey::new("tanh", "cr");
+    let cr = crspline::approx::CatmullRom::paper_default();
+    for i in 0..64 {
+        let resp = server.submit_wait(key.clone(), payload(i)).unwrap();
+        let out = resp.output().unwrap_or_else(|e| panic!("req {i}: {e}"));
+        for (&x, &y) in payload(i).iter().zip(out.iter()) {
+            assert_eq!(y, cr.eval_f64(x as f64) as f32, "req {i} x={x}");
+        }
+    }
+    let m = server.shutdown();
+    assert_eq!(m.completed, 64);
+    assert_eq!(m.failed, 0);
+    let down = telemetry::global()
+        .snapshot()
+        .counter("serve_kernel_downgrades_total", &[])
+        .unwrap_or(0);
+    assert!(down > down0, "no downgrade was recorded");
+}
+
+/// Submit/halt race stress: submitters hammer the server while another
+/// thread closes the intake. Every submit resolves to Ok or a typed
+/// ShutDown; every accepted request still gets its response through the
+/// shutdown flush. (Regression companion: `Batcher::poll_expired` must
+/// never re-close an already-shed batch — covered at the unit level in
+/// `coordinator::batcher`.)
+#[test]
+fn halt_races_concurrent_submitters_without_hangs_or_panics() {
+    let r = router();
+    let mut cfg = ServerConfig::new(r.clone(), MockBackend::factory(r));
+    cfg.workers = 2;
+    cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_micros(200) };
+    let server = Arc::new(Server::start(cfg).unwrap());
+    let key = ModelKey::new("tanh", "cr");
+
+    let submitters: Vec<_> = (0..4)
+        .map(|t| {
+            let server = Arc::clone(&server);
+            let key = key.clone();
+            std::thread::spawn(move || {
+                let mut accepted = Vec::new();
+                let mut rejected = 0usize;
+                for i in 0..300 {
+                    match server.submit(key.clone(), payload(t * 300 + i)) {
+                        Ok(rx) => accepted.push(rx),
+                        Err(ServeError::ShutDown) => rejected += 1,
+                        Err(other) => panic!("unexpected submit error: {other:?}"),
+                    }
+                    if i % 64 == 0 {
+                        std::thread::yield_now();
+                    }
+                }
+                (accepted, rejected)
+            })
+        })
+        .collect();
+    // Let the race actually overlap the submit loops, then cut intake.
+    std::thread::sleep(Duration::from_millis(2));
+    server.halt();
+
+    let mut pending = Vec::new();
+    let mut rejected_total = 0usize;
+    for s in submitters {
+        let (accepted, rejected) = s.join().unwrap();
+        pending.extend(accepted);
+        rejected_total += rejected;
+    }
+    let m = Arc::try_unwrap(server).ok().expect("sole owner").shutdown();
+    // Accepted requests all resolve through the flush; nothing hangs.
+    let mut resolved = 0usize;
+    for rx in &pending {
+        let resp = rx.recv_timeout(Duration::from_secs(30)).expect("accepted request hung");
+        assert!(resp.result.is_ok());
+        resolved += 1;
+    }
+    assert_eq!(resolved + rejected_total, 4 * 300);
+    assert_eq!(m.completed, resolved as u64);
+    assert_eq!(m.failed, 0);
+}
